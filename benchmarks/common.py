@@ -1,0 +1,24 @@
+"""Shared benchmark geometry.
+
+The paper's exact acquisition (5.472 MB int16 RF per forward pass) is kept
+for the throughput normalization; the image grid / channel count / frame
+count are reduced so the full-CNN variant's dense operator fits a 1-core
+CPU stand-in (the paper ran an RTX 5090 / TPU v5e). `--paper` restores the
+exact published geometry (slow on CPU). Methodology is identical either
+way — same code, same metrics, same execution model.
+"""
+
+from __future__ import annotations
+
+from repro.core import UltrasoundConfig
+
+
+def bench_config(paper_scale: bool = False) -> UltrasoundConfig:
+    if paper_scale:
+        from repro.core import paper_config
+        return paper_config()
+    return UltrasoundConfig(
+        n_l=1336, n_c=32, n_f=8,
+        nz=48, nx=48,
+        sparse_block_p=32, sparse_block_s=32,
+    )

@@ -1,0 +1,55 @@
+"""Before/after roofline comparison: baseline vs optimized dry-run sweeps.
+
+  PYTHONPATH=src python -m benchmarks.compare_sweeps [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RES = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(name):
+    with open(os.path.join(RES, name)) as f:
+        return {(r["arch"], r["shape"], r["mesh"]): r for r in json.load(f)}
+
+
+def bound(r):
+    t = r["roofline"]
+    return max(t["t_compute"], t["t_memory"], t["t_collective"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--baseline", default="dryrun_baseline.json")
+    ap.add_argument("--optimized", default="dryrun_optimized.json")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    opt = load(args.optimized)
+    print("| arch | shape | bound before | bound after | speedup | "
+          "dom before -> after |")
+    print("|---|---|---|---|---|---|")
+    total_b = total_o = 0.0
+    for key in sorted(base):
+        if key[2] != args.mesh:
+            continue
+        rb, ro = base[key], opt.get(key)
+        if rb["status"] != "ok" or not ro or ro["status"] != "ok":
+            continue
+        tb, to = bound(rb), bound(ro)
+        total_b += tb
+        total_o += to
+        print(f"| {key[0]} | {key[1]} | {tb:9.3f}s | {to:9.3f}s | "
+              f"{tb / to:6.1f}x | {rb['dominant'][2:]} -> "
+              f"{ro['dominant'][2:]} |")
+    print(f"\nsum-of-bounds: {total_b:.1f}s -> {total_o:.1f}s "
+          f"({total_b / total_o:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Beyond-paper: the paper's V1/V2/V3 taxonomy at LM scale.
+
+Lowers granite-moe-3b train_4k (1M tokens/step, 256 chips) once per MoE
+dispatch variant and reports the roofline terms + gather census — the
+LM-scale analogue of the paper's Table II (results table in
+EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m benchmarks.moe_variants_dryrun
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+from repro.core.config import Variant
+from repro.launch import cells as cells_lib
+from repro.launch import hlo_cost
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, ICI_BW
+from repro.launch.mesh import make_production_mesh
+
+GATHER_RATE = 0.7e9  # elem/s, calibrated in benchmarks/table2_portability
+
+
+def main():
+    mesh = make_production_mesh()
+    print(f"{'variant':10s} {'t_comp':>8s} {'t_mem':>9s} {'t_coll':>9s} "
+          f"{'t_gather':>9s} {'gather_elems':>13s}")
+    for v in [Variant.DYNAMIC, Variant.CNN, Variant.SPARSE]:
+        cell = cells_lib.build_cell(
+            "granite-moe-3b-a800m", "train_4k", mesh,
+            overrides={"moe_variant": v})
+        compiled = cells_lib.lower_cell(cell, mesh).compile()
+        c = hlo_cost.analyze(compiled.as_text())
+        print(f"{v.value:10s} {c.flops / PEAK_FLOPS:8.2f} "
+              f"{c.bytes_min / HBM_BW:9.2f} {c.coll_bytes / ICI_BW:9.2f} "
+              f"{c.gather_elems / GATHER_RATE:9.2f} {c.gather_elems:13.3g}")
+
+
+if __name__ == "__main__":
+    main()

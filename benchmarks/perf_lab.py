@@ -1,0 +1,110 @@
+"""Perf lab: per-instruction cost attribution for a dry-run cell.
+
+The hillclimb loop's "profiler": compiles one (arch x shape x mesh) cell,
+runs the loop-aware cost model, and prints the top instructions by
+collective bytes / HBM bytes / FLOPs — each with its JAX-level op_name
+metadata so the line of Python responsible is identifiable.
+
+  PYTHONPATH=src python -m benchmarks.perf_lab --arch qwen3-8b \
+      --shape decode_32k --top 15 --by collective
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import re
+
+from repro.launch import cells as cells_lib
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+
+_METADATA_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def attribute(text: str):
+    comps = hlo_cost.parse_module(text)
+    entry = next(c for c in comps.values() if c.is_entry)
+
+    # effective execution multiplier per computation
+    mult = {entry.name: 1.0}
+    order = [entry.name]
+    seen = {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for inst in comp.insts:
+            scale = float(inst.trip) if inst.op == "while" else 1.0
+            for child in inst.called:
+                mult[child] = mult.get(child, 0.0) + mult[cname] * scale
+                if child not in seen:
+                    seen.add(child)
+                    order.append(child)
+
+    fusion_names = {c.name for c in comps.values()
+                    if "fused" in c.name or "wrapped" in c.name}
+    rows = []
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        in_fusion = cname in fusion_names
+        for inst in comp.insts:
+            c = hlo_cost._local_cost(inst, comp, in_fusion)
+            meta = _METADATA_RE.search(inst.rest)
+            rows.append({
+                "coll": c.coll_bytes * m,
+                "bytes": c.bytes_min * m,
+                "flops": c.flops * m,
+                "op": inst.op,
+                "comp": cname,
+                "name": inst.name,
+                "where": meta.group(1) if meta else "",
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--by", default="collective",
+                    choices=["collective", "bytes", "flops"])
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dump", default=None, help="save HLO text here")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cell = cells_lib.build_cell(args.arch, args.shape, mesh)
+    compiled = cells_lib.lower_cell(cell, mesh).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+
+    total = hlo_cost.analyze(text)
+    print(f"totals/device: flops={total.flops:.3e} "
+          f"bytes_min={total.bytes_min:.3e} coll={total.coll_bytes:.3e}")
+    print(f"collective breakdown: "
+          + " ".join(f"{k}={v:.3e}" for k, v in total.coll.items()
+                     if v))
+    key = {"collective": "coll", "bytes": "bytes", "flops": "flops"}[
+        args.by]
+    rows = sorted(attribute(text), key=lambda r: -r[key])[: args.top]
+    print(f"\ntop {args.top} by {args.by}:")
+    for r in rows:
+        if r[key] <= 0:
+            break
+        print(f"  {r[key]:.3e}  {r['op']:22s} {r['name'][:36]:36s} "
+              f"{r['where'][:90]}")
+
+
+if __name__ == "__main__":
+    main()

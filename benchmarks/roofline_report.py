@@ -1,0 +1,121 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+records in benchmarks/results/dryrun.json.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant term,
+MODEL_FLOPS, the useful-compute ratio, per-device memory, and a one-line
+"what would move the dominant term" note (from the knowledge base below).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "dryrun_optimized.json")
+
+# what would move the dominant term down, per (dominant, kind)
+ADVICE = {
+    ("t_collective", "train"): ("sequence-parallel reduce-scatter instead "
+                                "of TP all-reduce; overlap grads with bwd; "
+                                "int8 grad compression on the DCN axis"),
+    ("t_collective", "prefill"): ("shard KV heads instead of gathering; "
+                                  "fuse TP collectives into matmuls"),
+    ("t_collective", "decode"): ("keep logits sharded (argmax locally, "
+                                 "psum the winner) — avoid the vocab "
+                                 "all-gather; batch decode steps"),
+    ("t_memory", "train"): ("save-dots remat policy (skip recompute of "
+                            "cheap elementwise); bf16 activations; bigger "
+                            "microbatch per device"),
+    ("t_memory", "prefill"): ("flash attention keeps scores in VMEM; "
+                              "fused block softmax"),
+    ("t_memory", "decode"): ("bf16/int8 KV cache; grouped-query heads "
+                             "amortize cache reads"),
+    ("t_compute", "train"): ("already compute-bound — raise MFU via larger "
+                             "per-chip batch or reduced remat"),
+    ("t_compute", "prefill"): ("compute-bound prefill is the goal state"),
+    ("t_compute", "decode"): ("compute-bound decode: batch is large "
+                              "enough; consider speculative decoding"),
+}
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill"}.get(
+        shape, "decode")
+
+
+def load(path: str = RESULTS) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.1f}us"
+
+
+def render(records: List[Dict], mesh: str = "single") -> str:
+    rows = []
+    header = (f"| arch | shape | t_compute | t_memory | t_collective | "
+              f"dominant | MFU-bound | useful | note |")
+    sep = "|" + "---|" * 9
+    rows.append(header)
+    rows.append(sep)
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped | — | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR | — | — | {r['error'][:60]} |")
+            continue
+        t = r["roofline"]
+        total = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        mfu_bound = t["t_compute"] / total if total else 0.0
+        note = ADVICE.get((r["dominant"], kind_of(r["shape"])), "")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute'])} | "
+            f"{fmt_s(t['t_memory'])} | {fmt_s(t['t_collective'])} | "
+            f"{r['dominant'][2:]} | {mfu_bound:.3f} | "
+            f"{r['useful_ratio']:.2f} | {note[:70]} |")
+    return "\n".join(rows)
+
+
+def memory_table(records: List[Dict], mesh: str = "single") -> str:
+    rows = ["| arch | shape | args GB/dev | temps GB/dev | fits v5e 16GB? |",
+            "|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        m = r["memory"]
+        args_gb = m["argument_bytes"] / 1e9
+        temp_gb = m["temp_bytes"] / 1e9
+        fits = "yes" if (args_gb + temp_gb) < 16 else "NO"
+        rows.append(f"| {r['arch']} | {r['shape']} | {args_gb:.2f} | "
+                    f"{temp_gb:.2f} | {fits} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    ap.add_argument("--memory", action="store_true")
+    args = ap.parse_args()
+    recs = load()
+    print(render(recs, args.mesh))
+    if args.memory:
+        print()
+        print(memory_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark entry point — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  table1_* : Table I  — variants x modalities, end-to-end (CPU stand-in)
+  table2_* : Table II — portability (CPU measured + TPU predicted)
+  table3_* : Table III — throughput context vs prior work
+  lm_*     : zoo throughput smoke (tokens/s on reduced configs)
+
+``python -m benchmarks.run [--paper] [--fast]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _lm_smoke_bench(runs: int = 3):
+    """Reduced-config train-step timing for three representative archs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import TrainConfig, get_smoke
+    from repro.data.tokens import TokenDataset
+    from repro.models import get_model
+    from repro.train import steps as steps_lib
+
+    lines = []
+    for arch in ["qwen3-8b", "granite-moe-3b-a800m", "mamba2-130m"]:
+        cfg = get_smoke(arch)
+        model = get_model(cfg)
+        tcfg = TrainConfig()
+        state = steps_lib.init_train_state(model, jax.random.PRNGKey(0))
+        step = jax.jit(steps_lib.make_train_step(model, tcfg))
+        data = TokenDataset(cfg, 4, 128)
+        batch = jax.tree.map(jnp.asarray, data.batch_for_step(0))
+        state, _ = step(state, batch)  # warmup/compile
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(runs):
+            state, metrics = step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+        t = (time.perf_counter() - t0) / runs
+        tok_s = 4 * 128 / t
+        lines.append(f"lm_train/{arch},{t * 1e6:.1f},tok_per_s={tok_s:.0f}")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="exact paper geometry (slow on CPU)")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer timed runs")
+    args = ap.parse_args()
+    runs = 2 if args.fast else 5
+
+    from benchmarks import table1_variants, table2_portability, \
+        table3_comparison
+
+    print("name,us_per_call,derived")
+    t1 = table1_variants.run(paper_scale=args.paper, runs=runs)
+    for r in t1:
+        print(r.csv())
+        sys.stdout.flush()
+    for line in table2_portability.run(paper_scale=args.paper,
+                                       runs=max(runs - 2, 2)):
+        print(line)
+        sys.stdout.flush()
+    for line in table3_comparison.run(t1):
+        print(line)
+    for line in _lm_smoke_bench():
+        print(line)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table I: all three implementation variants x all three modalities.
+
+End-to-end RF-to-image timing (every stage inside one forward pass),
+reporting T_avg, FPS, MB/s, modeled J/run, peak memory — the paper's exact
+column set. CPU stand-in for the RTX 5090 rows; relative variant structure
+(dynamic fastest on gather-friendly hardware, CNN heavier but portable,
+sparse in between with higher memory) is the validated claim.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.bench import BenchResult, bench_callable
+from repro.core import (Modality, UltrasoundPipeline, Variant)
+from repro.data import synth_rf
+
+from benchmarks.common import bench_config
+
+
+MODALITIES = [Modality.DOPPLER, Modality.POWER_DOPPLER, Modality.BMODE]
+VARIANTS = [Variant.DYNAMIC, Variant.CNN, Variant.SPARSE]
+
+
+def run(paper_scale: bool = False, runs: int = 5) -> List[BenchResult]:
+    base = bench_config(paper_scale)
+    rf = jnp.asarray(synth_rf(base, seed=0))
+    results = []
+    for variant in VARIANTS:
+        for modality in MODALITIES:
+            cfg = base.with_(variant=variant, modality=modality)
+            pipe = UltrasoundPipeline(cfg)     # init excluded from timing
+            res = bench_callable(
+                f"table1/{cfg.name}/{variant.value}",
+                None, (pipe.consts, rf),
+                input_bytes=cfg.input_bytes, runs=runs,
+                jitted=pipe._fn)
+            results.append(res)
+    return results
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,78 @@
+"""Paper Table II: GPU-vs-TPU portability of the variants.
+
+No TPU exists in this container, so the TPU half is *predicted* from the
+lowered HLO of each variant with a three-term device model:
+
+    T_tpu = max( flops / 197e12 ,  bytes_min / 819e9 ,  gathers / G )
+
+where G ~ 1e9 gathered elements/s models the TPU's scalar/irregular-access
+path. G is calibrated once against the paper's own Table II (dynamic
+variant: 1.3e8 gathered elements per pass / 0.181 s ≈ 0.7e9 elem/s) and
+then applied uniformly — the *prediction* is the CNN:dynamic ratio, which
+the paper measured as ~17x. The CNN variant executes zero gather ops (all
+dots), so its prediction comes from the MXU/HBM terms alone.
+
+Also reports measured CPU wall-clock (the gather-friendly stand-in, like
+the paper's GPU rows) for the same code.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench import BenchResult, bench_callable
+from repro.core import Modality, UltrasoundPipeline, Variant
+from repro.data import synth_rf
+from repro.launch import hlo_cost
+
+from benchmarks.common import bench_config
+
+GATHER_RATE = 0.7e9       # elements/s — calibrated vs paper Table II
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def predicted_tpu_time(pipe: UltrasoundPipeline, rf) -> dict:
+    compiled = pipe._fn.lower(pipe.consts, rf).compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    t_gather = cost.gather_elems / GATHER_RATE
+    t = max(cost.flops / PEAK_FLOPS, cost.bytes_min / HBM_BW, t_gather)
+    return {
+        "t_pred_s": t,
+        "t_gather_s": t_gather,
+        "gather_elems": cost.gather_elems,
+        "flops": cost.flops,
+        "bytes_min": cost.bytes_min,
+    }
+
+
+def run(paper_scale: bool = False, runs: int = 3) -> List[str]:
+    base = bench_config(paper_scale)
+    rf = jnp.asarray(synth_rf(base, seed=0))
+    lines = []
+    for variant in [Variant.DYNAMIC, Variant.CNN]:
+        for modality in [Modality.DOPPLER, Modality.POWER_DOPPLER,
+                         Modality.BMODE]:
+            cfg = base.with_(variant=variant, modality=modality)
+            pipe = UltrasoundPipeline(cfg)
+            cpu = bench_callable(
+                f"table2/{cfg.name}/{variant.value}/cpu",
+                None, (pipe.consts, rf),
+                input_bytes=cfg.input_bytes, runs=runs, jitted=pipe._fn)
+            pred = predicted_tpu_time(pipe, rf)
+            mbps_tpu = cfg.input_bytes / (pred["t_pred_s"] * 1e6)
+            lines.append(
+                f"table2/{cfg.name}/{variant.value},"
+                f"{cpu.t_avg_s * 1e6:.1f},"
+                f"cpu_mbps={cpu.mbps:.2f};tpu_pred_mbps={mbps_tpu:.1f};"
+                f"gather_elems={pred['gather_elems']:.3g};"
+                f"tpu_pred_fps={1.0 / pred['t_pred_s']:.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,35 @@
+"""Paper Table III: throughput context vs prior deterministic pipelines.
+
+Reference rows are the paper's own citations (fixed literature values);
+our rows come from Table I (measured CPU stand-in) and Table II's modeled
+TPU prediction, normalized to GB/s of RF input.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+REFERENCES = [
+    ("paper/RTX5090-doppler-dynamic", 7.2),       # GB/s, Table III
+    ("paper/TPUv5e-doppler-fullcnn", 0.53),
+    ("yiu2018/dual-GTX480-planewave", 1.5),       # 1-2 GB/s midpoint
+    ("rossi2023/jetson-xavier-vector-doppler", 7.5),
+    ("liu2023/rtx4090-3d-rowcol (compressed)", 2.3),
+]
+
+
+def run(our_results=None) -> List[str]:
+    lines = []
+    for name, gbps in REFERENCES:
+        lines.append(f"table3/{name},0.0,ref_gbps={gbps}")
+    if our_results:
+        for r in our_results:
+            lines.append(
+                f"table3/this-work/{r.name.split('/', 1)[1]},"
+                f"{r.t_avg_s * 1e6:.1f},gbps={r.mbps / 1000.0:.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,48 @@
+"""Doppler validation: estimate a known flow velocity from synthetic RF.
+
+Scatterers move axially at a programmed velocity; the Kasai autocorrelator
+in the Color-Doppler pipeline must recover it (sign and magnitude), and
+all three implementation variants must agree — the paper's determinism
+claim, demonstrated on physics rather than random tensors.
+
+  PYTHONPATH=src python examples/doppler_flow.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import Modality, UltrasoundPipeline, Variant, tiny_config
+from repro.data.rf_data import synth_rf
+
+
+def main():
+    cfg0 = tiny_config(n_f=24, nz=32, nx=16, modality=Modality.DOPPLER)
+    lam = cfg0.c_sound / cfg0.f0
+
+    # programmed axial displacement per frame, in wavelengths
+    for flow in [0.05, 0.12, -0.08]:
+        rf = synth_rf(cfg0, seed=11, n_scatter=16, flow_fraction=1.0,
+                      flow_speed=flow)
+        # ground truth Nyquist-normalized velocity: the two-way path grows
+        # by 2*dz per frame, so the residual IQ phase per frame is
+        # -4*pi*f0*(dz/c) * ... = -4*pi*flow (dz = flow*lambda); vn =
+        # phase/pi = -4*flow. Sign convention: positive = toward probe.
+        expected = -4.0 * flow
+        est = {}
+        for v in Variant:
+            img = np.asarray(UltrasoundPipeline(
+                cfg0.with_(variant=v))(jnp.asarray(rf)))
+            # velocity where signal exists (central region)
+            est[v.value] = float(np.median(img[8:24, 4:12]))
+        line = "  ".join(f"{k}={val:+.3f}" for k, val in est.items())
+        print(f"flow={flow:+.2f} lam/frame  expected_vn={expected:+.3f}  "
+              f"estimated: {line}")
+        for val in est.values():
+            assert abs(val - expected) < 0.15, (flow, est)
+    print("Kasai velocity estimates match programmed flow for all "
+          "variants.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.bench.harness import BenchResult, bench_callable  # noqa: F401

@@ -1,0 +1,132 @@
+"""Checkpointing: atomic, async, elastic-restore.
+
+Layout:
+  <dir>/step_000123.npz.tmp -> fsync -> rename to step_000123.npz  (atomic)
+  <dir>/MANIFEST.json        latest committed step + tree metadata
+
+Properties needed at cluster scale, reproduced here:
+  * atomicity — a preempted save never corrupts the latest checkpoint
+    (write-to-temp + rename; the manifest is updated only after commit).
+  * async — `AsyncCheckpointer` snapshots to host memory on-thread
+    (device_get), then serializes on a background thread so the train loop
+    never stalls on disk.
+  * elastic restore — arrays are stored with full logical shapes; `restore`
+    re-places them under *any* sharding (different mesh shape / device
+    count), enabling restart on a resized slice.
+
+Production note: for multi-host models that exceed host RAM, swap the npz
+backend for tensorstore/OCDBT per-shard writes; the interface (save /
+restore / latest_step) is the stable contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or str(arr.dtype) in (
+                "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # npz can't round-trip ml_dtypes; widen for storage, restore
+            # narrows back to the template dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Atomic synchronous save. Returns the committed path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+    manifest = {"latest_step": step, "time": time.time(),
+                "n_arrays": len(flat)}
+    mtmp = os.path.join(ckpt_dir, "MANIFEST.json.tmp")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.rename(mtmp, os.path.join(ckpt_dir, "MANIFEST.json"))
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    mpath = os.path.join(ckpt_dir, "MANIFEST.json")
+    if not os.path.exists(mpath):
+        return None
+    with open(mpath) as f:
+        return int(json.load(f)["latest_step"])
+
+
+def restore(ckpt_dir: str, step: int, template,
+            shardings=None):
+    """Load step; re-place under `shardings` (elastic) if given."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Snapshot on-call, serialize on a daemon thread (non-blocking)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree) -> None:
+        self.wait()  # at most one in-flight save
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                                 tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,35 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256. [arXiv:2407.21783]
+
+The scale outlier: parameters alone are ~810 GB in bf16. Training this cell
+requires FSDP (params + optimizer state sharded over data x model); see
+ParallelConfig.fsdp in the launcher and EXPERIMENTS.md for the memory
+analysis at 256 / 512 chips.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b",
+        family="dense",
+        n_layers=126,
+        d_model=16384,
+        n_heads=128,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=53248,
+        vocab_size=128256,
+        rope_theta=5e5,
+        # save matmul outputs in remat: -18% train FLOPs, -11% collectives
+        # for ~1.8x live-activation memory (§Perf iteration log)
+        remat_policy="dots",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().with_(
+        n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+        d_ff=192, vocab_size=256, param_dtype="float32",
+        compute_dtype="float32", remat=False)

@@ -1,0 +1,20 @@
+"""repro.core — deterministic CNN-expressed ultrasound DSP pipelines.
+
+The paper's contribution: complete RF-to-image pipelines (B-mode, Color
+Doppler, Power Doppler) built from a restricted, deterministic operator set,
+in three implementation variants (dynamic / cnn / sparse).
+"""
+
+from repro.core.config import (  # noqa: F401
+    Modality,
+    PIPELINE_NAMES,
+    UltrasoundConfig,
+    Variant,
+    paper_config,
+    tiny_config,
+)
+from repro.core.pipeline import (  # noqa: F401
+    UltrasoundPipeline,
+    init_pipeline,
+    pipeline_fn,
+)

@@ -1,0 +1,27 @@
+"""B-mode head: envelope detection + dynamic-range compression.
+
+RF -> IQ -> beamformed IQ -> |.| -> 20 log10 -> clip to dynamic range
+-> normalized [0, 1] image (paper §II-A). One forward pass emits all
+n_f frames simultaneously (the paper's B-mode batches N_f = 32 images
+per call).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cnn_ops
+from repro.core.config import UltrasoundConfig
+
+
+def bmode_image(cfg: UltrasoundConfig, bf: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix, n_f, 2) beamformed IQ -> (nz, nx, n_f) image in [0, 1]."""
+    env = cnn_ops.magnitude(bf[..., 0], bf[..., 1])      # (n_pix, n_f)
+    env = cnn_ops.normalize_by_max(env, axis=0)
+    if cfg.cnn_transcendentals:
+        db = cnn_ops.db20_approx(env)
+    else:
+        db = 20.0 * jnp.log10(jnp.maximum(env, 1e-30))
+    dr = cfg.dynamic_range_db
+    img = (cnn_ops.clip(db, -dr, 0.0) + dr) / dr
+    return img.reshape(cfg.nz, cfg.nx, -1)

@@ -1,0 +1,165 @@
+"""Deterministic CNN-expressible primitive operations.
+
+The paper restricts the benchmarked forward path to "element-wise arithmetic,
+convolutions, pooling or reductions, and simple nonlinearities (e.g., square
+root and atan2 approximations)" (§II-C) and announces (§VII, Future Work) a
+catalogue of classically non-CNN ops re-expressed with that operator set.
+This module *is* that catalogue: every function below is a fixed, math-defined
+composition of pointwise arithmetic, sqrt, and reductions — no data-dependent
+control flow, no learned weights, bounded approximation error.
+
+Conventions:
+  * "select" is arithmetic blending, not lax.select, so that the same graph
+    lowers to pure pointwise ops on any backend.
+  * All approximations are validated against jnp oracles in
+    tests/test_cnn_ops.py with documented error bounds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Arithmetic control flow
+# ---------------------------------------------------------------------------
+
+
+def select(mask, a, b):
+    """mask ? a : b as pure arithmetic. mask must be 0/1 valued (float)."""
+    return mask * a + (1.0 - mask) * b
+
+
+def ge_mask(x, y):
+    """(x >= y) as a {0,1} float tensor (pointwise comparison)."""
+    return (x >= y).astype(jnp.float32)
+
+
+def clip(x, lo, hi):
+    """Pointwise clamp via min/max (CNN-compatible saturation)."""
+    return jnp.minimum(jnp.maximum(x, lo), hi)
+
+
+# ---------------------------------------------------------------------------
+# atan / atan2
+# ---------------------------------------------------------------------------
+
+# Hastings minimax polynomial for atan(z), |z| <= 1. Max abs error ~1.2e-5.
+_ATAN_C1 = 0.9998660
+_ATAN_C3 = -0.3302995
+_ATAN_C5 = 0.1801410
+_ATAN_C7 = -0.0851330
+_ATAN_C9 = 0.0208351
+
+
+def atan_poly(z):
+    """atan(z) for |z| <= 1 via odd 9th-order minimax polynomial."""
+    z2 = z * z
+    return z * (_ATAN_C1 + z2 * (_ATAN_C3 + z2 * (
+        _ATAN_C5 + z2 * (_ATAN_C7 + z2 * _ATAN_C9))))
+
+
+def atan2_approx(y, x, eps: float = 1e-30):
+    """Four-quadrant atan2 with bounded error (~1e-4 rad in float32).
+
+    Range reduction: z = min(|x|,|y|) / max(|x|,|y|) keeps the polynomial
+    argument in [0, 1]; quadrant reconstruction is arithmetic select only.
+    """
+    ax = jnp.abs(x)
+    ay = jnp.abs(y)
+    hi = jnp.maximum(ax, ay)
+    lo = jnp.minimum(ax, ay)
+    z = lo / (hi + eps)
+    base = atan_poly(z)
+    # If |y| > |x| the reduced angle is measured from the y-axis.
+    swap = ge_mask(ay, ax)
+    ang = select(swap, (np.pi / 2) - base, base)
+    # Quadrant fixes from the signs of x and y.
+    xneg = ge_mask(0.0, x) * ge_mask(jnp.abs(x), eps)  # x < 0 (treat -0 as +)
+    ang = select(xneg, np.pi - ang, ang)
+    yneg = ge_mask(0.0, y) * ge_mask(jnp.abs(y), eps)
+    return select(yneg, -ang, ang)
+
+
+# ---------------------------------------------------------------------------
+# Logarithms
+# ---------------------------------------------------------------------------
+
+
+def ln_approx(x, n_sqrt: int = 16, eps: float = 1e-30):
+    """ln(x) via the sqrt-composition identity ln(x) = 2^k (x^(1/2^k) - 1) + O().
+
+    Uses k repeated square roots (the paper's allowed sqrt nonlinearity) and a
+    first-order remainder. With k=16 the absolute error for x in [1e-8, 1e4]
+    is < 2e-3 (i.e. < 0.01 dB after 20/ln10 scaling) — bounded and
+    deterministic. Inputs are clamped to eps to avoid -inf.
+    """
+    y = jnp.maximum(x, eps)
+    for _ in range(n_sqrt):
+        y = jnp.sqrt(y)
+    # y = x^(1/2^k); ln(x) ~= 2^k * (y - 1) * (2 / (1 + y)) (Pade-improved)
+    scale = float(2 ** n_sqrt)
+    return scale * (y - 1.0) * 2.0 / (1.0 + y)
+
+
+_LN10 = float(np.log(10.0))
+
+
+def log10_approx(x, n_sqrt: int = 16, eps: float = 1e-30):
+    return ln_approx(x, n_sqrt=n_sqrt, eps=eps) / _LN10
+
+
+def db20_approx(x, eps: float = 1e-30):
+    """20*log10(x) with CNN-expressible log."""
+    return 20.0 * log10_approx(x, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# Magnitude / normalization
+# ---------------------------------------------------------------------------
+
+
+def magnitude(re, im):
+    """|z| = sqrt(re^2 + im^2) (paper-allowed sqrt nonlinearity)."""
+    return jnp.sqrt(re * re + im * im)
+
+
+def normalize_by_max(x, axis=None, eps: float = 1e-30):
+    """x / max(x) via a reduction + pointwise division."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    return x / (m + eps)
+
+
+# ---------------------------------------------------------------------------
+# Complex arithmetic on (..., 2) real tensors
+# ---------------------------------------------------------------------------
+# Complex dtypes are avoided so the same graph runs on CNN-only backends; the
+# final axis holds (real, imag).
+
+
+def cpack(re, im):
+    return jnp.stack([re, im], axis=-1)
+
+
+def creal(z):
+    return z[..., 0]
+
+
+def cimag(z):
+    return z[..., 1]
+
+
+def cmul(a, b):
+    """(a_re + i a_im) * (b_re + i b_im) — four pointwise multiplies."""
+    ar, ai = a[..., 0], a[..., 1]
+    br, bi = b[..., 0], b[..., 1]
+    return cpack(ar * br - ai * bi, ar * bi + ai * br)
+
+
+def cconj(z):
+    return cpack(z[..., 0], -z[..., 1])
+
+
+def cabs2(z):
+    return z[..., 0] ** 2 + z[..., 1] ** 2

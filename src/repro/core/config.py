@@ -1,0 +1,148 @@
+"""Configuration for the deterministic ultrasound pipelines.
+
+Everything geometry-dependent is *precomputed at module initialization* and
+excluded from timing, per the paper's §II-C ("Operator Constraints and
+Determinism"). The config is a frozen dataclass so pipelines are fully
+reproducible from the config alone.
+
+Default geometry reproduces the paper's fixed input size of 5.472 MB per
+forward pass: int16 RF of shape (n_l=1336, n_c=64, n_f=32)
+= 1336*64*32*2 bytes = 5,472,256 bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+
+class Variant(str, enum.Enum):
+    """Paper §II-B implementation variants.
+
+    DYNAMIC - V1: explicit gather / dynamic indexing.
+    CNN     - V2: convolutions, pointwise ops, matmuls (1x1 convs), reductions.
+    SPARSE  - V3: structured (block-) sparse matrices.
+    """
+
+    DYNAMIC = "dynamic"
+    CNN = "cnn"
+    SPARSE = "sparse"
+
+
+class Modality(str, enum.Enum):
+    """Paper §II-A pipeline modalities."""
+
+    BMODE = "bmode"
+    DOPPLER = "doppler"
+    POWER_DOPPLER = "power_doppler"
+
+
+# Paper table names, e.g. RF2IQ_DAS_BMODE.
+PIPELINE_NAMES = {
+    Modality.BMODE: "RF2IQ_DAS_BMODE",
+    Modality.DOPPLER: "RF2IQ_DAS_DOPPLER",
+    Modality.POWER_DOPPLER: "RF2IQ_DAS_POWERDOPPLER",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class UltrasoundConfig:
+    """Full configuration of an RF-to-image pipeline."""
+
+    # --- acquisition ----------------------------------------------------
+    n_l: int = 1336          # axial RF samples per channel
+    n_c: int = 64            # receive channels (array elements)
+    n_f: int = 32            # temporal frames per forward pass
+    fs: float = 20e6         # RF sampling frequency [Hz]
+    f0: float = 5e6          # probe center frequency [Hz]
+    c_sound: float = 1540.0  # speed of sound [m/s]
+    prf: float = 4000.0      # pulse repetition frequency [Hz] (Doppler scale)
+    pitch: float = 3.08e-4   # element pitch [m] (lambda at 5 MHz)
+    rf_dtype: str = "int16"  # raw RF on the wire
+
+    # --- demodulation (RF -> IQ) ----------------------------------------
+    decim: int = 4           # decimation factor; fs_iq = fs / decim
+    lpf_taps: int = 31       # FIR low-pass length (odd)
+    lpf_cutoff: float = 0.5  # cutoff as a fraction of f0
+
+    # --- image grid ------------------------------------------------------
+    nz: int = 128            # axial pixels
+    nx: int = 128            # lateral pixels
+    z_min: float = 5e-3      # [m]
+    z_max: float = 45e-3     # [m]
+    f_number: float = 1.5    # dynamic receive aperture
+
+    # --- processing ------------------------------------------------------
+    modality: Modality = Modality.BMODE
+    variant: Variant = Variant.CNN
+    dynamic_range_db: float = 60.0  # B-mode compression range
+    wall_filter_taps: int = 4       # Doppler clutter filter length
+    smooth_kernel: int = 3          # Doppler spatial smoothing (square)
+
+    # --- sparse (V3) block structure -------------------------------------
+    sparse_block_p: int = 64  # pixel-block rows (MXU-aligned multiples of 8)
+    sparse_block_s: int = 64  # sample-block cols
+
+    # --- numerics ---------------------------------------------------------
+    # When True, transcendental ops (atan2, log10) use the CNN-expressible
+    # bounded-error approximations from cnn_ops; when False, jnp natives.
+    # The CNN variant always uses approximations (portability contract).
+    cnn_transcendentals: bool = True
+
+    # Beyond-paper: route the DYNAMIC variant's beamform through the fused
+    # Pallas kernel (one-hot interpolation built in VMEM, consumed by the
+    # MXU — V2's portability without its HBM operator). CPU: interpret.
+    use_das_kernel: bool = False
+
+    # ---------------------------------------------------------------------
+    @property
+    def fs_iq(self) -> float:
+        return self.fs / self.decim
+
+    @property
+    def n_s(self) -> int:
+        """IQ samples per channel after decimation."""
+        return self.n_l // self.decim
+
+    @property
+    def n_pix(self) -> int:
+        return self.nz * self.nx
+
+    @property
+    def rf_shape(self) -> Tuple[int, int, int]:
+        return (self.n_l, self.n_c, self.n_f)
+
+    @property
+    def input_bytes(self) -> int:
+        """B_in for the throughput metric (paper eq. 2)."""
+        itemsize = 2 if self.rf_dtype == "int16" else 4
+        return self.n_l * self.n_c * self.n_f * itemsize
+
+    @property
+    def name(self) -> str:
+        return PIPELINE_NAMES[self.modality]
+
+    def with_(self, **kwargs) -> "UltrasoundConfig":
+        return dataclasses.replace(self, **kwargs)
+
+
+def paper_config(**overrides) -> UltrasoundConfig:
+    """The paper's benchmark geometry: 5.472 MB int16 RF per forward pass."""
+    cfg = UltrasoundConfig()
+    assert cfg.input_bytes == 5_472_256
+    return cfg.with_(**overrides) if overrides else cfg
+
+
+def tiny_config(**overrides) -> UltrasoundConfig:
+    """Reduced geometry for unit tests: same structure, ~1000x smaller.
+
+    n_l=512 records ~19.7 mm of depth at fs=20 MHz; the grid stays inside
+    that coverage so every pixel has valid delays.
+    """
+    cfg = UltrasoundConfig(
+        n_l=512, n_c=8, n_f=4, nz=24, nx=16,
+        z_min=4e-3, z_max=16e-3, lpf_taps=15,
+        sparse_block_p=16, sparse_block_s=16,
+    )
+    return cfg.with_(**overrides) if overrides else cfg

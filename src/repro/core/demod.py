@@ -1,0 +1,74 @@
+"""RF -> IQ quadrature demodulation, expressed as CNN primitives.
+
+Stages (all static, deterministic):
+  1. pointwise mix with the precomputed carrier (cos / -sin at f0),
+  2. FIR low-pass as a strided 1-D convolution (stride = decimation factor).
+
+The carrier vectors and FIR taps are init-time constants (paper §II-C).
+Complex IQ is carried as a trailing (re, im) axis — no complex dtypes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import UltrasoundConfig
+
+
+def design_lowpass(cfg: UltrasoundConfig) -> np.ndarray:
+    """Hamming-windowed sinc FIR, cutoff = lpf_cutoff * f0 (one-sided)."""
+    n = cfg.lpf_taps
+    assert n % 2 == 1, "FIR length must be odd for linear phase"
+    fc = cfg.lpf_cutoff * cfg.f0 / cfg.fs  # normalized cutoff (cycles/sample)
+    m = np.arange(n) - (n - 1) / 2.0
+    h = 2 * fc * np.sinc(2 * fc * m)
+    h *= np.hamming(n)
+    h /= h.sum()
+    return h.astype(np.float32)
+
+
+def demod_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
+    t = np.arange(cfg.n_l, dtype=np.float64) / cfg.fs
+    ph = 2.0 * np.pi * cfg.f0 * t
+    # Factor 2 restores the analytic-signal amplitude after low-pass.
+    carrier = np.stack([2.0 * np.cos(ph), -2.0 * np.sin(ph)], axis=-1)
+    return {
+        "carrier": carrier.astype(np.float32),      # (n_l, 2)
+        "lpf": design_lowpass(cfg),                 # (taps,)
+    }
+
+
+def rf_to_iq(consts: Dict[str, jnp.ndarray], rf: jnp.ndarray,
+             decim: int) -> jnp.ndarray:
+    """(n_l, n_c, n_f) RF -> (n_s, n_c, n_f, 2) IQ.
+
+    The mix is pointwise; the low-pass + decimation is one strided conv over
+    the axial axis with 'SAME' padding (output length n_l // decim).
+    """
+    n_l, n_c, n_f = rf.shape
+    x = rf.astype(jnp.float32)
+    mixed = x[..., None] * consts["carrier"][:, None, None, :]  # (n_l,c,f,2)
+
+    # Batch the (channel, frame, re/im) axes; convolve the axial axis.
+    feat = mixed.transpose(1, 2, 3, 0).reshape(n_c * n_f * 2, 1, n_l)
+    taps = consts["lpf"][None, None, :]                        # (1, 1, k)
+    k = taps.shape[-1]
+    pad = _same_pad(n_l, k, decim)
+    out = lax.conv_general_dilated(
+        feat, taps, window_strides=(decim,), padding=[pad],
+        dimension_numbers=("NCH", "OIH", "NCH"))
+    n_s = out.shape[-1]
+    return out.reshape(n_c, n_f, 2, n_s).transpose(3, 0, 1, 2)
+
+
+def _same_pad(length: int, k: int, stride: int):
+    """TF-style SAME padding for output length ceil(length / stride)."""
+    out = -(-length // stride)
+    total = max((out - 1) * stride + k - length, 0)
+    lo = total // 2
+    return (lo, total - lo)

@@ -1,0 +1,45 @@
+"""Probe geometry and image grid.
+
+A fixed Cartesian image grid and linear-array probe geometry are defined
+prior to execution and reused across all experiments (paper §II-D). All
+arrays here are plain numpy: they are init-time constants, never traced.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.config import UltrasoundConfig
+
+
+def element_positions(cfg: UltrasoundConfig) -> np.ndarray:
+    """Lateral x-positions [m] of the n_c array elements, centered at 0."""
+    idx = np.arange(cfg.n_c, dtype=np.float64)
+    return (idx - (cfg.n_c - 1) / 2.0) * cfg.pitch
+
+
+def image_grid(cfg: UltrasoundConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """(z, x) pixel coordinates [m]; z axial (depth), x lateral.
+
+    Returns (Z, X) each of shape (nz, nx). Lateral extent matches the
+    physical aperture so the grid is probe-consistent across configs.
+    """
+    half_ap = (cfg.n_c - 1) / 2.0 * cfg.pitch
+    z = np.linspace(cfg.z_min, cfg.z_max, cfg.nz, dtype=np.float64)
+    x = np.linspace(-half_ap, half_ap, cfg.nx, dtype=np.float64)
+    Z, X = np.meshgrid(z, x, indexing="ij")
+    return Z, X
+
+
+def flat_grid(cfg: UltrasoundConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Flattened (n_pix,) pixel coordinates, z-major ordering.
+
+    z-major (z varies fastest within a column? No: row-major over (nz, nx),
+    i.e. x varies fastest) — the ordering only matters for the banded
+    structure exploited by the sparse variant, which is derived from the
+    actual delay tables, not assumed.
+    """
+    Z, X = image_grid(cfg)
+    return Z.reshape(-1), X.reshape(-1)

@@ -1,0 +1,83 @@
+"""End-to-end RF-to-image pipelines (paper §II-A modalities).
+
+`init_pipeline(cfg)` precomputes every constant (geometry tables, FIR taps,
+interpolation operators) — this is module initialization, excluded from
+timing. `pipeline_fn(cfg)` returns a pure function (consts, rf) -> image
+suitable for jax.jit / pjit; rf is the only runtime input.
+
+The SAME code runs every variant and every backend; variant selection is
+configuration, preserving the paper's "no backend-specific rewrites"
+invariant (§II-E).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import beamform, bmode, delays, demod, doppler
+from repro.core.config import Modality, UltrasoundConfig, Variant
+
+
+def init_pipeline(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
+    """Precompute all pipeline constants (untimed, deterministic)."""
+    consts: Dict[str, np.ndarray] = dict(demod.demod_consts(cfg))
+    tables = delays.compute_delay_tables(cfg)
+
+    if cfg.variant == Variant.DYNAMIC:
+        consts.update(idx=tables.idx, frac=tables.frac,
+                      apod=tables.apod, rot=tables.rot)
+    elif cfg.variant == Variant.CNN:
+        consts["interp_matrix"] = delays.interp_matrix(cfg, tables)
+    elif cfg.variant == Variant.SPARSE:
+        op = delays.bsr_operator(cfg, tables)
+        consts["bsr_blocks"] = op.blocks
+        consts["bsr_col_idx"] = op.col_idx
+    else:  # pragma: no cover
+        raise ValueError(cfg.variant)
+
+    if cfg.modality in (Modality.DOPPLER, Modality.POWER_DOPPLER):
+        consts["wall_taps"] = doppler.wall_filter_taps(cfg)
+        consts["smooth"] = doppler.smoothing_kernel(cfg)
+    return consts
+
+
+def pipeline_fn(cfg: UltrasoundConfig) -> Callable:
+    """Pure (consts, rf) -> image function for the configured modality."""
+
+    def run(consts, rf):
+        iq = demod.rf_to_iq(consts, rf, cfg.decim)       # (n_s, n_c, n_f, 2)
+        bf = beamform.beamform(cfg, consts, iq)          # (n_pix, n_f, 2)
+        if cfg.modality == Modality.BMODE:
+            return bmode.bmode_image(cfg, bf)            # (nz, nx, n_f)
+        if cfg.modality == Modality.DOPPLER:
+            return doppler.color_doppler_image(cfg, consts, bf)
+        if cfg.modality == Modality.POWER_DOPPLER:
+            return doppler.power_doppler_image(cfg, consts, bf)
+        raise ValueError(cfg.modality)  # pragma: no cover
+
+    return run
+
+
+class UltrasoundPipeline:
+    """Convenience wrapper: init once, jit once, call many times."""
+
+    def __init__(self, cfg: UltrasoundConfig):
+        self.cfg = cfg
+        self.consts = jax.tree.map(jnp.asarray, init_pipeline(cfg))
+        self._fn = jax.jit(pipeline_fn(cfg))
+
+    def __call__(self, rf: jnp.ndarray) -> jnp.ndarray:
+        return self._fn(self.consts, rf)
+
+    @property
+    def input_bytes(self) -> int:
+        return self.cfg.input_bytes
+
+    @property
+    def name(self) -> str:
+        return f"{self.cfg.name}:{self.cfg.variant.value}"

@@ -1,0 +1,1 @@
+from repro.data.rf_data import synth_rf  # noqa: F401

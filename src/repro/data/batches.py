@@ -1,0 +1,90 @@
+"""Batch construction: real synthetic arrays (tests/train) and abstract
+ShapeDtypeStruct specs (dry-run) share one schema per (family, kind).
+
+Schema:
+  train/prefill (LM):   tokens (B,S) i32, labels (B,S) i32
+  vlm adds:             embeds (B,S,D), embed_mask (B,S), positions (B,3,S)
+  audio (enc-dec):      enc_embeds (B,S,D) + tokens/labels (B,S)
+  decode:               tokens (B,1) + cache + lengths (B,)
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dtype_of
+
+
+def train_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    i32 = jnp.int32
+    act = dtype_of(cfg.compute_dtype)
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if cfg.family == "vlm":
+        spec["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), act)
+        spec["embed_mask"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        spec["positions"] = jax.ShapeDtypeStruct((batch, 3, seq), i32)
+    if cfg.family == "audio":
+        spec["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), act)
+    return spec
+
+
+def synth_train_batch(cfg: ModelConfig, batch: int, seq: int,
+                      seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    act = dtype_of(cfg.compute_dtype)
+    out = {
+        "tokens": rng.integers(0, cfg.vocab_size, (batch, seq)).astype(
+            np.int32),
+        "labels": rng.integers(0, cfg.vocab_size, (batch, seq)).astype(
+            np.int32),
+    }
+    if cfg.family == "vlm":
+        n_img = seq // 4                      # leading image-patch region
+        out["embeds"] = (0.02 * rng.standard_normal(
+            (batch, seq, cfg.d_model))).astype(act)
+        mask = np.zeros((batch, seq), np.int32)
+        mask[:, :n_img] = 1
+        out["embed_mask"] = mask
+        # M-RoPE triplets: patches get (t=0, h, w) grid positions; text gets
+        # sequential positions on all three axes.
+        side = max(int(np.sqrt(n_img)), 1)
+        pos = np.zeros((batch, 3, seq), np.int32)
+        for i in range(n_img):
+            pos[:, 0, i] = 0
+            pos[:, 1, i] = i // side
+            pos[:, 2, i] = i % side
+        text = np.arange(seq - n_img)
+        for ax in range(3):
+            pos[:, ax, n_img:] = side + text
+        out["positions"] = pos
+    if cfg.family == "audio":
+        out["enc_embeds"] = (0.02 * rng.standard_normal(
+            (batch, seq, cfg.d_model))).astype(act)
+    return jax.tree.map(jnp.asarray, out)
+
+
+def decode_inputs_spec(cfg: ModelConfig, batch: int) -> Dict:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def synth_decode_inputs(cfg: ModelConfig, batch: int, length: int,
+                        seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, 1)).astype(np.int32)),
+        "lengths": jnp.full((batch,), length, dtype=jnp.int32),
+    }

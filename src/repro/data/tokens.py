@@ -1,0 +1,71 @@
+"""Deterministic synthetic LM data pipeline.
+
+Stateless, step-addressable batches: batch(step) is a pure function of
+(seed, step), so checkpoint restarts and elastic resizes resume *exactly*
+(no data-loader state to save — the step number is the state). This is the
+fault-tolerance property production pipelines get from deterministic
+sharded readers, reproduced with a synthetic source.
+
+The sequences follow an increment rule with rare random jumps
+(x[t+1] = x[t] + stride, ~5% restarts), so next-token entropy is far below
+uniform and a small model learns the rule within tens of steps — training
+curves in examples/train_lm.py visibly descend while the jump floor keeps
+the loss from collapsing to zero.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class TokenDataset:
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+
+    def batch_for_step(self, step: int) -> Dict[str, np.ndarray]:
+        """Pure (seed, step) -> batch. int32 tokens/labels."""
+        v = self.cfg.vocab_size
+        b, s = self.batch, self.seq
+        rng = np.random.default_rng((self.seed * 1_000_003 + step) % 2**63)
+        # increment-rule sequences: x[t+1] = x[t] + stride, with ~5%
+        # random restarts (the irreducible loss floor)
+        stride = rng.integers(1, 4, size=(b, 1))
+        start = rng.integers(0, v, size=(b, 1))
+        x = (start + stride * np.arange(s + 1)[None, :]) % v
+        jumps = rng.random((b, s + 1)) < 0.05
+        jump_to = rng.integers(0, v, size=(b, s + 1))
+        offset = np.where(jumps, jump_to - x, 0).cumsum(axis=1)
+        x = (x + offset) % v
+        tokens = x[:, :s].astype(np.int32)
+        labels = x[:, 1:s + 1].astype(np.int32)
+        out = {"tokens": tokens, "labels": labels}
+        if self.cfg.family == "vlm":
+            d = self.cfg.d_model
+            out["embeds"] = (0.02 * rng.standard_normal(
+                (b, s, d))).astype(np.float32)
+            mask = np.zeros((b, s), np.int32)
+            mask[:, : s // 4] = 1
+            out["embed_mask"] = mask
+            pos = np.broadcast_to(np.arange(s, dtype=np.int32),
+                                  (b, 3, s)).copy()
+            out["positions"] = pos
+        if self.cfg.family == "audio":
+            d = self.cfg.d_model
+            out["enc_embeds"] = (0.02 * rng.standard_normal(
+                (b, s, d))).astype(np.float32)
+        return out
+
+    def iter_from(self, step: int) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.batch_for_step(step)
+            step += 1

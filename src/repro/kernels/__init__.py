@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as a subpackage with three modules:
+  kernel.py - pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    - jitted public wrapper (padding, vmapping, dtype handling)
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+All kernels are validated on CPU with interpret=True; on TPU the same code
+lowers through Mosaic. Kernels are opt-in (config flag) - the XLA paths in
+repro.core / repro.models remain the portable default, per the paper's
+single-source portability contract.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bsr_spmm.ops import bsr_beamform, bsr_spmm  # noqa: F401

@@ -1,0 +1,55 @@
+"""Public wrapper for the BSR SpMM kernel (complex, multi-channel DAS V3).
+
+`bsr_spmm` is the raw real-valued primitive. `bsr_beamform` composes it into
+the complex multi-channel beamform used by repro.core's sparse variant:
+channels vmapped, complex arithmetic as four real SpMMs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr_spmm import kernel as _k
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def bsr_spmm(cols, blocks, x, *, interpret=None):
+    return _k.bsr_spmm_pallas(
+        cols, blocks.astype(jnp.float32), x.astype(jnp.float32),
+        interpret=_auto_interpret(interpret))
+
+
+def bsr_beamform(cols, blocks, iq_b, *, interpret=None):
+    """Complex multi-channel beamform via block-sparse matmuls.
+
+    Args:
+      cols:   (n_c, n_pb, K) int32.
+      blocks: (n_c, n_pb, K, bp, bs, 2) f32 (complex as trailing re/im).
+      iq_b:   (n_sb, bs, n_c, n_f, 2) f32 blocked IQ.
+    Returns:
+      (n_pb * bp, n_f, 2) f32 beamformed output, summed over channels.
+    """
+    interpret = _auto_interpret(interpret)
+
+    def one_channel(cols_1, blocks_1, iq_1):
+        # iq_1: (n_sb, bs, n_f, 2)
+        a = bsr_spmm(cols_1, blocks_1[..., 0], iq_1[..., 0],
+                     interpret=interpret)       # re*re
+        b = bsr_spmm(cols_1, blocks_1[..., 1], iq_1[..., 1],
+                     interpret=interpret)       # im*im
+        c = bsr_spmm(cols_1, blocks_1[..., 0], iq_1[..., 1],
+                     interpret=interpret)       # re*im
+        d = bsr_spmm(cols_1, blocks_1[..., 1], iq_1[..., 0],
+                     interpret=interpret)       # im*re
+        return jnp.stack([a - b, c + d], axis=-1)   # (n_pb, bp, n_f, 2)
+
+    per_c = jax.vmap(one_channel, in_axes=(0, 0, 2))(cols, blocks, iq_b)
+    y = per_c.sum(axis=0)
+    n_pb, bp = y.shape[0], y.shape[1]
+    return y.reshape(n_pb * bp, *y.shape[2:])

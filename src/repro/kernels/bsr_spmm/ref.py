@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the BSR SpMM kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bsr_spmm_ref(cols, blocks, x):
+    """y[i] = sum_k blocks[i,k] @ x[cols[i,k]].
+
+    cols (n_pb, K) i32; blocks (n_pb, K, bp, bs); x (n_sb, bs, nf).
+    Returns (n_pb, bp, nf).
+    """
+    g = jnp.take(x, cols, axis=0)          # (n_pb, K, bs, nf)
+    return jnp.einsum("ikps,iksf->ipf", blocks, g)

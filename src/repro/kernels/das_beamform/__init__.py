@@ -1,0 +1,1 @@
+from repro.kernels.das_beamform.ops import das_beamform  # noqa: F401

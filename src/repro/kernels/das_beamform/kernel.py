@@ -1,0 +1,91 @@
+"""Fused DAS beamform Pallas kernel (TPU target).
+
+The paper's V2 "full CNN" variant materializes the one-hot interpolation
+operator in HBM — (n_c, n_pix, n_s) floats, 2.7 GB at the paper's geometry
+(their Table I peak-memory column). This kernel is the TPU-native fusion of
+V1 and V2: the one-hot interpolation weights are *built on the fly in VMEM*
+from the compact (n_pix, n_c) delay tables and immediately consumed by an
+MXU matmul, so the gather becomes matrix work without the O(n_pix * n_s)
+HBM footprint. This is a beyond-paper optimization enabled by rethinking
+the op for the TPU memory hierarchy (HBM -> VMEM -> MXU).
+
+Tiling:
+  grid  = (n_pix // BP,)                       one pixel tile per step
+  VMEM  = idx/frac/apod (BP, n_c), rot (BP, n_c, 2),
+          iq (n_s, n_c, n_f, 2) resident across steps,
+          one (BP, n_s) weight tile built per channel iteration.
+
+For MXU efficiency BP and n_s should be multiples of 128 / 8 respectively;
+the ops.py wrapper pads. All accumulation is f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+import jax.experimental.pallas as pl
+
+
+DEFAULT_BP = 128  # pixel-tile rows (MXU-aligned)
+
+
+def _kernel(idx_ref, frac_ref, apod_ref, rot_ref, iq_ref, out_ref):
+    bp, n_c = idx_ref.shape
+    n_s = iq_ref.shape[0]
+    n_f = iq_ref.shape[2]
+
+    iota = lax.broadcasted_iota(jnp.int32, (bp, n_s), 1)
+
+    def channel_body(c, acc):
+        acc_re, acc_im = acc
+        idx = idx_ref[:, c][:, None]                     # (bp, 1)
+        frac = frac_ref[:, c][:, None]
+        apod = apod_ref[:, c][:, None]
+        # one-hot interpolation weights, built in VMEM, consumed by the MXU
+        w = (jnp.where(iota == idx, 1.0 - frac, 0.0) +
+             jnp.where(iota == idx + 1, frac, 0.0)) * apod  # (bp, n_s)
+        iq_re = iq_ref[:, c, :, 0]                       # (n_s, n_f)
+        iq_im = iq_ref[:, c, :, 1]
+        v_re = jnp.dot(w, iq_re, preferred_element_type=jnp.float32)
+        v_im = jnp.dot(w, iq_im, preferred_element_type=jnp.float32)
+        rot_re = rot_ref[:, c, 0][:, None]               # (bp, 1)
+        rot_im = rot_ref[:, c, 1][:, None]
+        acc_re = acc_re + v_re * rot_re - v_im * rot_im
+        acc_im = acc_im + v_re * rot_im + v_im * rot_re
+        return acc_re, acc_im
+
+    zero = jnp.zeros((bp, n_f), dtype=jnp.float32)
+    acc_re, acc_im = lax.fori_loop(0, n_c, channel_body, (zero, zero))
+    out_ref[:, :, 0] = acc_re
+    out_ref[:, :, 1] = acc_im
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def das_beamform_pallas(idx, frac, apod, rot, iq, *, bp: int = DEFAULT_BP,
+                        interpret: bool = True):
+    """(n_pix, n_c) tables + (n_s, n_c, n_f, 2) IQ -> (n_pix, n_f, 2).
+
+    n_pix must be a multiple of bp (ops.py pads).
+    """
+    n_pix, n_c = idx.shape
+    n_s, _, n_f, _ = iq.shape
+    assert n_pix % bp == 0, (n_pix, bp)
+    grid = (n_pix // bp,)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, n_c), lambda i: (i, 0)),
+            pl.BlockSpec((bp, n_c), lambda i: (i, 0)),
+            pl.BlockSpec((bp, n_c), lambda i: (i, 0)),
+            pl.BlockSpec((bp, n_c, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n_s, n_c, n_f, 2), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, n_f, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pix, n_f, 2), jnp.float32),
+        interpret=interpret,
+    )(idx, frac, apod, rot, iq)

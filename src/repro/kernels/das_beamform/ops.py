@@ -1,0 +1,46 @@
+"""Public wrapper for the fused DAS beamform kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.das_beamform import kernel as _k
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
+                 interpret=None):
+    """Fused delay-and-sum beamform.
+
+    Args:
+      idx:  (n_pix, n_c) int32 floor sample indices (clamped to n_s - 2).
+      frac: (n_pix, n_c) f32 interpolation fractions.
+      apod: (n_pix, n_c) f32 apodization (0 disables a (pixel, channel)).
+      rot:  (n_pix, n_c, 2) f32 unit phasors.
+      iq:   (n_s, n_c, n_f, 2) f32.
+    Returns:
+      (n_pix, n_f, 2) f32 beamformed IQ.
+    """
+    interpret = _auto_interpret(interpret)
+    n_pix = idx.shape[0]
+    bp = min(bp, _next_multiple(n_pix, 8))
+    pad = _next_multiple(n_pix, bp) - n_pix
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        frac = jnp.pad(frac, ((0, pad), (0, 0)))
+        apod = jnp.pad(apod, ((0, pad), (0, 0)))  # zero apod => no output
+        rot = jnp.pad(rot, ((0, pad), (0, 0), (0, 0)))
+    out = _k.das_beamform_pallas(
+        idx, frac, apod, rot, iq.astype(jnp.float32),
+        bp=bp, interpret=interpret)
+    return out[:n_pix]
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused DAS beamform kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def das_beamform_ref(idx, frac, apod, rot, iq):
+    """(n_pix, n_c) tables + (n_s, n_c, n_f, 2) IQ -> (n_pix, n_f, 2)."""
+    iq_c = iq.transpose(1, 0, 2, 3)  # (n_c, n_s, n_f, 2)
+
+    def one_channel(iq_1, idx_1, frac_1, apod_1, rot_1):
+        s0 = jnp.take(iq_1, idx_1, axis=0)
+        s1 = jnp.take(iq_1, idx_1 + 1, axis=0)
+        f = frac_1[:, None, None]
+        v = s0 * (1.0 - f) + s1 * f
+        re = v[..., 0] * rot_1[:, None, 0] - v[..., 1] * rot_1[:, None, 1]
+        im = v[..., 0] * rot_1[:, None, 1] + v[..., 1] * rot_1[:, None, 0]
+        return jnp.stack([re, im], axis=-1) * apod_1[:, None, None]
+
+    per_c = jax.vmap(one_channel, in_axes=(0, 1, 1, 1, 1))(
+        iq_c, idx, frac, apod, rot)
+    return per_c.sum(axis=0)

@@ -1,0 +1,108 @@
+"""Flash attention Pallas kernel (TPU target).
+
+Block-tiled online-softmax attention: O(L) VMEM, no (Lq x Lk) score
+materialization in HBM. Used for the prefill_32k shapes where attention is
+the dominant compute term.
+
+Tiling:
+  grid = (n_heads, Lq // BQ, Lk // BK); the BK axis is sequential
+  ("arbitrary") and carries the online-softmax state in VMEM scratch:
+  acc (BQ, d), m (BQ, 1) running max, l (BQ, 1) running sum.
+
+Causal masking is arithmetic (mask to -1e30); fully-masked tiles contribute
+exp(-1e30 - m) == 0. BQ/BK should be multiples of 128 on real TPU; the
+ops.py wrapper pads and handles GQA head expansion.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, causal: bool, scale: float, bq: int, bk: int):
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]                                   # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    if causal:
+        qi = pl.program_id(1)
+        rows = qi * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = True):
+    """(h, Lq, d), (h, Lk, d), (h, Lk, d) -> (h, Lq, d). f32 in/out."""
+    h, lq, d = q.shape
+    _, lk, _ = k.shape
+    assert lq % bq == 0 and lk % bk == 0, (lq, lk, bq, bk)
+    if scale is None:
+        scale = d ** -0.5
+    grid = (h, lq // bq, lk // bk)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, scale=float(scale), bq=bq, bk=bk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qi, kj: (hh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qi, kj: (hh, kj, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qi, kj: (hh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qi, kj: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, lq, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

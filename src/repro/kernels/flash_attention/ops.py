@@ -1,0 +1,68 @@
+"""Public wrapper for flash attention: batching, GQA, padding, dtypes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    bq: int = _k.DEFAULT_BQ, bk: int = _k.DEFAULT_BK,
+                    interpret=None):
+    """Batched GQA flash attention.
+
+    Args:
+      q: (batch, Lq, n_q_heads, d).
+      k, v: (batch, Lk, n_kv_heads, d); n_q_heads % n_kv_heads == 0.
+      causal: causal masking (requires Lq == Lk alignment at position 0).
+    Returns:
+      (batch, Lq, n_q_heads, d), dtype of q.
+    """
+    interpret = _auto_interpret(interpret)
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    if rep > 1:  # GQA: expand kv heads to match q heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    bq_eff = min(bq, _ceil_to(lq, 8))
+    bk_eff = min(bk, _ceil_to(lk, 8))
+    pq = _ceil_to(lq, bq_eff) - lq
+    pk = _ceil_to(lk, bk_eff) - lk
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).astype(jnp.float32)
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).astype(jnp.float32)
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).astype(jnp.float32)
+    # Padded k rows must never win the softmax: push their keys far negative
+    # via an explicit mask folded into k? Simpler: rely on causal masking for
+    # pq/pk tails when causal; for non-causal, mask via v zeros + key bias.
+    if pk and not causal:
+        # Give padded keys a huge negative inner product by appending a
+        # constant large-magnitude component is fragile; instead mask by
+        # recomputing with explicit bias is costly. We choose: pad keys with
+        # zeros and subtract their contribution via weight renormalization
+        # is also wrong. => disallow silently: caller must pass aligned Lk.
+        raise ValueError("non-causal flash requires Lk % bk == 0 "
+                         f"(got Lk={lk}, bk={bk_eff})")
+
+    def per_batch(qb, kb, vb):
+        return _k.flash_attention_pallas(
+            qb.transpose(1, 0, 2), kb.transpose(1, 0, 2),
+            vb.transpose(1, 0, 2), causal=causal, scale=scale,
+            bq=bq_eff, bk=bk_eff, interpret=interpret).transpose(1, 0, 2)
+
+    out = jax.vmap(per_batch)(qf, kf, vf)
+    return out[:, :lq].astype(q.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """(h, Lq, d) x (h, Lk, d) x (h, Lk, d) -> (h, Lq, d)."""
+    h, lq, d = q.shape
+    lk = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), dtype=bool), k=lk - lq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

@@ -1,0 +1,101 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+Computes the scalar-decay SSM recurrence used by Mamba2:
+
+    h_t = a_t * h_{t-1} + B_t (outer) x_t          h in R^{N x P}
+    y_t = C_t^T h_t
+
+via the SSD chunk decomposition: within a chunk of Q steps the output is a
+masked (Q x Q) matmul ("attention-like" duality); across chunks a compact
+(N x P) state is carried in VMEM scratch. All heavy ops are MXU matmuls —
+this is the TPU-native formulation of a recurrence that is classically
+expressed with per-step dynamic updates (the paper's philosophy applied to
+SSMs: irregular recurrence -> static matmul graph).
+
+Grid: (L // Q,), sequential. Scratch: h (N, P) f32.
+Inputs per head: log_a (L, 1) decay logs (<= 0), x (L, P), B (L, N), C (L, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(loga_ref, x_ref, b_ref, c_ref, y_ref, h_ref):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    la = jnp.cumsum(loga_ref[...], axis=0)         # (Q, 1) inclusive
+    ea = jnp.exp(la)                               # decay chunk-start -> t
+    x = x_ref[...]                                 # (Q, P)
+    b = b_ref[...]                                 # (Q, N)
+    c = c_ref[...]                                 # (Q, N)
+    q = x.shape[0]
+
+    # Intra-chunk: y_t += sum_{j<=t} exp(la_t - la_j) (C_t . B_j) x_j
+    s = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    rows = lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    # clamp before exp: positive (future-position) log-decays overflow
+    decay = jnp.exp(jnp.minimum(la - la.T, 0.0))   # la_i - la_j
+    m = jnp.where(rows >= cols, s * decay, 0.0)
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)     # (Q, P)
+
+    # Inter-chunk: y_t += exp(la_t) C_t . h_prev
+    y = y + jnp.dot(c * ea, h_ref[...],
+                    preferred_element_type=jnp.float32)
+
+    # State update: h_new = exp(la_last) h_prev + sum_j exp(la_last - la_j) B_j x_j^T
+    ea_last = jnp.exp(la[-1:, :])                  # (1, 1)
+    w = jnp.exp(la[-1:, :] - la)                   # (Q, 1)
+    h_ref[...] = ea_last * h_ref[...] + jnp.dot(
+        (b * w).T, x, preferred_element_type=jnp.float32)
+
+    y_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(log_a, x, b, c, *, chunk: int = DEFAULT_CHUNK,
+                    interpret: bool = True):
+    """Single-head SSD scan.
+
+    Args:
+      log_a: (L, 1) f32, log decay per step (<= 0 for stability).
+      x:     (L, P) f32 inputs (dt already folded into B or x by caller).
+      b:     (L, N) f32 input projections.
+      c:     (L, N) f32 output projections.
+    Returns:
+      y (L, P) f32.
+    """
+    l, p = x.shape
+    n = b.shape[1]
+    assert l % chunk == 0, (l, chunk)
+    grid = (l // chunk,)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, p), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(log_a, x, b, c)

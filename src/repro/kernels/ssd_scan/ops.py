@@ -1,0 +1,48 @@
+"""Public wrapper for the SSD scan kernel: batch/head vmapping + padding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as _k
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def ssd_scan(log_a, x, b, c, *, chunk: int = _k.DEFAULT_CHUNK,
+             interpret=None):
+    """Batched multi-head SSD scan.
+
+    Args:
+      log_a: (batch, L, H) log decays (<= 0).
+      x:     (batch, L, H, P).
+      b, c:  (batch, L, H, N) (per-head; broadcast groups upstream).
+    Returns:
+      y (batch, L, H, P), dtype of x.
+    """
+    interpret = _auto_interpret(interpret)
+    bsz, l, h, p = x.shape
+    chunk_eff = min(chunk, l)
+    pad = (-l) % chunk_eff
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def one(la_1, x_1, b_1, c_1):
+        return _k.ssd_scan_pallas(
+            la_1[:, None].astype(jnp.float32), x_1.astype(jnp.float32),
+            b_1.astype(jnp.float32), c_1.astype(jnp.float32),
+            chunk=chunk_eff, interpret=interpret)
+
+    # vmap over batch (axis 0), then heads (axis 1 of each per-batch array).
+    f = jax.vmap(jax.vmap(one, in_axes=(1, 1, 1, 1), out_axes=1),
+                 in_axes=(0, 0, 0, 0))
+    y = f(log_a, x, b, c)
+    return y[:, :l].astype(x.dtype)

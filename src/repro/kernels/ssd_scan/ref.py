@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SSD scan: the naive step-by-step recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(log_a, x, b, c):
+    """h_t = a_t h_{t-1} + B_t x_t^T;  y_t = C_t^T h_t.
+
+    log_a (L, 1), x (L, P), b (L, N), c (L, N) -> y (L, P).
+    """
+    n, p = b.shape[1], x.shape[1]
+
+    def step(h, inp):
+        la_t, x_t, b_t, c_t = inp
+        h = jnp.exp(la_t)[:, None] * h + b_t[:, None] * x_t[None, :]
+        return h, c_t @ h
+
+    h0 = jnp.zeros((n, p), dtype=jnp.float32)
+    _, y = jax.lax.scan(step, h0, (log_a, x, b, c))
+    return y

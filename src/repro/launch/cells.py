@@ -1,0 +1,285 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable step.
+
+`input_specs(cfg, shape)` produces ShapeDtypeStruct stand-ins for every
+runtime input (weak-type-correct, shardable, zero allocation); `build_cell`
+adds the step function and in/out shardings. The dry-run lowers and
+compiles each cell; nothing is ever materialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import (
+    ModelConfig, ParallelConfig, SHAPES, ShapeConfig, TrainConfig)
+from repro.data import batches
+from repro.models import get_model
+from repro.models.api import Model
+from repro.runtime import param_sharding as psh
+from repro.runtime import sharding as shlib
+from repro.train import steps as steps_lib
+
+# Archs that must shard params over data too (too big otherwise).
+FSDP_ARCHS = {"llama3-405b", "deepseek-v2-236b"}
+
+
+def parallel_for(cfg: ModelConfig, shape: ShapeConfig) -> ParallelConfig:
+    """Per-cell distribution choices.
+
+    Decode cells shard the KV cache along the *sequence* axis: KV heads
+    rarely divide the 16-way model axis (gemma3 has 1), and replicating a
+    multi-GB cache makes decode collective-bound (§Perf iteration 1).
+    The softmax/contraction reductions over the sharded axis lower to
+    small psums (flash-decode, derived by the SPMD partitioner). batch=1
+    long-context additionally folds the idle data axis into "seq".
+    """
+    seq_axes: tuple = ("model",)
+    if shape.kind == "decode" and shape.global_batch == 1:
+        seq_axes = ("data", "model")
+    return ParallelConfig(
+        fsdp=cfg.name in FSDP_ARCHS,
+        seq_shard_decode=(shape.kind == "decode"),
+        seq_axes=seq_axes,
+    )
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig
+                   ) -> Tuple[bool, str]:
+    """The assignment's skip rules (recorded, not silently dropped)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: long_500k needs "
+                       "sub-quadratic attention (DESIGN.md §5)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def _abstract_state(model: Model) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        lambda k: steps_lib.init_train_state(model, k), key)
+
+
+def _abstract_params(model: Model) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(model.init_params, key)
+
+
+def _abstract_cache(model: Model, cfg: ModelConfig, batch: int,
+                    seq: int) -> Any:
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: model.init_cache(batch, 256, seq))
+    return jax.eval_shape(lambda: model.init_cache(batch, seq))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                model: Optional[Model] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    model = model or get_model(cfg)
+    if shape.kind == "train":
+        return {
+            "state": _abstract_state(model),
+            "batch": batches.train_batch_spec(
+                cfg, shape.global_batch, shape.seq_len),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": _abstract_params(model),
+            "batch": batches.train_batch_spec(
+                cfg, shape.global_batch, shape.seq_len),
+        }
+    # decode
+    dec = batches.decode_inputs_spec(cfg, shape.global_batch)
+    return {
+        "params": _abstract_params(model),
+        "tokens": dec["tokens"],
+        "cache": _abstract_cache(model, cfg, shape.global_batch,
+                                 shape.seq_len),
+        "lengths": dec["lengths"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def _batch_shardings(mesh, batch_spec):
+    def leaf(s):
+        ax = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, shlib.resolve(s.shape, *ax))
+    return jax.tree.map(leaf, batch_spec)
+
+
+def _param_shardings(mesh, params_abs):
+    return psh.shardings_for(mesh, psh.param_pspecs(params_abs))
+
+
+def _state_shardings(mesh, state_abs, zero1: bool = True):
+    params_abs = state_abs["params"]
+    logical = psh.logical_param_axes(params_abs)
+    p_specs = psh.specs_from_logical(logical, params_abs)
+    if zero1:
+        m_logical = psh.zero1_moment_axes(logical, params_abs)
+        m_specs = psh.specs_from_logical(m_logical, params_abs,
+                                         keep_fsdp=True)
+    else:
+        m_specs = p_specs
+    return {
+        "params": psh.shardings_for(mesh, p_specs),
+        "opt": {
+            "m": psh.shardings_for(mesh, m_specs),
+            "v": psh.shardings_for(mesh, m_specs),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def _cache_shardings(mesh, model: Model, cache_abs, seq_sharded: bool):
+    logical = model.cache_specs(seq_sharded=seq_sharded)
+    return jax.tree.map(
+        lambda ax, leaf: NamedSharding(
+            mesh, shlib.resolve(leaf.shape, *ax)),
+        logical, cache_abs,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, (str, tuple)) for a in x))
+
+
+def _replicated(mesh, tree_abs):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_abs)
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    step: Callable
+    specs: Dict[str, Any]
+    in_shardings: Any
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               overrides: Optional[Dict] = None,
+               tcfg: Optional[TrainConfig] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, **(overrides or {}))
+    parallel = parallel_for(cfg, shape)
+    model = get_model(cfg)
+    tcfg = tcfg or TrainConfig()
+
+    binding = _mesh_binding(mesh, parallel)
+    with jax.set_mesh(mesh), shlib.use_binding(binding):
+        specs = input_specs(cfg, shape, model)
+
+        if shape.kind == "train":
+            step = steps_lib.make_train_step(model, tcfg)
+            st_sh = _state_shardings(mesh, specs["state"], tcfg.zero1)
+            in_sh = (st_sh, _batch_shardings(mesh, specs["batch"]))
+            metrics_abs = jax.eval_shape(step, specs["state"],
+                                         specs["batch"])[1]
+            out_sh = (st_sh, _replicated(mesh, metrics_abs))
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model)
+            p_sh = _param_shardings(mesh, specs["params"])
+            in_sh = (p_sh, _batch_shardings(mesh, specs["batch"]))
+            tok_abs, cache_abs = jax.eval_shape(
+                step, specs["params"], specs["batch"])
+            out_sh = (
+                NamedSharding(mesh, shlib.resolve(tok_abs.shape, "batch")),
+                _cache_shardings(mesh, model, cache_abs, False))
+        else:  # decode
+            step = steps_lib.make_serve_step(model)
+            p_sh = _param_shardings(mesh, specs["params"])
+            c_sh = _cache_shardings(mesh, model, specs["cache"],
+                                    parallel.seq_shard_decode)
+            tok_sh = NamedSharding(
+                mesh, shlib.resolve(specs["tokens"].shape, "batch", None))
+            len_sh = NamedSharding(
+                mesh, shlib.resolve(specs["lengths"].shape, "batch"))
+            in_sh = (p_sh, tok_sh, c_sh, len_sh)
+            out_sh = (tok_sh, c_sh, len_sh)
+
+    # Buffer donation: train state and decode caches are updated in place
+    # (XLA aliases the buffers; without this every step round-trips a full
+    # copy of the optimizer state / KV cache through HBM — §Perf iter 2).
+    donate = {"train": (0,), "prefill": (), "decode": (2,)}[shape.kind]
+    return Cell(arch=arch, shape=shape, cfg=cfg, step=step, specs=specs,
+                in_shardings=in_sh, out_shardings=out_sh, donate=donate)
+
+
+def _mesh_binding(mesh, parallel: ParallelConfig) -> shlib.Binding:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = dict(shlib.MULTI_POD_RULES if "pod" in mesh.axis_names
+                 else shlib.SINGLE_POD_RULES)
+    rules["seq"] = tuple(a for a in parallel.seq_axes
+                         if a in axis_sizes)
+    return shlib.Binding(rules, axis_sizes, fsdp=parallel.fsdp)
+
+
+def lower_cell(cell: Cell, mesh):
+    """jit -> lower under the mesh + binding. Returns the Lowered object."""
+    parallel = parallel_for(cell.cfg, cell.shape)
+    binding = _mesh_binding(mesh, parallel)
+    order = list(cell.specs.keys())
+    args = [cell.specs[k] for k in order]
+    with jax.set_mesh(mesh), shlib.use_binding(binding):
+        jitted = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        return jitted.lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# model-level FLOP accounting (roofline's "useful compute")
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts from the abstract tree."""
+    model = get_model(cfg)
+    abs_params = _abstract_params(model)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(abs_params)[0]:
+        names = [str(getattr(k, "key", k)) for k in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe" in names and names[-1] in ("wi_gate", "wi_up", "wo"):
+            expert += n
+    if cfg.n_experts:
+        active = total - expert + expert * (
+            cfg.n_experts_per_tok / cfg.n_experts)
+    else:
+        active = total
+    return int(total), int(active)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D for train; 2*N_active*D for inference."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # one token per slot

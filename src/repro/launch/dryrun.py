@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The ONLY entry point that forces 512 placeholder devices (set above,
+before any jax import — jax locks device count at first init). Proves the
+distribution config is coherent: sharding mismatches, compile-time OOMs
+and unsupported collectives all surface here as failures.
+
+Per cell it records:
+  * memory_analysis(): per-device argument/output/temp/peak bytes,
+  * cost_analysis(): HLO FLOPs + bytes accessed,
+  * collective result bytes parsed from the optimized HLO,
+  * derived roofline terms (launch/hlo_analysis.py),
+  * MODEL_FLOPS = 6|2 * N_active * D and the useful-compute ratio.
+
+Results append to benchmarks/results/dryrun.json (one record per cell).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch import cells as cells_lib
+from repro.launch import hlo_analysis as hlo
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m", "deepseek-v2-236b", "zamba2-1.2b",
+    "qwen2-vl-2b", "qwen3-8b", "gemma3-1b", "granite-3-8b",
+    "llama3-405b", "mamba2-130m", "seamless-m4t-large-v2",
+]
+
+RESULTS_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "benchmarks", "results", "dryrun.json")
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> Dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    record: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "n_chips": int(n_chips)}
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cells_lib.cell_supported(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return record
+
+    try:
+        cell = cells_lib.build_cell(arch, shape_name, mesh)
+        lowered = cells_lib.lower_cell(cell, mesh)
+        compiled = lowered.compile()
+
+        mem = compiled.memory_analysis()
+        xla_cost = compiled.cost_analysis()
+        # Loop-aware per-device cost (XLA's cost_analysis counts scan
+        # bodies once — useless for 126-layer models; see hlo_cost.py).
+        cost = hlo_cost.analyze(compiled.as_text())
+
+        flops = float(cost.flops)
+        bytes_acc = float(cost.bytes_min)   # fused-ideal (TPU-like) bound
+        bytes_max = float(cost.bytes)       # CPU-fusion-boundary bound
+        coll = {k: int(v) for k, v in cost.coll.items()}
+        coll_total = int(cost.coll_bytes)
+        terms = hlo.roofline_terms(flops, bytes_acc, coll_total, n_chips)
+        terms["t_memory_max"] = bytes_max / hlo.HBM_BW
+        mflops = cells_lib.model_flops(cfg, shape)
+        total_p, active_p = cells_lib.count_params(cfg)
+
+        record.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            memory=dict(
+                argument_bytes=int(getattr(mem, "argument_size_in_bytes",
+                                           0)),
+                output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+                temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+                generated_code_bytes=int(getattr(
+                    mem, "generated_code_size_in_bytes", 0)),
+            ),
+            flops_per_device=flops,
+            bytes_per_device=bytes_acc,
+            bytes_per_device_max=bytes_max,
+            collective_bytes=coll,
+            collective_total=coll_total,
+            unknown_trip_loops=int(cost.unknown_loops),
+            xla_flops_body_once=float(xla_cost.get("flops", 0.0)),
+            roofline=terms,
+            dominant=hlo.dominant_term(terms),
+            model_flops_global=mflops,
+            model_flops_per_device=mflops / n_chips,
+            useful_ratio=(mflops / n_chips) / flops if flops else 0.0,
+            params_total=total_p,
+            params_active=active_p,
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    return record
+
+
+def append_result(record: Dict, path: str = RESULTS_PATH) -> None:
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    data = []
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    # replace any previous record for the same cell
+    key = (record["arch"], record["shape"], record["mesh"])
+    data = [r for r in data
+            if (r["arch"], r["shape"], r["mesh"]) != key]
+    data.append(record)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh_kind)
+                append_result(rec, args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" dom={rec['dominant']}"
+                             f" t={rec['roofline']}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    n_fail += 1
+                    extra = " " + rec["error"][:200]
+                print(f"[{mesh_kind}] {arch} x {shape_name}: "
+                      f"{status}{extra}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+cost_analysis() provides HLO FLOPs / bytes accessed; collective traffic is
+not in cost_analysis, so we parse the (post-SPMD-partitioning, per-device)
+optimized HLO text and sum the *result* bytes of every collective op —
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Result bytes are the standard proxy for wire bytes per device (all-gather
+output == gathered bytes received; all-reduce moves ~2x in a ring, which we
+note rather than model).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. f32[16,128]{1,0} or bf16[8,4096,128]
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<async>-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes, from one device's optimized HLO.
+
+    Sync ops are counted at the op; async pairs are counted at the -done
+    (whose result is the actual communicated tensor; the -start result is
+    a buffer tuple that would double count).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("async") == "-start":
+            continue
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(m.group("result")))
+        out[m.group("kind")] += nbytes
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: int, n_chips: int) -> Dict[str, float]:
+    """Three roofline terms in seconds. Inputs are per-device values from
+    the SPMD module (cost_analysis of the partitioned program)."""
+    return {
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_accessed / HBM_BW,
+        "t_collective": coll_bytes / ICI_BW,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("t_compute", "t_memory", "t_collective"),
+               key=lambda k: terms[k])

@@ -1,0 +1,339 @@
+"""Loop-aware cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's built-in cost_analysis counts every computation ONCE — a lax.scan
+over 126 layers reports one layer of FLOPs (verified empirically; see
+EXPERIMENTS.md §Dry-run methodology). Since the whole model zoo is
+scan-based, we re-derive per-device costs from the compiled module text:
+
+  cost(entry) = sum over instructions of
+      local_cost(inst) + trip_count(inst) * cost(called_computation)
+
+Trip counts come from the `backend_config={"known_trip_count":{"n":...}}`
+annotation XLA attaches to canonicalized while loops (always present for
+lax.scan/fori_loop with static bounds). Conditionals take the max branch.
+
+Local costs follow XLA's HloCostAnalysis conventions:
+  * dot: 2 * prod(result_dims) * prod(contracting_dims) FLOPs
+  * elementwise / reduce: result (resp. operand) element count
+  * bytes: operands + result, except {dynamic-}slice/gather-style ops,
+    which touch only the sliced window, and fusions, whose internal ops
+    contribute FLOPs but not bytes (XLA's fusion-boundary convention)
+  * collectives: result bytes, tallied by kind (this is the wire-bytes
+    proxy used by the roofline's collective term)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]\w*?)\[([\d,]*)\](?:\{[^}]*\})?")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(
+    r"(?:branch_computations|true_computation|false_computation)="
+    r"\{?%?([\w.\-,% ]+)\}?")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_SLICE_LIKE = {"dynamic-slice", "slice", "gather", "dynamic-update-slice",
+               "scatter"}
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "rng-bit-generator", "custom-call", "reshape"}
+
+
+@dataclasses.dataclass
+class Shape:
+    nbytes: int
+    elems: int
+    dims_list: List[List[int]]  # per tuple component
+
+
+def _parse_shape(text: str) -> Shape:
+    nbytes = 0
+    elems = 0
+    dims_list = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        n = 1
+        for x in d:
+            n *= x
+        nbytes += n * _DTYPE_BYTES[dtype]
+        elems += n
+        dims_list.append(d)
+    return Shape(nbytes, elems, dims_list)
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    shape: Shape
+    op: str
+    rest: str           # everything after the opening paren
+    operands: List[str]
+    called: List[str]
+    trip: int
+    is_cond: bool
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    insts: List[Inst]
+    symbols: Dict[str, Shape]
+    is_entry: bool
+
+
+def _parse_operands(rest: str) -> List[str]:
+    # operand list = up to the matching close paren of the op
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND_RE.findall(rest[:i])
+    return _OPERAND_RE.findall(rest)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{",
+                          stripped)
+        if header and not stripped.startswith("//"):
+            cur = Computation(name=header.group(2), insts=[], symbols={},
+                              is_entry=bool(header.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        name, shape_txt, op, rest = m.groups()
+        shape = _parse_shape(shape_txt)
+        called = _CALL_ATTR_RE.findall(rest)
+        branches = _COND_BRANCHES_RE.findall(rest)
+        if branches:
+            called += [b.strip().lstrip("%") for b in branches[0].split(",")]
+        trip_m = _TRIP_RE.search(rest)
+        inst = Inst(name=name, shape=shape, op=op, rest=rest,
+                    operands=_parse_operands(rest), called=called,
+                    trip=int(trip_m.group(1)) if trip_m else 1,
+                    is_cond=(op == "conditional"))
+        cur.symbols[name] = shape
+        cur.insts.append(inst)
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    """bytes = fusion-boundary traffic of the *CPU-optimized* module (an
+    upper bound for TPU, whose fusion is more aggressive); bytes_min =
+    dot/reduce/collective/copy/slice traffic only, i.e. a perfectly-fused
+    lower bound. TPU reality sits between; the roofline reports both."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_min: float = 0.0
+    gather_elems: float = 0.0   # elements moved by gather ops (TPU-hostile)
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.bytes_min += other.bytes_min * scale
+        self.gather_elems += other.gather_elems * scale
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * scale
+        self.unknown_loops += other.unknown_loops
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _dot_flops(inst: Inst, comp: Computation) -> float:
+    contract = 1
+    m = _CONTRACT_RE.search(inst.rest)
+    if m and inst.operands:
+        lhs = comp.symbols.get(inst.operands[0])
+        if lhs and lhs.dims_list:
+            dims = lhs.dims_list[0]
+            for i_str in (m.group(1).split(",") if m.group(1) else []):
+                i = int(i_str)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * inst.shape.elems * contract
+
+
+def _operand_bytes(inst: Inst, comp: Computation) -> float:
+    total = 0
+    for o in inst.operands:
+        s = comp.symbols.get(o)
+        if s:
+            total += s.nbytes
+    return float(total)
+
+
+def _local_cost(inst: Inst, comp: Computation, in_fusion: bool) -> Cost:
+    c = Cost()
+    op = inst.op
+    if op in _FREE_OPS:
+        return c
+    if op == "dot":
+        c.flops = _dot_flops(inst, comp)
+        c.bytes_min = _operand_bytes(inst, comp) + inst.shape.nbytes
+        if not in_fusion:
+            c.bytes = c.bytes_min
+        return c
+    if op == "convolution":
+        # 2 * result elems * kernel elems / out_features (approx; convs
+        # appear only in the DSP pipeline cells)
+        kern = comp.symbols.get(inst.operands[1]) if len(
+            inst.operands) > 1 else None
+        k_elems = kern.elems if kern else 1
+        out_feat = inst.shape.dims_list[0][1] if (
+            inst.shape.dims_list and len(inst.shape.dims_list[0]) > 1) else 1
+        c.flops = 2.0 * inst.shape.elems * max(k_elems // max(out_feat, 1),
+                                               1)
+        c.bytes_min = _operand_bytes(inst, comp) + inst.shape.nbytes
+        if not in_fusion:
+            c.bytes = c.bytes_min
+        return c
+    for kind in _COLLECTIVES:
+        if op == kind or op == f"{kind}-start":
+            c.coll[kind] = float(inst.shape.nbytes)
+            if op.endswith("-start"):
+                c.coll[kind] /= 2.0  # start tuple ~ (input, output)
+            c.bytes = 0.0 if in_fusion else float(inst.shape.nbytes)
+            c.bytes_min = c.coll[kind]
+            return c
+        if op == f"{kind}-done":
+            return c
+    if op in _SLICE_LIKE:
+        # Traffic is the *window*, not the full buffer. For update-style
+        # ops the result shape IS the full buffer, so use the update
+        # operand's size (DUS: operand 1; scatter: operand 2).
+        if op == "dynamic-update-slice":
+            upd = (comp.symbols.get(inst.operands[1])
+                   if len(inst.operands) > 1 else None)
+            window = upd.nbytes if upd else inst.shape.nbytes
+            c.flops = float(upd.elems) if upd else inst.shape.elems
+        elif op == "scatter":
+            upd = (comp.symbols.get(inst.operands[2])
+                   if len(inst.operands) > 2 else None)
+            window = upd.nbytes if upd else inst.shape.nbytes
+            c.flops = float(upd.elems) if upd else inst.shape.elems
+        else:
+            window = inst.shape.nbytes
+            c.flops = inst.shape.elems
+            if op == "gather":
+                c.gather_elems = float(inst.shape.elems)
+        c.bytes_min = 2.0 * window
+        if not in_fusion:
+            c.bytes = c.bytes_min
+        return c
+    if op in ("while", "conditional", "fusion", "call", "reduce",
+              "sort", "map"):
+        # flops/bytes come from the called computation(s); at the call
+        # site only the data movement counts.
+        if not in_fusion and op in ("fusion", "reduce", "sort", "map"):
+            c.bytes = _operand_bytes(inst, comp) + inst.shape.nbytes
+        if op == "reduce":
+            op0 = (comp.symbols.get(inst.operands[0])
+                   if inst.operands else None)
+            c.flops = float(op0.elems) if op0 else 0.0
+            c.bytes_min = (float(op0.nbytes) if op0 else 0.0) + \
+                inst.shape.nbytes
+        return c
+    # generic elementwise / copy / compare / select / convert ...
+    c.flops = float(inst.shape.elems)
+    if op == "copy":
+        c.bytes_min = 2.0 * inst.shape.nbytes
+    if not in_fusion:
+        c.bytes = _operand_bytes(inst, comp) + inst.shape.nbytes
+    return c
+
+
+def analyze(text: str) -> Cost:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return Cost()
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        total = Cost()
+        memo[key] = total  # guards (benign) recursion
+        if comp is None:
+            return total
+        for inst in comp.insts:
+            total.add(_local_cost(inst, comp, in_fusion))
+            if not inst.called:
+                continue
+            child_fusion = in_fusion or inst.op == "fusion"
+            if inst.is_cond:
+                branches = [comp_cost(b, child_fusion)
+                            for b in inst.called]
+                if branches:
+                    worst = max(branches, key=lambda b: b.flops + b.bytes)
+                    total.add(worst)
+            else:
+                scale = float(inst.trip) if inst.op == "while" else 1.0
+                if inst.op == "while" and "known_trip_count" not in \
+                        inst.rest:
+                    total.unknown_loops += 1
+                for child in inst.called:
+                    total.add(comp_cost(child, child_fusion), scale)
+        memo[key] = total
+        return total
+
+    return comp_cost(entry.name, False)
+
+
+def analyze_compiled(compiled) -> Cost:
+    return analyze(compiled.as_text())
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        cost = analyze(f.read())
+    print(json.dumps({"flops": cost.flops, "bytes": cost.bytes,
+                      "bytes_min": cost.bytes_min,
+                      "gather_elems": cost.gather_elems,
+                      "collectives": cost.coll,
+                      "unknown_loops": cost.unknown_loops}, indent=2))

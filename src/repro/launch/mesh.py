@@ -1,0 +1,43 @@
+"""Production meshes and logical-axis bindings.
+
+Single pod:  (data=16, model=16)        — 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16) — 512 chips
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; only the dry-run / launchers
+call it, after setting XLA_FLAGS for placeholder devices where needed.
+
+The `pod` axis composes with data parallelism by default (gradient
+all-reduce crosses the DCN once per step); ParallelConfig.pod_axis_role
+can repurpose it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ParallelConfig
+from repro.runtime import sharding as shlib
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for in-process sharding tests (host device count
+    permitting)."""
+    return jax.make_mesh(shape, axes)
+
+
+def binding_for(mesh, parallel: Optional[ParallelConfig] = None,
+                ) -> shlib.Binding:
+    parallel = parallel or ParallelConfig()
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = (shlib.MULTI_POD_RULES if "pod" in mesh.axis_names
+             else shlib.SINGLE_POD_RULES)
+    return shlib.Binding(rules, axis_sizes, fsdp=parallel.fsdp)

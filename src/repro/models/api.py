@@ -1,0 +1,68 @@
+"""Uniform model API: one entry point for all 10 architectures.
+
+`get_model(cfg)` returns a `Model` whose methods close over the config:
+  init_params(key)                  -> params pytree
+  loss_fn(params, batch)            -> (scalar loss, metrics)
+  forward(params, batch)            -> (hidden, aux)
+  prefill(params, batch)            -> (logits, cache)
+  init_cache(batch, max_len, ...)   -> cache pytree
+  decode_step(params, tokens, cache, lengths) -> (logits, cache)
+  cache_specs(seq_sharded=...)      -> logical sharding axes for the cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, mamba_lm, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable
+    forward: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+    cache_specs: Callable
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba_lm,
+    "hybrid": hybrid,
+    "audio": encdec,
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+    return Model(
+        cfg=cfg,
+        init_params=functools.partial(_flip(mod.init_params), cfg=cfg),
+        loss_fn=functools.partial(_with_cfg(mod.loss_fn), cfg),
+        forward=functools.partial(_with_cfg(mod.forward), cfg),
+        prefill=functools.partial(_with_cfg(mod.prefill), cfg),
+        init_cache=functools.partial(mod.init_cache, cfg),
+        decode_step=functools.partial(_with_cfg(mod.decode_step), cfg),
+        cache_specs=functools.partial(mod.cache_specs, cfg),
+    )
+
+
+def _flip(fn):
+    def wrapped(key, *, cfg):
+        return fn(cfg, key)
+    return wrapped
+
+
+def _with_cfg(fn):
+    def wrapped(cfg, params, *args, **kwargs):
+        return fn(params, cfg, *args, **kwargs)
+    return wrapped

@@ -1,0 +1,519 @@
+"""Attention: GQA (+qk-norm, sliding window), MLA, KV-cache variants.
+
+Three execution paths, all one codebase (the paper's portability contract):
+  * train/prefill — `chunked_attention`: lax.scan over query blocks, scores
+    never materialized at (S x S); safe to lower at 32k and beyond.
+  * decode — single-query attention over the cache; per-slot lengths
+    (continuous-batching style). The cache *update* ships in the paper's
+    V1 (dynamic_update_slice) and V2 (one-hot blend — pure CNN ops)
+    variants, selectable per config (`kv_variant`).
+  * optional Pallas flash kernel for prefill (config.use_flash_kernel).
+
+Long-context decode (long_500k) relies on the cache being sharded along the
+sequence axis; reductions over that axis (softmax max/sum, weighted sum)
+are handled by the SPMD partitioner as cross-shard collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.config import Variant
+from repro.models import common
+from repro.models.common import KeyGen, dense_init
+from repro.runtime import sharding as shlib
+from repro.runtime.sharding import shard
+
+
+def _heads_shardable(cfg: ModelConfig) -> bool:
+    binding = shlib.current_binding()
+    if binding is None:
+        return True
+    ext = binding.extent(binding.rules.get("model", ()))
+    return ext <= 1 or cfg.n_heads % ext == 0
+
+
+def _attn_fallback_shard(x):
+    """Hard batch-over-whole-mesh constraint iff the batch dim divides."""
+    binding = shlib.current_binding()
+    if binding is None:
+        return x
+    ext = binding.extent(binding.rules.get("attn_batch", ()))
+    if ext > 1 and x.shape[0] % ext == 0:
+        return shard(x, "attn_batch", *([None] * (x.ndim - 1)))
+    return x
+
+
+def _post_rope_shard(cfg: ModelConfig, t):
+    """Constraint on rotated q/k (rope's replicated cos/sin otherwise
+    propagate replication onto them — full-tensor f32 gathers per layer).
+
+    Head-sharded archs: pin only batch (UNCONSTRAINED heads keep TP).
+    attn-batch-fallback archs: hard batch pin (replicated elsewhere) —
+    the soft variant let the partitioner choose layouts that regressed
+    train cells 5x (§Perf log). Replicated-attention archs (heads don't
+    divide, fallback off — gemma3/qwen2-vl): NO pin; their attention is
+    replicated anyway, and any pin inserts per-layer reshards (measured
+    2x on gemma3 prefill).
+    """
+    if _heads_shardable(cfg):
+        return shlib.shard_pin(t, d0="batch")
+    if cfg.attn_batch_fallback:
+        return shard(t, "batch", *([None] * (t.ndim - 1)))
+    return t
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def attn_params(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(kg(), (d, h * dh), dtype),
+        "wk": dense_init(kg(), (d, hkv * dh), dtype),
+        "wv": dense_init(kg(), (d, hkv * dh), dtype),
+        "wo": dense_init(kg(), (h * dh, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_params(dh, dtype)
+        p["k_norm"] = common.rmsnorm_params(dh, dtype)
+    return p
+
+
+def mla_params(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p = {
+        "wq_a": dense_init(kg(), (d, cfg.q_lora_rank), dtype),
+        "q_norm": common.rmsnorm_params(cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(kg(), (cfg.q_lora_rank, h * (dn + dr)), dtype),
+        "wkv_a": dense_init(kg(), (d, cfg.kv_lora_rank + dr), dtype),
+        "kv_norm": common.rmsnorm_params(cfg.kv_lora_rank, dtype),
+        "wk_b": dense_init(kg(), (cfg.kv_lora_rank, h * dn), dtype),
+        "wv_b": dense_init(kg(), (cfg.kv_lora_rank, h * dv), dtype),
+        "wo": dense_init(kg(), (h * dv, d), dtype),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Masks (additive bias, built per query chunk — never (S x S) at once)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_bias(q_start, bq: int, kv_len: int, *, causal: bool,
+                window, q_offset) -> jnp.ndarray:
+    """(bq, kv_len) additive bias for queries [q_start, q_start+bq).
+
+    `window` may be a *traced* scalar (gemma3's local/global layers share one
+    scanned block body); window <= 0 means unbounded.
+    """
+    rows = q_offset + q_start + lax.broadcasted_iota(
+        jnp.int32, (bq, kv_len), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (bq, kv_len), 1)
+    ok = jnp.ones((bq, kv_len), dtype=bool)
+    if causal:
+        ok &= cols <= rows
+    w = jnp.asarray(window, dtype=jnp.int32)
+    weff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+    ok &= cols > rows - weff
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window=0,
+                      q_offset: int | jnp.ndarray = 0,
+                      chunk: int = 512,
+                      softcap: float = 0.0,
+                      pin_batch_only: bool = False) -> jnp.ndarray:
+    """(B,S,H,dh) x (B,Sk,Hkv,dh)^2 -> (B,S,H,dh); scores blockwise only.
+
+    GQA is expressed by reshaping q heads into (Hkv, rep) groups so no kv
+    duplication is materialized.
+
+    pin_batch_only: hard-pin operands batch-sharded/replicated-elsewhere.
+    Used by replicated-attention archs (heads don't divide the model
+    axis): without it the partitioner shards the d_head *contraction*
+    dim and all-reduces the (bq x Sk) scores of every chunk — measured
+    at 223 GB/device on gemma3 prefill_32k.
+    """
+    b, s, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = h // hkv
+    scale = dh ** -0.5
+
+    bq = min(chunk, s)
+    pad = (-s) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // bq
+    qc = q.reshape(b, nq, bq, hkv, rep, dh).transpose(1, 0, 3, 4, 2, 5)
+    # qc: (nq, B, Hkv, rep, bq, dh)
+
+    # storage-dtype operands + f32 accumulation (no f32 copies of K/V)
+    kt = k.transpose(0, 2, 1, 3)                       # (B, Hkv, Sk, dh)
+    vt = v.transpose(0, 2, 1, 3)
+    if pin_batch_only:
+        qc = shard(qc, None, "batch", None, None, None, None)
+        kt = shard(kt, "batch", None, None, None)
+        vt = shard(vt, "batch", None, None, None)
+
+    def one_chunk(ci, q_blk):
+        # q_blk: (B, Hkv, rep, bq, dh)
+        s_blk = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, kt,
+                           preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s_blk = jnp.tanh(s_blk / softcap) * softcap
+        bias = _chunk_bias(ci * bq, bq, sk, causal=causal, window=window,
+                           q_offset=q_offset)
+        s_blk = s_blk + bias[None, None, None]
+        p = jax.nn.softmax(s_blk, axis=-1)
+        return jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(vt.dtype), vt,
+                          preferred_element_type=jnp.float32)
+
+    out = lax.map(lambda args: one_chunk(*args),
+                  (jnp.arange(nq), qc))                # (nq,B,Hkv,rep,bq,dh)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * bq, h, dh)
+    return out[:, :s].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache update: the paper's V1 (dynamic) vs V2 (one-hot CNN) variants
+# ---------------------------------------------------------------------------
+
+
+def cache_update(cache: jnp.ndarray, new: jnp.ndarray,
+                 lengths: jnp.ndarray, variant: Variant) -> jnp.ndarray:
+    """Write `new` (B, 1, H, dh) into cache (B, S, H, dh) at per-slot index.
+
+    V1 DYNAMIC: per-batch dynamic_update_slice (gather/scatter addressing).
+    V2 CNN:     one-hot blend — cache*(1-m) + new*m with m built from iota;
+                pure pointwise arithmetic, the paper's portable formulation.
+    """
+    b, s = cache.shape[0], cache.shape[1]
+    if variant == Variant.DYNAMIC:
+        def upd(c1, n1, p1):
+            return lax.dynamic_update_slice_in_dim(c1, n1, p1, axis=0)
+        return jax.vmap(upd)(cache, new, lengths)
+    # CNN variant (also used for SPARSE at this op: no blocked structure to
+    # exploit for a single-position write).
+    iota = lax.broadcasted_iota(jnp.int32, (b, s), 1)
+    m = (iota == lengths[:, None]).astype(cache.dtype)[..., None, None]
+    return cache * (1.0 - m) + new.astype(cache.dtype) * m
+
+
+def stacked_cache_update(cache: jnp.ndarray, new: jnp.ndarray,
+                         lengths: jnp.ndarray, layer_idx,
+                         variant: Variant) -> jnp.ndarray:
+    """Write `new` (B,1,H,dh) into a layer-stacked cache (L,B,S,H,dh) at
+    (layer_idx, :, lengths[b]) — token-granular, so a scan-carried cache
+    costs one window write per layer instead of a full-layer rewrite
+    (§Perf iteration 2: 3.4x decode HBM-bytes reduction).
+
+    V1 DYNAMIC: per-batch DUS window (1,1,H,dh).
+    V2 CNN:     (L,S) one-hot blend — touches the whole buffer by
+                construction (the paper's portability-for-traffic trade,
+                now visible at cache scale).
+    """
+    l, b, s = cache.shape[0], cache.shape[1], cache.shape[2]
+    if variant == Variant.DYNAMIC:
+        # One scatter with B token-windows; expressible in-place, so the
+        # scan carry aliases (a vmap-of-DUS here defeats aliasing and
+        # copies the whole cache every layer — measured, not theoretical).
+        rows = jnp.broadcast_to(jnp.asarray(layer_idx, jnp.int32), (b,))
+        return cache.at[rows, jnp.arange(b, dtype=jnp.int32),
+                        lengths].set(new[:, 0].astype(cache.dtype),
+                                     mode="drop")
+    iota_l = lax.broadcasted_iota(jnp.int32, (l, b, s), 0)
+    iota_s = lax.broadcasted_iota(jnp.int32, (l, b, s), 2)
+    m = ((iota_l == layer_idx) &
+         (iota_s == lengths[None, :, None])).astype(cache.dtype)
+    m = m[..., None, None]
+    return cache * (1.0 - m) + new[None].astype(cache.dtype) * m
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single query vs cache, per-slot lengths)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                     window=0,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    """q (B,1,H,dh); caches (B,S,Hkv,dh); lengths (B,) current position.
+
+    Attends to cols <= lengths[b] (the new token was just written there).
+    Softmax reductions run over the cache's sequence axis; if that axis is
+    sharded, the partitioner inserts the cross-shard collectives
+    (flash-decode-style partial softmax, derived automatically).
+    """
+    b, _, h, dh = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    rep = h // hkv
+    scale = dh ** -0.5
+
+    # Cache operands stay in their storage dtype (bf16); accumulation is
+    # f32 via preferred_element_type. Casting the cache would materialize
+    # (and re-shard) a 2x-size copy — measured as the dominant collective
+    # AND memory cost of the decode cells (EXPERIMENTS.md §Perf).
+    qg = q.reshape(b, hkv, rep, dh)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+
+    cols = lax.broadcasted_iota(jnp.int32, (b, s), 1)
+    ok = cols <= lengths[:, None]
+    w = jnp.asarray(window, dtype=jnp.int32)
+    weff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+    ok &= cols > (lengths[:, None] - weff)
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA attention block (projections + rope + attention + out-proj)
+# ---------------------------------------------------------------------------
+
+
+def gqa_project_qkv(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, is_local=None,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, hkv, dh)
+    v = (x @ params["wv"]).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = common.rmsnorm(params["q_norm"], q)
+        k = common.rmsnorm(params["k_norm"], k)
+
+    def rope(t):
+        out = common.apply_rope(t, positions, cfg.rope_theta,
+                                cfg.mrope_sections)
+        if cfg.rope_local_theta and is_local is not None:
+            # gemma3: local layers use a different rope base; is_local is a
+            # traced scalar (one scanned body serves both layer kinds).
+            loc = common.apply_rope(t, positions, cfg.rope_local_theta,
+                                    cfg.mrope_sections)
+            out = jnp.where(is_local, loc, out)
+        return _post_rope_shard(cfg, out)
+
+    return rope(q), rope(k), v
+
+
+def gqa_attention(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, *, window=0, is_local=None,
+                  cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                  causal: bool = True, return_kv: bool = False):
+    """Train/prefill self- (or cross-) attention over full sequences."""
+    q, k, v = gqa_project_qkv(params, cfg, x, positions, is_local)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    if _heads_shardable(cfg):
+        q = shard(q, "batch", None, "model", None)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+    elif cfg.attn_batch_fallback:
+        # Heads don't divide the model axis: fold the model axis into the
+        # batch dim so attention runs once across the full mesh instead
+        # of replicated 16x. Hard constraint (soft variants measurably
+        # regress); opt-in per config — see attn_batch_fallback.
+        q = _attn_fallback_shard(q)
+        k = _attn_fallback_shard(k)
+        v = _attn_fallback_shard(v)
+    static_window = isinstance(window, int) and window == 0
+    if (cfg.use_flash_kernel and causal and static_window
+            and cross_kv is None):
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=True)
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk,
+            softcap=cfg.attn_logit_softcap,
+            pin_batch_only=(not _heads_shardable(cfg)
+                            and not cfg.attn_batch_fallback))
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, -1) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode_stacked(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                       cache: Dict, lengths: jnp.ndarray, layer_idx, *,
+                       window=0, is_local=None) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against a layer-stacked carried cache.
+
+    cache: {"k","v"} of (L,B,S,hkv,dh). Writes one token window at
+    (layer_idx, :, lengths[b]), then attends against the layer's slice.
+    """
+    b = x.shape[0]
+    positions = lengths[:, None]
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(lengths[:, None, None], (b, 3, 1))
+    q, k, v = gqa_project_qkv(params, cfg, x, positions, is_local)
+    k_full = stacked_cache_update(cache["k"], k, lengths, layer_idx,
+                                  cfg.kv_variant)
+    v_full = stacked_cache_update(cache["v"], v, lengths, layer_idx,
+                                  cfg.kv_variant)
+    k_l = lax.dynamic_index_in_dim(k_full, layer_idx, 0, keepdims=False)
+    v_l = lax.dynamic_index_in_dim(v_full, layer_idx, 0, keepdims=False)
+    out = decode_attention(q, k_l, v_l, lengths, window=window,
+                           softcap=cfg.attn_logit_softcap)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    return y, {"k": k_full, "v": v_full}
+
+
+def gqa_decode(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               cache: Dict, lengths: jnp.ndarray, *, window=0,
+               is_local=None) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode with cache update. x: (B, 1, D)."""
+    b = x.shape[0]
+    positions = lengths[:, None]  # (B, 1)
+    if cfg.mrope_sections:
+        # text continuation: all three M-RoPE axes advance with the token
+        positions = jnp.broadcast_to(lengths[:, None, None], (b, 3, 1))
+    q, k, v = gqa_project_qkv(params, cfg, x, positions, is_local)
+    k_cache = cache_update(cache["k"], k, lengths, cfg.kv_variant)
+    v_cache = cache_update(cache["v"], v, lengths, cfg.kv_variant)
+    out = decode_attention(q, k_cache, v_cache, lengths, window=window,
+                           softcap=cfg.attn_logit_softcap)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank compressed KV, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv_expand(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    ql = common.rmsnorm(params["q_norm"], x @ params["wq_a"])
+    q = (ql @ params["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = _post_rope_shard(
+        cfg, common.apply_rope(q_rope, positions, cfg.rope_theta))
+
+    kv = x @ params["wkv_a"]                       # (B,S, rank+dr)
+    c_kv = common.rmsnorm(params["kv_norm"], kv[..., :cfg.kv_lora_rank])
+    k_rope = _post_rope_shard(
+        cfg, common.apply_rope(kv[..., None, cfg.kv_lora_rank:], positions,
+                               cfg.rope_theta))    # (B,S,1,dr) shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, *, return_kv: bool = False):
+    """Train/prefill MLA with expanded keys/values (chunk-safe einsums)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_expand(params, cfg, x, positions)
+    k_nope = (c_kv @ params["wk_b"]).reshape(b, s, h, dn)
+    v = (c_kv @ params["wv_b"]).reshape(b, s, h, dv)
+    # Pack rope/nope into one head dim so chunked_attention applies.
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, s, h, dr))], axis=-1)
+    # v has a different head dim; pad to match for the shared kernel, then
+    # slice (cheap, fused by XLA).
+    dh = dn + dr
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dh - dv)))
+    out = chunked_attention(q, k, v_pad, causal=True, chunk=cfg.attn_chunk)
+    out = out[..., :dv]
+    y = out.reshape(b, s, -1) @ params["wo"]
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               cache: Dict, lengths: jnp.ndarray, layer_idx=None,
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed-weight MLA decode: attention runs in the compressed space.
+
+    Cache holds only (c_kv, k_rope) — the MLA memory saving (the reason
+    deepseek-v2 fits a 128-slot 32k cache in ~100 MB/device). With
+    layer_idx given, the cache is the layer-stacked carry and updates are
+    token-granular (see stacked_cache_update).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    positions = lengths[:, None]
+
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_expand(params, cfg, x, positions)
+    if layer_idx is not None:
+        ckv_full = stacked_cache_update(
+            cache["c_kv"][..., None, :], c_kv[..., None, :], lengths,
+            layer_idx, cfg.kv_variant)[..., 0, :]
+        rope_full = stacked_cache_update(cache["k_rope"], k_rope, lengths,
+                                         layer_idx, cfg.kv_variant)
+        ckv_cache = lax.dynamic_index_in_dim(ckv_full, layer_idx, 0,
+                                             keepdims=False)
+        rope_cache = lax.dynamic_index_in_dim(rope_full, layer_idx, 0,
+                                              keepdims=False)
+    else:
+        ckv_cache = cache_update(
+            cache["c_kv"][..., None, :], c_kv[..., None, :],
+            lengths, cfg.kv_variant)[..., 0, :]
+        rope_cache = cache_update(cache["k_rope"], k_rope, lengths,
+                                  cfg.kv_variant)
+
+    # Absorb wk_b into the query: q_eff (B,1,H,rank). Cache operands stay
+    # bf16; accumulate f32 (no f32 cache copies — see decode_attention).
+    wk_b = params["wk_b"].reshape(rank, h, dn)
+    q_eff = jnp.einsum("bohd,rhd->bohr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32)
+    scale = (dn + dr) ** -0.5
+    s_nope = jnp.einsum("bohr,bsr->bhs", q_eff.astype(ckv_cache.dtype),
+                        ckv_cache, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bohd,bsod->bhs", q_rope, rope_cache,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+
+    slen = ckv_cache.shape[1]
+    cols = lax.broadcasted_iota(jnp.int32, (b, slen), 1)
+    ok = cols <= lengths[:, None]
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, :]
+    p = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_cache.dtype), ckv_cache,
+                     preferred_element_type=jnp.float32)
+    wv_b = params["wv_b"].reshape(rank, h, dv)
+    out = jnp.einsum("bhr,rhv->bhv", ctx.astype(wv_b.dtype), wv_b,
+                     preferred_element_type=jnp.float32)
+    y = out.reshape(b, 1, h * dv).astype(x.dtype) @ params["wo"]
+    if layer_idx is not None:
+        new_cache = {"c_kv": ckv_full, "k_rope": rope_full}
+    else:
+        new_cache = {"c_kv": ckv_cache, "k_rope": rope_cache}
+    return y, new_cache

@@ -1,0 +1,183 @@
+"""Shared building blocks: init helpers, norms, RoPE (incl. M-RoPE), MLP.
+
+Parameters are plain nested dicts of jnp arrays (pytrees). Layer stacks are
+stored with a leading layer axis and executed with lax.scan so the lowered
+HLO is depth-independent (critical for 126-layer dry-runs).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import shard_pin
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+class KeyGen:
+    """Sequential PRNG splitter for readable init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Sequence[int] = ()) -> jnp.ndarray:
+    """Rotary embedding, computed on the fly (no precomputed tables).
+
+    x: (B, S, H, D); positions: (B, S) int32, or (B, 3, S) for M-RoPE
+    (temporal/height/width position triplets, qwen2-vl style). With M-RoPE,
+    `mrope_sections` gives the per-axis split of D/2 frequency slots.
+    """
+    b, s, h, d = x.shape
+    half = d // 2
+    inv = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)  # (half,)
+
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (B, 3, S) positions"
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        # Each frequency slot takes its position from one of the 3 axes.
+        sect = np.repeat(np.arange(len(mrope_sections)),
+                         mrope_sections)                      # (half,)
+        sect = jnp.asarray(sect)
+        pos = positions.astype(jnp.float32)                   # (B, 3, S)
+        pos_per_slot = jnp.take_along_axis(
+            pos, jnp.broadcast_to(sect[None, :, None], (b, half, s)).astype(
+                jnp.int32), axis=1)                           # (B, half, S)
+        ang = pos_per_slot.transpose(0, 2, 1) * inv[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, half)
+
+    cos = jnp.cos(ang)[:, :, None, :]                         # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    # NOTE: callers constrain the rotated output (attention.py
+    # _post_rope_shard) — positions/cos/sin are replicated and would
+    # otherwise propagate "replicated" onto q/k (measured: full-tensor
+    # f32 all-gathers in every layer).
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(kg: KeyGen, d: int, ff: int, dtype) -> Dict:
+    return {
+        "wi_gate": dense_init(kg(), (d, ff), dtype),
+        "wi_up": dense_init(kg(), (d, ff), dtype),
+        "wo": dense_init(kg(), (ff, d), dtype),
+    }
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ params["wi_gate"])
+    up = x @ params["wi_up"]
+    return (gate * up) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_params(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    p = {"embedding": dense_init(kg(), (cfg.vocab_size, cfg.d_model), dtype,
+                                 scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kg(), (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_tokens(params: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def logits_from_hidden(params: Dict, cfg: ModelConfig,
+                       h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embedding"].T
+    else:
+        w = params["lm_head"]
+    # f32 logits for a stable softmax/loss.
+    return jnp.einsum("...d,dv->...v", h.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross entropy; logits (..., V) f32, labels (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def remat_policy_of(cfg):
+    """jax.checkpoint policy from ModelConfig.remat_policy."""
+    import jax
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable

@@ -1,0 +1,223 @@
+"""seamless-m4t-large-v2 backbone: encoder-decoder transformer.
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) from input_specs(). The
+decoder is a causal transformer with cross-attention; decode caches both
+its self-attention KV and the (static after encode) cross-attention KV.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common
+from repro.models.common import KeyGen, dtype_of
+from repro.runtime.sharding import shard
+
+
+def _enc_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "ln1": common.rmsnorm_params(cfg.d_model, dtype),
+        "attn": attention.attn_params(kg, cfg, dtype),
+        "ln2": common.rmsnorm_params(cfg.d_model, dtype),
+        "mlp": common.mlp_params(kg, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "ln1": common.rmsnorm_params(cfg.d_model, dtype),
+        "self_attn": attention.attn_params(kg, cfg, dtype),
+        "ln_x": common.rmsnorm_params(cfg.d_model, dtype),
+        "cross_attn": attention.attn_params(kg, cfg, dtype),
+        "ln2": common.rmsnorm_params(cfg.d_model, dtype),
+        "mlp": common.mlp_params(kg, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    kg = KeyGen(key)
+    enc_keys = jax.random.split(kg(), cfg.n_enc_layers)
+    dec_keys = jax.random.split(kg(), cfg.n_layers)
+    return {
+        "embed": common.embed_params(kg, cfg, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer(k, cfg, dtype))(enc_keys),
+        "enc_norm": common.rmsnorm_params(cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer(k, cfg, dtype))(dec_keys),
+        "final_norm": common.rmsnorm_params(cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params: Dict, cfg: ModelConfig, enc_embeds: jnp.ndarray,
+           ) -> jnp.ndarray:
+    """(B, S_enc, D) precomputed frame embeddings -> encoder states."""
+    h = shard(enc_embeds, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(hcur, lp):
+        a = attention.gqa_attention(
+            lp["attn"], cfg, common.rmsnorm(lp["ln1"], hcur), positions,
+            causal=False)
+        hcur = hcur + a
+        hcur = hcur + common.mlp_apply(
+            lp["mlp"], common.rmsnorm(lp["ln2"], hcur))
+        return hcur, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=common.remat_policy_of(cfg))
+    h, _ = lax.scan(body, h, params["enc_layers"])
+    return common.rmsnorm(params["enc_norm"], h)
+
+
+def cross_kv(params: Dict, cfg: ModelConfig, enc_out: jnp.ndarray):
+    """Per-decoder-layer cross K/V from encoder states (computed once)."""
+    b, s, _ = enc_out.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def per_layer(lp):
+        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, s, hkv, dh)
+        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, s, hkv, dh)
+        return k, v
+
+    return jax.vmap(per_layer)(params["dec_layers"])  # (L,B,S,hkv,dh) x2
+
+
+# ---------------------------------------------------------------------------
+# Decoder (teacher-forced training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _decoder(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+             xk: jnp.ndarray, xv: jnp.ndarray) -> jnp.ndarray:
+    h = common.embed_tokens(params["embed"], tokens)
+    h = shard(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(hcur, xs):
+        lp, xk_l, xv_l = xs
+        a = attention.gqa_attention(
+            lp["self_attn"], cfg, common.rmsnorm(lp["ln1"], hcur), positions)
+        hcur = hcur + a
+        c = attention.gqa_attention(
+            lp["cross_attn"], cfg, common.rmsnorm(lp["ln_x"], hcur),
+            positions, cross_kv=(xk_l, xv_l))
+        hcur = hcur + c
+        hcur = hcur + common.mlp_apply(
+            lp["mlp"], common.rmsnorm(lp["ln2"], hcur))
+        return hcur, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=common.remat_policy_of(cfg))
+    h, _ = lax.scan(body, h, (params["dec_layers"], xk, xv))
+    return common.rmsnorm(params["final_norm"], h)
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict,
+            ) -> Tuple[jnp.ndarray, Dict]:
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    xk, xv = cross_kv(params, cfg, enc_out)
+    h = _decoder(params, cfg, batch["tokens"], xk, xv)
+    return h, {}
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict):
+    h, _ = forward(params, cfg, batch)
+    logits = common.logits_from_hidden(params["embed"], cfg, h)
+    xent = common.softmax_xent(logits, batch["labels"],
+                               batch.get("loss_mask"))
+    return xent, {"xent": xent}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int) -> Dict:
+    dtype = dtype_of(cfg.compute_dtype)
+    L, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, hkv, dh), dtype),
+        "xk": jnp.zeros((L, batch, enc_len, hkv, dh), dtype),
+        "xv": jnp.zeros((L, batch, enc_len, hkv, dh), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig, *, seq_sharded: bool = False):
+    seq_ax = "seq" if seq_sharded else None
+    return {
+        "k": (None, "batch", seq_ax, "kv_heads", None),
+        "v": (None, "batch", seq_ax, "kv_heads", None),
+        "xk": (None, "batch", seq_ax, "kv_heads", None),
+        "xv": (None, "batch", seq_ax, "kv_heads", None),
+    }
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict):
+    """Encode + cross-KV: the enc-dec analogue of prompt prefill."""
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    xk, xv = cross_kv(params, cfg, enc_out)
+    b = enc_out.shape[0]
+    max_len = batch.get("dec_len", 256)
+    dtype = dtype_of(cfg.compute_dtype)
+    L, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    cache = {
+        "k": jnp.zeros((L, b, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((L, b, max_len, hkv, dh), dtype),
+        "xk": xk.astype(dtype), "xv": xv.astype(dtype),
+    }
+    bos = jnp.zeros((b, 1), dtype=jnp.int32)
+    logits, cache = decode_step(params, cfg, bos, cache,
+                                jnp.zeros((b,), jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: Dict, lengths: jnp.ndarray):
+    h = common.embed_tokens(params["embed"], tokens)
+    b = h.shape[0]
+    enc_len = cache["xk"].shape[2]
+    enc_lengths = jnp.full((b,), enc_len - 1, dtype=jnp.int32)
+
+    def body(hcur, xs):
+        lp, k_l, v_l, xk_l, xv_l = xs
+        a_in = common.rmsnorm(lp["ln1"], hcur)
+        a_out, new_kv = attention.gqa_decode(
+            lp["self_attn"], cfg, a_in, {"k": k_l, "v": v_l}, lengths)
+        hcur = hcur + a_out
+        # cross attention: single query vs static encoder KV
+        x_in = common.rmsnorm(lp["ln_x"], hcur)
+        q, _, _ = attention.gqa_project_qkv(
+            lp["cross_attn"], cfg, x_in, lengths[:, None])
+        c = attention.decode_attention(q, xk_l, xv_l, enc_lengths)
+        hcur = hcur + c.reshape(b, 1, -1) @ lp["cross_attn"]["wo"]
+        hcur = hcur + common.mlp_apply(
+            lp["mlp"], common.rmsnorm(lp["ln2"], hcur))
+        return hcur, (new_kv["k"], new_kv["v"])
+
+    h, (new_k, new_v) = lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = common.rmsnorm(params["final_norm"], h)
+    logits = common.logits_from_hidden(params["embed"], cfg, h)
+    new_cache = dict(cache, k=new_k, v=new_v)
+    return logits, new_cache

@@ -1,0 +1,217 @@
+"""zamba2-1.2b: Mamba2 trunk + a single *shared* attention block.
+
+Zamba2's signature trick: one set of attention weights, invoked after every
+`shared_attn_every` Mamba2 layers (6 invocations over a 38-layer trunk
+here). Each invocation has its own KV cache slot; the weights are shared.
+The Mamba2 trunk runs as segmented lax.scans over stacked params so HLO
+stays compact while the shared block sits between segments.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, ssm
+from repro.models.common import KeyGen, dtype_of
+from repro.runtime.sharding import shard
+
+
+def _segments(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """[(start, end)) mamba-layer segments; shared attn runs between them."""
+    step = cfg.shared_attn_every or cfg.n_layers
+    bounds = list(range(0, cfg.n_layers, step)) + [cfg.n_layers]
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
+def n_attn_invocations(cfg: ModelConfig) -> int:
+    return len(_segments(cfg)) - 1
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    kg = KeyGen(key)
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+
+    def one_layer(k):
+        kg_l = KeyGen(k)
+        return {"ln": common.rmsnorm_params(cfg.d_model, dtype),
+                "ssm": ssm.ssm_params(kg_l, cfg, dtype)}
+
+    layers = jax.vmap(one_layer)(layer_keys)
+    shared_kg = KeyGen(kg())
+    shared = {
+        "ln1": common.rmsnorm_params(cfg.d_model, dtype),
+        "attn": attention.attn_params(shared_kg, cfg, dtype),
+        "ln2": common.rmsnorm_params(cfg.d_model, dtype),
+        "mlp": common.mlp_params(shared_kg, cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": common.embed_params(kg, cfg, dtype),
+        "layers": layers,
+        "shared_attn": shared,
+        "final_norm": common.rmsnorm_params(cfg.d_model, dtype),
+    }
+
+
+def _slice_layers(layers: Dict, start: int, end: int) -> Dict:
+    return jax.tree.map(lambda a: a[start:end], layers)
+
+
+def _mamba_segment(cfg: ModelConfig, layers_seg: Dict, h: jnp.ndarray,
+                   collect_state: bool = False):
+    def body(hcur, lp):
+        if collect_state:
+            out, st = ssm.ssm_apply(
+                lp["ssm"], cfg, common.rmsnorm(lp["ln"], hcur),
+                return_state=True)
+            return hcur + out, st
+        out = ssm.ssm_apply(lp["ssm"], cfg, common.rmsnorm(lp["ln"], hcur))
+        return hcur + out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=common.remat_policy_of(cfg))
+    return lax.scan(body, h, layers_seg)
+
+
+def _shared_attn_block(cfg: ModelConfig, shared: Dict, h, positions,
+                       return_kv: bool = False):
+    a_in = common.rmsnorm(shared["ln1"], h)
+    res = attention.gqa_attention(shared["attn"], cfg, a_in, positions,
+                                  return_kv=return_kv)
+    if return_kv:
+        a_out, kv = res
+    else:
+        a_out, kv = res, None
+    h = h + a_out
+    h = h + common.mlp_apply(shared["mlp"],
+                             common.rmsnorm(shared["ln2"], h))
+    return (h, kv) if return_kv else h
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict,
+            ) -> Tuple[jnp.ndarray, Dict]:
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = shard(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    segs = _segments(cfg)
+    for i, (st, en) in enumerate(segs):
+        h, _ = _mamba_segment(cfg, _slice_layers(params["layers"], st, en), h)
+        if i < len(segs) - 1:
+            h = _shared_attn_block(cfg, params["shared_attn"], h, positions)
+    h = common.rmsnorm(params["final_norm"], h)
+    return h, {}
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict):
+    h, _ = forward(params, cfg, batch)
+    logits = common.logits_from_hidden(params["embed"], cfg, h)
+    xent = common.softmax_xent(logits, batch["labels"],
+                               batch.get("loss_mask"))
+    return xent, {"xent": xent}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dtype = dtype_of(cfg.compute_dtype)
+    single = ssm.ssm_init_cache(cfg, batch, dtype)
+    mamba = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+        single)
+    n_inv = n_attn_invocations(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "mamba": mamba,
+        "attn_k": jnp.zeros((n_inv, batch, max_len, hkv, dh), dtype),
+        "attn_v": jnp.zeros((n_inv, batch, max_len, hkv, dh), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig, *, seq_sharded: bool = False):
+    seq_ax = "seq" if seq_sharded else None
+    return {
+        "mamba": {"conv": (None, "batch", None, "model"),
+                  "ssm": (None, "batch", "model", None, None)},
+        "attn_k": (None, "batch", seq_ax, "kv_heads", None),
+        "attn_v": (None, "batch", seq_ax, "kv_heads", None),
+    }
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict):
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = shard(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    segs = _segments(cfg)
+    mamba_states, attn_ks, attn_vs = [], [], []
+    for i, (st, en) in enumerate(segs):
+        h, states = _mamba_segment(
+            cfg, _slice_layers(params["layers"], st, en), h,
+            collect_state=True)
+        mamba_states.append(states)
+        if i < len(segs) - 1:
+            h, (k, v) = _shared_attn_block(cfg, params["shared_attn"], h,
+                                           positions, return_kv=True)
+            attn_ks.append(k)
+            attn_vs.append(v)
+    h = common.rmsnorm(params["final_norm"], h)
+    logits = common.logits_from_hidden(params["embed"], cfg, h[:, -1:])
+    cache = {
+        "mamba": jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *mamba_states),
+        "attn_k": jnp.stack(attn_ks, axis=0),
+        "attn_v": jnp.stack(attn_vs, axis=0),
+    }
+    return logits, cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: Dict, lengths: jnp.ndarray):
+    h = common.embed_tokens(params["embed"], tokens)
+    segs = _segments(cfg)
+
+    new_mamba_states, new_ks, new_vs = [], [], []
+    for i, (st, en) in enumerate(segs):
+        seg_layers = _slice_layers(params["layers"], st, en)
+        seg_cache = jax.tree.map(lambda a: a[st:en], cache["mamba"])
+
+        def body(hcur, xs):
+            lp, cache_l = xs
+            out, new_c = ssm.ssm_decode(
+                lp["ssm"], cfg, common.rmsnorm(lp["ln"], hcur), cache_l)
+            return hcur + out, new_c
+
+        h, seg_new = lax.scan(body, h, (seg_layers, seg_cache))
+        new_mamba_states.append(seg_new)
+
+        if i < len(segs) - 1:
+            shared = params["shared_attn"]
+            a_in = common.rmsnorm(shared["ln1"], h)
+            a_out, kv = attention.gqa_decode(
+                shared["attn"], cfg, a_in,
+                {"k": cache["attn_k"][i], "v": cache["attn_v"][i]}, lengths)
+            h = h + a_out
+            h = h + common.mlp_apply(shared["mlp"],
+                                     common.rmsnorm(shared["ln2"], h))
+            new_ks.append(kv["k"])
+            new_vs.append(kv["v"])
+
+    h = common.rmsnorm(params["final_norm"], h)
+    logits = common.logits_from_hidden(params["embed"], cfg, h)
+    new_cache = {
+        "mamba": jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba_states),
+        "attn_k": jnp.stack(new_ks, axis=0),
+        "attn_v": jnp.stack(new_vs, axis=0),
+    }
+    return logits, new_cache

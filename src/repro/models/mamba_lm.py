@@ -1,0 +1,115 @@
+"""mamba2-130m: attention-free SSM language model.
+
+Per DESIGN.md §5 the paper's dynamic-indexing technique is N/A here — there
+is no gather anywhere in this model; the SSD formulation is already a fully
+static graph. The arch is implemented without the technique, as assigned.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common, ssm
+from repro.models.common import KeyGen, dtype_of
+from repro.runtime.sharding import shard
+
+
+def _layer_params(key, cfg: ModelConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "ln": common.rmsnorm_params(cfg.d_model, dtype),
+        "ssm": ssm.ssm_params(kg, cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    kg = KeyGen(key)
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_params(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": common.embed_params(kg, cfg, dtype),
+        "layers": layers,
+        "final_norm": common.rmsnorm_params(cfg.d_model, dtype),
+    }
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict,
+            ) -> Tuple[jnp.ndarray, Dict]:
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = shard(h, "batch", None, None)
+
+    def body(hcur, lp):
+        out = ssm.ssm_apply(lp["ssm"], cfg, common.rmsnorm(lp["ln"], hcur))
+        return hcur + out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=common.remat_policy_of(cfg))
+    h, _ = lax.scan(body, h, params["layers"])
+    h = common.rmsnorm(params["final_norm"], h)
+    return h, {}
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict):
+    h, _ = forward(params, cfg, batch)
+    logits = common.logits_from_hidden(params["embed"], cfg, h)
+    xent = common.softmax_xent(logits, batch["labels"],
+                               batch.get("loss_mask"))
+    return xent, {"xent": xent}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dtype = dtype_of(cfg.compute_dtype)
+    single = ssm.ssm_init_cache(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+        single)
+
+
+def cache_specs(cfg: ModelConfig, *, seq_sharded: bool = False):
+    return {
+        "conv": (None, "batch", None, "model"),
+        "ssm": (None, "batch", "model", None, None),
+    }
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict):
+    """-> (last logits, streaming cache). State emitted per scanned layer."""
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = shard(h, "batch", None, None)
+
+    def body(hcur, lp):
+        out, state = ssm.ssm_apply(
+            lp["ssm"], cfg, common.rmsnorm(lp["ln"], hcur),
+            return_state=True)
+        return hcur + out, state
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=common.remat_policy_of(cfg))
+    h, cache = lax.scan(body, h, params["layers"])
+    h = common.rmsnorm(params["final_norm"], h)
+    logits = common.logits_from_hidden(params["embed"], cfg, h[:, -1:])
+    return logits, cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: Dict, lengths: jnp.ndarray):
+    """lengths is unused (SSM state is positionless) but kept for API parity."""
+    del lengths
+    h = common.embed_tokens(params["embed"], tokens)
+
+    def body(hcur, xs):
+        lp, cache_l = xs
+        out, new_cache = ssm.ssm_decode(
+            lp["ssm"], cfg, common.rmsnorm(lp["ln"], hcur), cache_l)
+        return hcur + out, new_cache
+
+    h, new_cache = lax.scan(body, h, (params["layers"], cache))
+    h = common.rmsnorm(params["final_norm"], h)
+    logits = common.logits_from_hidden(params["embed"], cfg, h)
+    return logits, new_cache

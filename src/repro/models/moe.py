@@ -1,0 +1,271 @@
+"""Mixture-of-Experts with the paper's three dispatch variants.
+
+Token -> expert dispatch is the LM-scale instance of the paper's taxonomy
+(DESIGN.md §5): the same routing decision can be executed as
+
+  V1 DYNAMIC — scatter/gather: each (token, k) assignment computes a flat
+      destination slot (expert * capacity + rank) and tokens are moved with
+      dynamic scatter; results come back with a gather. Lean but irregular —
+      exactly the access pattern the paper shows collapsing on TPU.
+  V2 CNN     — GShard-style one-hot dispatch/combine einsums: routing is
+      materialized as a {0,1} (groups, tokens, experts, capacity) tensor and
+      token movement *is* a matmul. Fully static and MXU-native; costs
+      O(T_g) extra FLOPs per token — the paper's portability-for-overhead
+      trade. Group size bounds the overhead (see `group_size`).
+  V3 SPARSE  — block-structured: tokens are slotted as in V1, but expert
+      weights are gathered at *block* granularity and applied with dense
+      per-block matmuls (MegaBlocks-on-TPU structure; block-level
+      irregularity only, like the BSR beamformer).
+
+All three are numerically identical given the same capacity (tested).
+Routing itself (softmax, top-k, capacity ranking via cumsum) is shared.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.config import Variant
+from repro.models import common
+from repro.models.common import KeyGen, dense_init
+from repro.runtime.sharding import shard
+
+
+def moe_params(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    e = cfg.n_experts_eff      # incl. dead padding (never routed)
+    p = {
+        "router": dense_init(kg(), (d, cfg.n_experts), jnp.float32),
+        "wi_gate": dense_init(kg(), (e, d, f), dtype),
+        "wi_up": dense_init(kg(), (e, d, f), dtype),
+        "wo": dense_init(kg(), (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = common.mlp_params(
+            kg, d, cfg.moe_d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing (shared by all variants)
+# ---------------------------------------------------------------------------
+
+
+def route(cfg: ModelConfig, router_w, x_flat: jnp.ndarray):
+    """x_flat (T, d) -> (weights (T, k), idx (T, k), aux_losses dict)."""
+    logits = x_flat.astype(jnp.float32) @ router_w          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, cfg.n_experts_per_tok)        # (T, k)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+
+    # Aux: load-balance (Switch) + router z-loss.
+    e = cfg.n_experts
+    onehot_any = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=1)
+    frac_tokens = onehot_any.mean(axis=0)                   # (E,)
+    frac_probs = probs.mean(axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"moe_lb_loss": lb_loss,
+           "moe_z_loss": cfg.router_z_loss * z_loss}
+    return w, idx, aux
+
+
+def capacity_and_rank(cfg: ModelConfig, idx: jnp.ndarray, n_tokens: int,
+                      ) -> Tuple[int, jnp.ndarray, jnp.ndarray]:
+    """Deterministic capacity ranking.
+
+    Returns (capacity, rank (T, k), keep (T, k) {0,1}). Assignments are
+    prioritized k-major (all primary choices before secondary), then by
+    token order — fixed, data-independent priority (paper §II-C).
+    """
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    cap = int(max(8, ((n_tokens * k * cfg.capacity_factor / e) // 8 + 1) * 8))
+
+    ranks, keeps = [], []
+    count = jnp.zeros((e,), dtype=jnp.int32)
+    for kk in range(k):
+        oh = jax.nn.one_hot(idx[:, kk], e, dtype=jnp.int32)  # (T, E)
+        r = jnp.cumsum(oh, axis=0) - oh + count[None, :]
+        rank_k = (r * oh).sum(axis=-1)                       # (T,)
+        keep_k = rank_k < cap
+        ranks.append(rank_k)
+        keeps.append(keep_k)
+        count = count + (oh * keep_k[:, None].astype(jnp.int32)).sum(axis=0)
+    rank = jnp.stack(ranks, axis=1)
+    keep = jnp.stack(keeps, axis=1)
+    return cap, rank, keep
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN (shared)
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn(params: Dict, xe: jnp.ndarray) -> jnp.ndarray:
+    """xe (E, C, d) -> (E, C, d), per-expert SwiGLU via batched einsum."""
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["wi_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", xe, params["wi_up"])
+    return jnp.einsum("ecf,efd->ecd", gate * up, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# V1 — dynamic scatter/gather
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_dynamic(cfg, params, x_flat, w, idx, cap, rank, keep):
+    t, d = x_flat.shape
+    e, k = cfg.n_experts_eff, cfg.n_experts_per_tok
+    dump = e * cap                                   # overflow slot
+    dest = jnp.where(keep, idx * cap + rank, dump)   # (T, k)
+
+    buf = jnp.zeros((e * cap + 1, d), dtype=x_flat.dtype)
+    # Distinct (expert, rank) per kept assignment => .set is race-free.
+    buf = buf.at[dest.reshape(-1)].set(
+        jnp.repeat(x_flat, k, axis=0), mode="drop")
+    xe = buf[:-1].reshape(e, cap, d)
+    xe = shard(xe, "expert", None, None)
+
+    ye = _expert_ffn(params, xe).reshape(e * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    gathered = ye[dest.reshape(-1)].reshape(t, k, d)  # dynamic gather
+    return (gathered * w[..., None].astype(gathered.dtype)).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# V2 — one-hot einsum dispatch (GShard / full-CNN)
+# ---------------------------------------------------------------------------
+
+
+def group_size(cfg: ModelConfig, n_tokens: int) -> int:
+    """Dispatch groups bound the O(T_g * E * C) one-hot overhead."""
+    g = 256
+    while n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def _dispatch_onehot(cfg, params, x_flat, w, idx, cap, rank, keep):
+    t, d = x_flat.shape
+    e, k = cfg.n_experts_eff, cfg.n_experts_per_tok
+    tg = group_size(cfg, t)
+    g = t // tg
+
+    # Per-group capacity ranking was computed globally; recompute rank within
+    # groups so capacity is per-group (standard GShard semantics).
+    # Capacity is per *real* expert (dead padding gets empty slots).
+    cap_g = int(max(8, ((tg * k * cfg.capacity_factor / cfg.n_experts)
+                        // 8 + 1) * 8))
+    idx_g = idx.reshape(g, tg, k)
+    w_g = w.reshape(g, tg, k)
+
+    def per_group(idx_1):
+        ranks, keeps = [], []
+        count = jnp.zeros((e,), dtype=jnp.int32)
+        for kk in range(k):
+            oh = jax.nn.one_hot(idx_1[:, kk], e, dtype=jnp.int32)
+            r = jnp.cumsum(oh, axis=0) - oh + count[None, :]
+            rank_k = (r * oh).sum(axis=-1)
+            keep_k = rank_k < cap_g
+            ranks.append(rank_k)
+            keeps.append(keep_k)
+            count = count + (oh * keep_k[:, None].astype(jnp.int32)
+                             ).sum(axis=0)
+        return jnp.stack(ranks, 1), jnp.stack(keeps, 1)
+
+    rank_g, keep_g = jax.vmap(per_group)(idx_g)       # (G, Tg, k)
+
+    # dispatch one-hot: (G, Tg, E, C) = [expert matches] x [slot matches].
+    # Every intermediate is explicitly sharded (groups -> data axis,
+    # experts -> model axis): without the constraints the partitioner
+    # replicates the (G,E,C,d) dispatched activations and their gradients
+    # across the mesh — measured at ~3 TB of all-gather per device per
+    # step on granite-moe train_4k (§Perf iteration 1).
+    oh_e = jax.nn.one_hot(idx_g, e, dtype=x_flat.dtype)          # (G,Tg,k,E)
+    oh_c = jax.nn.one_hot(rank_g, cap_g, dtype=x_flat.dtype)     # (G,Tg,k,C)
+    oh_c = oh_c * keep_g[..., None].astype(x_flat.dtype)
+    disp = jnp.einsum("gtke,gtkc->gtec", oh_e, oh_c)             # 0/1
+    disp = shard(disp, "batch", None, "expert", None)
+    # combine = disp * (per-token expert weight). Factored so the
+    # *differentiable* router-weight path stays (G,Tg,E)-sized — a fused
+    # 3-operand einsum drags a (G,Tg,E,C) contraction through the
+    # backward pass (§Perf: 77 GB/device of gathers on this cell).
+    wsum = jnp.einsum("gtke,gtk->gte", oh_e, w_g.astype(x_flat.dtype))
+    comb = disp * wsum[..., None]
+    comb = shard(comb, "batch", None, "expert", None)
+
+    xg = x_flat.reshape(g, tg, d)
+    xg = shard(xg, "batch", None, None)
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg)                  # (G,E,C,d)
+    xe = shard(xe, "batch", "expert", None, None)
+    ye = jax.vmap(lambda xe_1: _expert_ffn(params, xe_1))(xe)
+    ye = shard(ye, "batch", "expert", None, None)
+    yg = jnp.einsum("gtec,gecd->gtd", comb, ye)
+    yg = shard(yg, "batch", None, None)
+    return yg.reshape(t, d)
+
+
+# ---------------------------------------------------------------------------
+# V3 — block-structured sparse
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_blocked(cfg, params, x_flat, w, idx, cap, rank, keep,
+                      block: int = 8):
+    t, d = x_flat.shape
+    e, k = cfg.n_experts_eff, cfg.n_experts_per_tok
+    dump = e * cap
+    dest = jnp.where(keep, idx * cap + rank, dump)
+
+    buf = jnp.zeros((e * cap + 1, d), dtype=x_flat.dtype)
+    buf = buf.at[dest.reshape(-1)].set(
+        jnp.repeat(x_flat, k, axis=0), mode="drop")
+    xb = buf[:-1].reshape(e * cap // block, block, d)  # (NB, bs, d)
+    # Block-level weight gather: every block belongs to exactly one expert.
+    block_expert = jnp.repeat(jnp.arange(e, dtype=jnp.int32), cap // block)
+    wg = jnp.take(params["wi_gate"], block_expert, axis=0)  # (NB, d, f)
+    wu = jnp.take(params["wi_up"], block_expert, axis=0)
+    wo = jnp.take(params["wo"], block_expert, axis=0)
+
+    gate = jax.nn.silu(jnp.einsum("bcd,bdf->bcf", xb, wg))
+    up = jnp.einsum("bcd,bdf->bcf", xb, wu)
+    yb = jnp.einsum("bcf,bfd->bcd", gate * up, wo)
+
+    ye = yb.reshape(e * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    gathered = ye[dest.reshape(-1)].reshape(t, k, d)
+    return (gathered * w[..., None].astype(gathered.dtype)).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+
+
+_DISPATCH = {
+    Variant.DYNAMIC: _dispatch_dynamic,
+    Variant.CNN: _dispatch_onehot,
+    Variant.SPARSE: _dispatch_blocked,
+}
+
+
+def moe_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, Dict]:
+    """x (B, S, d) -> (B, S, d), aux losses. Variant from cfg.moe_variant."""
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    w, idx, aux = route(cfg, params["router"], x_flat)
+
+    if cfg.moe_variant == Variant.CNN:
+        y = _dispatch_onehot(cfg, params, x_flat, w, idx, None, None, None)
+    else:
+        cap, rank, keep = capacity_and_rank(cfg, idx, b * s)
+        y = _DISPATCH[cfg.moe_variant](cfg, params, x_flat, w, idx,
+                                       cap, rank, keep)
+
+    if cfg.n_shared_experts:
+        y = y + common.mlp_apply(params["shared"], x_flat)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,229 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+The selective-state-space recurrence
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t^T h_t + D x_t
+
+is executed with the chunked SSD decomposition: intra-chunk masked matmuls
+(the "duality" with attention) + a compact inter-chunk state scan. This is
+itself an instance of the paper's philosophy — an irregular per-step
+recurrence recast as a static graph of matmuls/convs/reductions (DESIGN.md
+§5). Train/prefill use the chunked form (XLA path here; the Pallas
+`ssd_scan` kernel is the opt-in fused version); decode is the O(1)-state
+single-step update (pure pointwise — no dynamic indexing at all, which is
+why SSMs run the long_500k cell).
+
+Layout: d_inner = ssm_expand * d_model, heads = d_inner / ssm_head_dim.
+B and C are shared across heads within a single group (n_groups = 1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, dense_init
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_params(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_inner, nh, hd, ns = _dims(cfg)
+    conv_dim = d_inner + 2 * ns  # conv over x, B, C jointly (mamba2 layout)
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "in_proj": dense_init(
+            kg(), (d, 2 * d_inner + 2 * ns + nh), dtype),
+        "conv_w": dense_init(kg(), (cfg.ssm_conv, conv_dim), dtype,
+                             scale=cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "a_log": jnp.zeros((nh,), dtype=jnp.float32),   # A = -exp(a_log)
+        "dt_bias": jnp.full((nh,), -2.0, dtype=jnp.float32),
+        "d_skip": jnp.ones((nh,), dtype=jnp.float32),
+        "norm": common.rmsnorm_params(d_inner, dtype),
+        "out_proj": dense_init(kg(), (d_inner, d), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner, nh, hd, ns = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * ns], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(w, b, xbc, state=None):
+    """Depthwise causal conv along time. xbc (B, S, C); w (K, C).
+
+    Returns (out (B, S, C), new_state (B, K-1, C)) — state carries the last
+    K-1 inputs for streaming decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xbc], axis=1)          # (B, S+K-1, C)
+    # sum_k w[k] * full[:, t+k] — static unrolled taps (K is tiny)
+    out = sum(w[i][None, None, :] * full[:, i:i + xbc.shape[1]]
+              for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else None
+    return out + b[None, None, :], new_state
+
+
+def _ssd_chunked(log_a, x, bmat, cmat, chunk: int):
+    """Chunked SSD, pure jnp (the XLA path; mirrors kernels/ssd_scan).
+
+    log_a (B,S,H); x (B,S,H,P); bmat/cmat (B,S,N) group-shared.
+    Returns y (B,S,H,P).
+    """
+    bsz, s, h = log_a.shape
+    p = x.shape[-1]
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = log_a.shape[1] // q
+
+    la = log_a.reshape(bsz, nc, q, h).astype(jnp.float32)
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    bc = bmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    lac = jnp.cumsum(la, axis=2)                        # inclusive, per chunk
+    # --- intra-chunk (masked attention-like matmul) ---
+    sqq = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # (B,NC,Q,Q)
+    # clamp BEFORE exp: for future positions (i < j) the log-decay is
+    # positive and exp overflows; the mask kills the value but not the
+    # inf in the gradient (0 * inf = NaN in the cotangent).
+    dlog = jnp.minimum(
+        lac[:, :, :, None, :] - lac[:, :, None, :, :], 0.0)
+    decay = jnp.exp(dlog)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    m = jnp.where(mask[None, None, :, :, None], sqq[..., None] * decay, 0.0)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # --- inter-chunk state scan ---
+    ea_last = jnp.exp(lac[:, :, -1, :])                 # (B,NC,H)
+    wdec = jnp.exp(lac[:, :, -1:, :] - lac)             # (B,NC,Q,H)
+    chunk_state = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bc, wdec, xc)
+
+    def scan_step(h_prev, inp):
+        ea_1, cs_1 = inp                                # (B,H), (B,H,N,P)
+        h_new = ea_1[..., None, None] * h_prev + cs_1
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, la.shape[-1], n, p), jnp.float32)
+    h_last, h_before = lax.scan(
+        scan_step,
+        h0,
+        (ea_last.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)        # (B,NC,H,N,P)
+
+    y = y + jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                       cc, jnp.exp(lac), h_before)
+    y = y.reshape(bsz, nc * q, h, p)
+    return y[:, :s], h_last
+
+
+def ssm_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              return_state: bool = False):
+    """Train/prefill. x (B, S, d_model) -> (B, S, d_model).
+
+    With return_state=True also returns the streaming cache (final SSM
+    state + conv tail) so a prefill can hand off to decode.
+    """
+    d_inner, nh, hd, ns = _dims(cfg)
+    bsz, s, _ = x.shape
+
+    proj = x @ params["in_proj"]
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(params["conv_w"], params["conv_b"],
+                                   xbc_raw)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])   # (B,S,H)
+    a = -jnp.exp(params["a_log"])[None, None, :]             # (1,1,H)
+    log_a = a * dt                                           # <= 0
+    xh = xs.reshape(bsz, s, nh, hd)
+    # fold dt into x (equivalent to dt * B x^T)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+
+    h_last = None
+    if cfg.use_ssd_kernel and not return_state:
+        from repro.kernels.ssd_scan import ssd_scan
+        bh = jnp.broadcast_to(bmat[:, :, None, :], (bsz, s, nh, ns))
+        ch = jnp.broadcast_to(cmat[:, :, None, :], (bsz, s, nh, ns))
+        y = ssd_scan(log_a, xh_dt, bh, ch, chunk=cfg.ssm_chunk)
+    else:
+        y, h_last = _ssd_chunked(log_a, xh_dt, bmat, cmat, cfg.ssm_chunk)
+
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = common.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if return_state:
+        # h_last indexed (B, H, N, P); decode cache uses (B, H, N, P) too.
+        return out, {"conv": conv_state, "ssm": h_last}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming decode (O(1) state per layer)
+# ---------------------------------------------------------------------------
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d_inner, nh, hd, ns = _dims(cfg)
+    conv_dim = d_inner + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype=dtype),
+        "ssm": jnp.zeros((batch, nh, ns, hd), dtype=jnp.float32),
+    }
+
+
+def ssm_decode(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-step decode. x (B, 1, d_model). No dynamic indexing anywhere."""
+    d_inner, nh, hd, ns = _dims(cfg)
+    bsz = x.shape[0]
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(params["conv_w"], params["conv_b"],
+                                   xbc, state=cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])   # (B,1,H)
+    a = -jnp.exp(params["a_log"])[None, None, :]
+    ea = jnp.exp(a * dt)[:, 0]                               # (B,H)
+
+    xh = xs.reshape(bsz, nh, hd).astype(jnp.float32)         # (B,H,P)
+    xh_dt = xh * dt[:, 0, :, None]
+    b1 = bmat[:, 0].astype(jnp.float32)                      # (B,N)
+    c1 = cmat[:, 0].astype(jnp.float32)
+
+    h_new = (ea[..., None, None] * cache["ssm"] +
+             jnp.einsum("bn,bhp->bhnp", b1, xh_dt))
+    y = jnp.einsum("bn,bhnp->bhp", c1, h_new)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = common.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"], {"conv": conv_state, "ssm": h_new}

@@ -1,0 +1,89 @@
+"""AdamW on raw pytrees (no optax dependency) + schedule + clipping.
+
+State layout mirrors the param tree:
+  {"m": tree(f32), "v": tree(f32), "step": scalar i32}
+
+m/v are f32 regardless of param dtype (bf16 params, f32 moments — the
+standard mixed-precision recipe). ZeRO-1 is a *sharding* property: the
+launcher assigns m/v PartitionSpecs with the data axis folded in
+(runtime/param_sharding.py), so each data shard owns 1/N of the moments;
+XLA inserts the reduce-scatter/all-gather pair automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def cosine_schedule(tcfg: TrainConfig) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = tcfg.learning_rate * step / max(tcfg.warmup_steps, 1)
+        t = (step - tcfg.warmup_steps) / max(
+            tcfg.total_steps - tcfg.warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = 0.5 * tcfg.learning_rate * (1.0 + jnp.cos(np.pi * t))
+        return jnp.where(step < tcfg.warmup_steps, warm, cos)
+    return lr
+
+
+def global_norm_clip(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        gnorm
+
+
+def adamw_init(params) -> Dict:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), dtype=jnp.int32)}
+
+
+def _decay_mask(path_leaf) -> bool:
+    """Weight decay only matrices (skip norms, biases, 1-D tables)."""
+    return path_leaf.ndim >= 2
+
+
+def adamw_update(tcfg: TrainConfig, params, grads, state,
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """-> (new_params, new_state, metrics). grads f32 (post-clip)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(tcfg)(step)
+    b1, b2, eps = tcfg.b1, tcfg.b2, tcfg.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g
+        v_new = b2 * v + (1.0 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if _decay_mask(p):
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"lr": lr}

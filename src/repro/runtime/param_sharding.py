@@ -1,0 +1,137 @@
+"""Parameter PartitionSpecs from path-based rules.
+
+Rules are expressed in *logical* axes (runtime/sharding.py) and resolved
+divisibility-safely against the bound mesh. Stacked layer dims (leading
+axis added by the per-layer vmap/scan layout) are auto-detected by rank
+mismatch and get a leading None.
+
+TP (model axis) follows the Megatron pattern: column-parallel in
+(wq/wk/wv/wi_*), row-parallel out (wo/out_proj). EP shards the expert
+axis. FSDP (ZeRO-3-ish) adds the data axis onto a free dim of every
+matrix; ZeRO-1 applies the same to the Adam moments only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.runtime import sharding as shlib
+
+# leaf-name -> logical axes (by trailing dims; leading stack dims -> None)
+_RULES: Dict[str, Tuple] = {
+    # embeddings
+    "embedding": ("vocab", None),
+    "lm_head": (None, "vocab"),
+    # attention / mlp matrices (column-parallel)
+    "wq": ("fsdp", "model"),
+    "wk": ("fsdp", "model"),
+    "wv": ("fsdp", "model"),
+    "wi_gate": ("fsdp", "model"),
+    "wi_up": ("fsdp", "model"),
+    # row-parallel
+    "wo": ("model", "fsdp"),
+    "out_proj": ("model", "fsdp"),
+    # MLA
+    "wq_a": ("fsdp", None),
+    "wq_b": ("fsdp", "model"),
+    "wkv_a": ("fsdp", None),
+    "wk_b": ("fsdp", "model"),
+    "wv_b": ("fsdp", "model"),
+    # MoE (expert-parallel; note wi_*/wo 3-D variants below)
+    "router": (None, None),
+    # SSM
+    "in_proj": ("fsdp", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "a_log": (None,),
+    "dt_bias": (None,),
+    "d_skip": (None,),
+    # norms
+    "scale": (None,),
+}
+
+# EP takes the model axis when the (padded) expert count divides it; the
+# trailing "model" falls back to TP over the ffn dim otherwise (resolve()
+# drops duplicate mesh axes).
+_MOE_RULES: Dict[str, Tuple] = {
+    "wi_gate": ("expert", "fsdp", "model"),
+    "wi_up": ("expert", "fsdp", "model"),
+    "wo": ("expert", "model", "fsdp"),
+}
+
+
+def _leaf_rule(path, ndim: int) -> Tuple:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    in_moe = any(n == "moe" for n in names) and leaf in _MOE_RULES
+    rule = _MOE_RULES[leaf] if in_moe else _RULES.get(leaf)
+    if rule is None:
+        rule = tuple(None for _ in range(ndim))
+    # leading stacked-layer dims
+    while len(rule) < ndim:
+        rule = (None,) + rule
+    assert len(rule) == ndim, (names, rule, ndim)
+    return rule
+
+
+def logical_param_axes(params_shape) -> Dict:
+    """Pytree of logical-axis tuples matching the (abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_rule(path, len(leaf.shape)),
+        params_shape)
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, (str, tuple)) for a in x)
+
+
+def specs_from_logical(logical_tree, shapes_tree, *,
+                       keep_fsdp: bool = None) -> Dict:
+    """Resolve logical tuples to PartitionSpecs (divisibility-safe).
+
+    "fsdp" axes are honored only when the binding has fsdp_params (params)
+    or keep_fsdp=True is forced (ZeRO-1 moments).
+    """
+    binding = shlib.current_binding()
+    fsdp_ok = keep_fsdp if keep_fsdp is not None else (
+        binding.fsdp_params if binding else False)
+
+    def resolve_leaf(ax, leaf):
+        if not fsdp_ok:
+            ax = tuple(None if a == "fsdp" else a for a in ax)
+        return shlib.resolve(leaf.shape, *ax)
+
+    return jax.tree.map(resolve_leaf, logical_tree, shapes_tree,
+                        is_leaf=_is_axes)
+
+
+def param_pspecs(params_shape) -> Dict:
+    return specs_from_logical(logical_param_axes(params_shape),
+                              params_shape)
+
+
+def zero1_moment_axes(logical_tree, shapes_tree):
+    """ZeRO-1: Adam moments get the fsdp (data) axis on a free dim."""
+    def add_fsdp(ax, leaf):
+        if "fsdp" in ax:
+            return ax
+        binding = shlib.current_binding()
+        ext = binding.extent(binding.rules.get("fsdp", ())) if binding else 0
+        out = list(ax)
+        for i, a in enumerate(out):
+            if a is None and ext and leaf.shape[i] % ext == 0:
+                out[i] = "fsdp"
+                break
+        return tuple(out)
+
+    return jax.tree.map(add_fsdp, logical_tree, shapes_tree,
+                        is_leaf=_is_axes)
+
+
+def shardings_for(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,164 @@
+"""Logical-axis sharding: models annotate with *logical* names; the launcher
+binds them to physical mesh axes.
+
+Models never mention physical axes. They call
+
+    x = shard(x, "batch", None, "model")
+
+and the active binding (a context set by launch/mesh.py) resolves logical
+names to mesh axes — e.g. "batch" -> ("pod", "data") on the multi-pod mesh,
+("data",) on a single pod, or nothing when no mesh is active (CPU tests:
+shard() is then the identity). This is how one model definition serves
+1-device smoke tests, the 256-chip pod and the 512-chip multi-pod without
+code changes (the paper's single-source portability contract, applied to
+distribution).
+
+Resolution is divisibility-safe: a logical axis whose physical extent does
+not divide the corresponding array dimension is dropped (e.g. gemma3's
+single KV head cannot shard 16-way; the constraint silently degrades to
+replication for that dim instead of erroring).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+_state = threading.local()
+
+# Default logical -> physical bindings.
+SINGLE_POD_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "seq": ("data",),      # long-context KV sharding (decode)
+    "kv_heads": ("model",),
+    "fsdp": ("data",),     # only consulted when ParallelConfig.fsdp
+    # fallback batch sharding over the whole mesh — used by attention when
+    # head counts don't divide the model axis (qwen2-vl: 12, granite-moe:
+    # 24, gemma3: 4): compute once across the full mesh instead of
+    # replicating it 16x over the model axis.
+    "attn_batch": ("data", "model"),
+}
+
+MULTI_POD_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "model": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "seq": ("data",),
+    "kv_heads": ("model",),
+    "fsdp": ("pod", "data"),
+    "attn_batch": ("pod", "data", "model"),
+}
+
+
+class Binding:
+    """Active logical->physical binding plus mesh axis sizes."""
+
+    def __init__(self, rules: Dict[str, Tuple[str, ...]],
+                 axis_sizes: Dict[str, int], fsdp: bool = False):
+        self.rules = dict(rules)
+        self.axis_sizes = dict(axis_sizes)
+        # When False, "fsdp" axes are stripped from *parameter* specs
+        # (ZeRO-1 moments still use them — see param_sharding.py).
+        self.fsdp_params = fsdp
+
+    def extent(self, phys: Tuple[str, ...]) -> int:
+        n = 1
+        for a in phys:
+            n *= self.axis_sizes.get(a, 1)
+        return n
+
+
+def current_binding() -> Optional[Binding]:
+    return getattr(_state, "binding", None)
+
+
+@contextlib.contextmanager
+def use_binding(binding: Optional[Binding]):
+    prev = current_binding()
+    _state.binding = binding
+    try:
+        yield
+    finally:
+        _state.binding = prev
+
+
+def _phys_for(binding: Binding, ax: Logical) -> Tuple[str, ...]:
+    if ax is None:
+        return ()
+    if isinstance(ax, tuple):
+        return sum((binding.rules.get(a, ()) for a in ax), ())
+    return binding.rules.get(ax, ())
+
+
+def resolve(shape: Optional[Sequence[int]], *logical: Logical) -> P:
+    """Logical axis names -> PartitionSpec under the active binding.
+
+    If `shape` is given, axes that don't divide are dropped (replicated).
+    A mesh axis already claimed by an earlier dim is dropped from later
+    dims (lets rules say ("expert", None, "model"): EP takes the model
+    axis when the expert count divides, TP over the ffn dim otherwise).
+    """
+    binding = current_binding()
+    if binding is None:
+        return P()
+    spec = []
+    used: set = set()
+    for i, ax in enumerate(logical):
+        phys = _phys_for(binding, ax)
+        phys = tuple(a for a in phys if a not in used)
+        if phys and shape is not None:
+            if shape[i] % binding.extent(phys) != 0:
+                phys = ()
+        used.update(phys)
+        if not phys:
+            spec.append(None)
+        elif len(phys) == 1:
+            spec.append(phys[0])
+        else:
+            spec.append(phys)
+    return P(*spec)
+
+
+def shard(x, *logical: Logical):
+    """with_sharding_constraint under the active binding (or identity)."""
+    binding = current_binding()
+    if binding is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, resolve(x.shape, *logical))
+
+
+def shard_pin(x, **dims: Logical):
+    """Constrain only the given dims (by index); others UNCONSTRAINED.
+
+    shard() with None dims *forces replication* on those dims — wrong when
+    a tensor is legitimately sharded there by propagation (e.g. rope
+    output heads). shard_pin(x, d0="batch") pins the batch dim and leaves
+    the rest to the partitioner.
+    """
+    binding = current_binding()
+    if binding is None:
+        return x
+    spec = [P.UNCONSTRAINED] * x.ndim
+    pinned = False
+    for key, ax in dims.items():
+        i = int(key[1:])
+        phys = _phys_for(binding, ax)
+        if phys and x.shape[i] % binding.extent(phys) == 0:
+            spec[i] = phys if len(phys) > 1 else phys[0]
+            pinned = True
+        # indivisible: leave UNCONSTRAINED (never force replication)
+    if not pinned:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

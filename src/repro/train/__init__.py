@@ -1,0 +1,2 @@
+from repro.train.steps import (  # noqa: F401
+    init_train_state, make_prefill_step, make_serve_step, make_train_step)

@@ -1,0 +1,90 @@
+"""Step builders: train (grad-accum, clip, AdamW), prefill, serve.
+
+These are the functions the launcher jits/lowers — one per (arch x shape)
+dry-run cell:
+  train_4k     -> make_train_step
+  prefill_32k  -> make_prefill_step
+  decode_32k / long_500k -> make_serve_step
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import TrainConfig
+from repro.models.api import Model
+from repro.optim.adamw import adamw_init, adamw_update, global_norm_clip
+
+
+def init_train_state(model: Model, key) -> Dict:
+    params = model.init_params(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    def loss_of(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+
+        if tcfg.microbatches > 1:
+            m = tcfg.microbatches
+
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb_i)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / m, g_acc, grads)
+                return (g_acc, l_acc + loss / m), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics_stack = lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mb)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics_stack)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        grads, gnorm = global_norm_clip(grads, tcfg.grad_clip)
+        new_params, new_opt, opt_metrics = adamw_update(
+            tcfg, params, grads, state["opt"])
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics,
+                       **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params: Dict, batch: Dict):
+        logits, cache = model.prefill(params, batch)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One decode iteration: write KV, attend, next token (greedy —
+    deterministic, per the paper's execution model)."""
+
+    def serve_step(params: Dict, tokens: jnp.ndarray, cache: Dict,
+                   lengths: jnp.ndarray):
+        logits, new_cache = model.decode_step(params, tokens, cache, lengths)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache, lengths + 1
+
+    return serve_step

@@ -1,0 +1,64 @@
+"""The paper's central determinism/equivalence claim: all three
+implementation variants compute the same math."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Modality, UltrasoundPipeline, Variant, tiny_config)
+from repro.core.delays import compute_delay_tables
+from repro.core import geometry
+from repro.data import synth_rf
+
+
+@pytest.mark.parametrize("modality", list(Modality))
+def test_variant_equivalence(modality):
+    cfg0 = tiny_config(n_f=8, modality=modality)
+    rf = jnp.asarray(synth_rf(cfg0, seed=3))
+    outs = {}
+    for v in Variant:
+        pipe = UltrasoundPipeline(cfg0.with_(variant=v))
+        outs[v] = np.asarray(pipe(rf))
+    for v in [Variant.CNN, Variant.SPARSE]:
+        np.testing.assert_allclose(
+            outs[v], outs[Variant.DYNAMIC], rtol=1e-4, atol=1e-4,
+            err_msg=f"{modality} {v} != dynamic")
+
+
+def test_point_scatterer_localizes():
+    """B-mode peak lands at (or next to) the simulated scatterer pixel."""
+    cfg = tiny_config(nz=32, nx=16, n_f=2, n_c=8)
+    from repro.data.rf_data import synth_rf as gen
+    rf = gen(cfg, seed=7, n_scatter=1, flow_fraction=0.0)
+    img = np.asarray(UltrasoundPipeline(cfg)(jnp.asarray(rf)))[..., 0]
+
+    # find the scatterer ground truth from the generator's rng
+    rng = np.random.default_rng(7)
+    half_ap = (cfg.n_c - 1) / 2.0 * cfg.pitch
+    zs = rng.uniform(cfg.z_min, cfg.z_max, 1)[0]
+    xs = rng.uniform(-half_ap, half_ap, 1)[0]
+    Z, X = geometry.image_grid(cfg)
+    iz = np.abs(Z[:, 0] - zs).argmin()
+    ix = np.abs(X[0, :] - xs).argmin()
+
+    pz, px = np.unravel_index(img.argmax(), img.shape)
+    assert abs(int(pz) - iz) <= 2 and abs(int(px) - ix) <= 2, \
+        ((pz, px), (iz, ix))
+
+
+def test_bsr_band_is_sparse():
+    """The banded structure actually skips blocks on a tall grid."""
+    cfg = tiny_config(nz=64, nx=8, n_l=512)
+    from repro.core.delays import bsr_operator
+    op = bsr_operator(cfg, compute_delay_tables(cfg))
+    assert op.nnz_ratio < 0.7, op.nnz_ratio
+
+
+def test_apodization_rows_normalized():
+    cfg = tiny_config()
+    t = compute_delay_tables(cfg)
+    sums = t.apod.sum(axis=1)
+    active = sums > 0
+    np.testing.assert_allclose(sums[active], 1.0, atol=1e-5)

@@ -1,0 +1,75 @@
+"""CNN-expressible primitive ops: bounded error vs jnp oracles (+ property
+tests on their invariants)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import cnn_ops
+
+finite_f = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                     allow_subnormal=False, width=32)
+
+
+def test_atan2_bounded_error(rng):
+    y = rng.standard_normal(200_000).astype(np.float32) * 10
+    x = rng.standard_normal(200_000).astype(np.float32) * 10
+    got = np.asarray(cnn_ops.atan2_approx(jnp.asarray(y), jnp.asarray(x)))
+    err = np.abs(got - np.arctan2(y, x))
+    assert err.max() < 2e-4, err.max()
+
+
+def test_ln_bounded_error(rng):
+    x = rng.uniform(1e-8, 1e4, 100_000).astype(np.float32)
+    got = np.asarray(cnn_ops.ln_approx(jnp.asarray(x)))
+    assert np.abs(got - np.log(x)).max() < 1e-2
+
+
+def test_db20_matches_oracle(rng):
+    x = rng.uniform(1e-6, 1.0, 10_000).astype(np.float32)
+    got = np.asarray(cnn_ops.db20_approx(jnp.asarray(x)))
+    ref = 20 * np.log10(x)
+    assert np.abs(got - ref).max() < 0.1  # < 0.1 dB over 120 dB range
+
+
+@given(y=finite_f, x=finite_f)
+@settings(max_examples=200, deadline=None)
+def test_atan2_range(y, x):
+    out = float(cnn_ops.atan2_approx(jnp.float32(y), jnp.float32(x)))
+    assert -np.pi - 1e-3 <= out <= np.pi + 1e-3
+
+
+@given(m=st.integers(0, 1), a=finite_f, b=finite_f)
+@settings(max_examples=100, deadline=None)
+def test_select_is_exact(m, a, b):
+    out = float(cnn_ops.select(jnp.float32(m), jnp.float32(a),
+                               jnp.float32(b)))
+    assert out == (a if m else b)
+
+
+@given(x=st.floats(min_value=2.0 ** -16, max_value=2.0 ** 13,
+                   allow_subnormal=False, width=32))
+@settings(max_examples=100, deadline=None)
+def test_ln_monotone_neighborhood(x):
+    e = float(cnn_ops.ln_approx(jnp.float32(x * 1.1))) - \
+        float(cnn_ops.ln_approx(jnp.float32(x)))
+    assert e > 0
+
+
+def test_cmul_matches_complex(rng):
+    a = rng.standard_normal((64, 2)).astype(np.float32)
+    b = rng.standard_normal((64, 2)).astype(np.float32)
+    got = np.asarray(cnn_ops.cmul(jnp.asarray(a), jnp.asarray(b)))
+    ref = (a[:, 0] + 1j * a[:, 1]) * (b[:, 0] + 1j * b[:, 1])
+    np.testing.assert_allclose(got[:, 0], ref.real, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[:, 1], ref.imag, rtol=1e-5, atol=1e-5)
+
+
+def test_clip_normalize(rng):
+    x = rng.uniform(-5, 5, 1000).astype(np.float32)
+    out = np.asarray(cnn_ops.clip(jnp.asarray(x), -1.0, 1.0))
+    assert out.min() >= -1.0 and out.max() <= 1.0
+    n = np.asarray(cnn_ops.normalize_by_max(jnp.asarray(np.abs(x))))
+    assert np.isclose(n.max(), 1.0, atol=1e-5)

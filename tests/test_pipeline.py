@@ -1,0 +1,68 @@
+"""End-to-end pipeline behaviour: determinism, shapes, metrics geometry."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (Modality, UltrasoundPipeline, paper_config,
+                        tiny_config)
+from repro.data import synth_rf
+
+
+def test_paper_input_bytes_exact():
+    assert paper_config().input_bytes == 5_472_256  # 5.472 MB (paper §III)
+
+
+def test_determinism_bitwise():
+    cfg = tiny_config()
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    pipe = UltrasoundPipeline(cfg)
+    a = np.asarray(pipe(rf))
+    b = np.asarray(pipe(rf))
+    assert np.array_equal(a, b)  # same graph, same input -> same bits
+
+
+def test_bmode_batches_all_frames():
+    cfg = tiny_config(n_f=8)
+    img = UltrasoundPipeline(cfg)(jnp.asarray(synth_rf(cfg, seed=1)))
+    assert img.shape == (cfg.nz, cfg.nx, 8)   # N_f frames per forward pass
+    assert float(img.min()) >= 0.0 and float(img.max()) <= 1.0
+
+
+def test_doppler_outputs_velocity_map():
+    cfg = tiny_config(n_f=16, modality=Modality.DOPPLER)
+    img = np.asarray(UltrasoundPipeline(cfg)(jnp.asarray(
+        synth_rf(cfg, seed=2))))
+    assert img.shape == (cfg.nz, cfg.nx)
+    assert np.abs(img).max() <= 1.0 + 1e-6    # Nyquist-normalized
+    assert np.abs(img).max() > 1e-4           # moving scatterers detected
+
+
+def test_power_doppler_in_range():
+    cfg = tiny_config(n_f=16, modality=Modality.POWER_DOPPLER)
+    img = np.asarray(UltrasoundPipeline(cfg)(jnp.asarray(
+        synth_rf(cfg, seed=2))))
+    assert img.shape == (cfg.nz, cfg.nx)
+    assert float(img.min()) >= -1e-6 and float(img.max()) <= 1.0 + 1e-6
+
+
+def test_das_kernel_variant_matches_dynamic():
+    """Pallas-kernel-backed pipeline == XLA dynamic variant (bitwise on
+    CPU interpret mode)."""
+    cfg = tiny_config()
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    a = np.asarray(UltrasoundPipeline(cfg)(rf))
+    b = np.asarray(UltrasoundPipeline(cfg.with_(use_das_kernel=True))(rf))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_transcendental_toggle_close():
+    """cnn_transcendentals=True stays within 0.01 of the jnp-native path
+    (bounded-error contract)."""
+    cfg = tiny_config(n_f=8)
+    rf = jnp.asarray(synth_rf(cfg, seed=4))
+    a = np.asarray(UltrasoundPipeline(
+        cfg.with_(cnn_transcendentals=True))(rf))
+    b = np.asarray(UltrasoundPipeline(
+        cfg.with_(cnn_transcendentals=False))(rf))
+    assert np.abs(a - b).max() < 0.01

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Variant
+from repro.models.attention import cache_update
+from repro.models.common import apply_rope, rmsnorm, rmsnorm_params
+
+
+@given(seed=st.integers(0, 1000), s=st.sampled_from([4, 8, 16]),
+       d=st.sampled_from([8, 16]))
+@settings(max_examples=25, deadline=None)
+def test_rope_preserves_norm(seed, s, d):
+    """Rotary embedding is a rotation: per-position vector norms are
+    invariant."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, s, 2, d)).astype(np.float32)
+    pos = jnp.asarray(rng.integers(0, 1000, (1, s)).astype(np.int32))
+    out = np.asarray(apply_rope(jnp.asarray(x), pos, 10_000.0))
+    # norm preserved over paired rotation dims
+    n_in = np.linalg.norm(x, axis=-1)
+    n_out = np.linalg.norm(out, axis=-1)
+    np.testing.assert_allclose(n_out, n_in, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_rope_relative_phase(seed):
+    """score(q_i, k_j) depends only on i - j (the rope contract)."""
+    rng = np.random.default_rng(seed)
+    d = 16
+    q = rng.standard_normal((1, 1, 1, d)).astype(np.float32)
+    k = rng.standard_normal((1, 1, 1, d)).astype(np.float32)
+
+    def score(pi, pj):
+        qr = apply_rope(jnp.asarray(q), jnp.asarray([[pi]], dtype=jnp.int32),
+                        1e4)
+        kr = apply_rope(jnp.asarray(k), jnp.asarray([[pj]], dtype=jnp.int32),
+                        1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(5, 3) - score(10, 8)) < 1e-3
+    assert abs(score(7, 0) - score(107, 100)) < 1e-3
+
+
+@given(seed=st.integers(0, 500), b=st.sampled_from([1, 3]),
+       s=st.sampled_from([4, 9]))
+@settings(max_examples=25, deadline=None)
+def test_cache_update_variants_agree(seed, b, s):
+    rng = np.random.default_rng(seed)
+    cache = rng.standard_normal((b, s, 2, 4)).astype(np.float32)
+    new = rng.standard_normal((b, 1, 2, 4)).astype(np.float32)
+    lengths = jnp.asarray(rng.integers(0, s, (b,)).astype(np.int32))
+    a = cache_update(jnp.asarray(cache), jnp.asarray(new), lengths,
+                     Variant.DYNAMIC)
+    c = cache_update(jnp.asarray(cache), jnp.asarray(new), lengths,
+                     Variant.CNN)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-6)
+    # untouched rows unchanged
+    an = np.asarray(a)
+    for bi in range(b):
+        li = int(lengths[bi])
+        mask = np.arange(s) != li
+        np.testing.assert_array_equal(an[bi, mask], cache[bi, mask])
+
+
+@given(seed=st.integers(0, 500), d=st.sampled_from([8, 32]))
+@settings(max_examples=25, deadline=None)
+def test_rmsnorm_scale_invariant(seed, d):
+    """rmsnorm(a*x) == rmsnorm(x) for a > 0 (the defining invariant)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((3, d)).astype(np.float32) + 0.1
+    p = rmsnorm_params(d, jnp.float32)
+    a = np.asarray(rmsnorm(p, jnp.asarray(x)))
+    b = np.asarray(rmsnorm(p, jnp.asarray(4.0 * x)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_chunked_attention_chunk_size_invariant(seed):
+    """The q-chunk size is an implementation detail: outputs must not
+    depend on it."""
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(seed)
+    b, s, h, dd = 1, 24, 2, 8
+    q = rng.standard_normal((b, s, h, dd)).astype(np.float32)
+    k = rng.standard_normal((b, s, h, dd)).astype(np.float32)
+    v = rng.standard_normal((b, s, h, dd)).astype(np.float32)
+    outs = [np.asarray(chunked_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), chunk=c))
+        for c in (6, 24)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-5)

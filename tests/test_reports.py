@@ -1,0 +1,60 @@
+"""Analysis tooling: the dry-run records parse and the reports render."""
+
+import json
+import os
+
+import pytest
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                           "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not generated (run the dry-run sweep)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", ["dryrun_baseline.json",
+                                  "dryrun_optimized.json"])
+def test_sweep_records_complete(name):
+    recs = _load(name)
+    lm = [r for r in recs if r["arch"] != "ultrasound-bmode-cnn-batch256"]
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in lm}
+    assert len(cells) >= 80, len(cells)         # 40 cells x 2 meshes
+    bad = [r for r in lm if r["status"] not in ("ok", "skipped")]
+    assert not bad, [(r["arch"], r["shape"], r["mesh"]) for r in bad]
+    # every compiled record carries the three roofline terms
+    for r in lm:
+        if r["status"] == "ok":
+            for k in ("t_compute", "t_memory", "t_collective"):
+                assert r["roofline"][k] >= 0.0
+            assert r["unknown_trip_loops"] == 0, r["arch"]
+
+
+def test_skips_match_design_rules():
+    recs = _load("dryrun_optimized.json")
+    skipped = {(r["arch"], r["shape"]) for r in recs
+               if r["status"] == "skipped" and r["mesh"] == "single"}
+    expected = {(a, "long_500k") for a in [
+        "qwen3-8b", "granite-3-8b", "llama3-405b", "qwen2-vl-2b",
+        "deepseek-v2-236b", "granite-moe-3b-a800m",
+        "seamless-m4t-large-v2"]}
+    assert skipped == expected, skipped ^ expected
+
+
+def test_roofline_report_renders():
+    import sys
+    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                             ".."))
+    if repo_root not in sys.path:  # `pytest tests/` has no cwd on sys.path
+        sys.path.insert(0, repo_root)
+    from benchmarks import roofline_report
+    recs = _load("dryrun_optimized.json")
+    table = roofline_report.render(recs, "single")
+    assert table.count("\n") > 40
+    assert "llama3-405b" in table
+    mem = roofline_report.memory_table(recs, "single")
+    assert "mamba2-130m" in mem

@@ -1,0 +1,119 @@
+"""Distributed SPMD correctness, in a subprocess with 8 forced host
+devices: the sharded train step must match the single-device result, and
+the compressed all-reduce must approximate the exact mean.
+
+(Subprocess because XLA locks the host device count at first jax init —
+the main pytest process must keep seeing 1 device.)
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import TrainConfig, get_smoke
+from repro.data.batches import synth_train_batch
+from repro.models import get_model
+from repro.runtime import sharding as shlib
+from repro.runtime import param_sharding as psh
+from repro.train import steps as steps_lib
+
+out = {}
+
+cfg = get_smoke("qwen3_8b").with_(remat=False)
+model = get_model(cfg)
+tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=10)
+key = jax.random.PRNGKey(0)
+batch = synth_train_batch(cfg, 4, 32, seed=0)
+
+# --- single device reference ---
+state0 = steps_lib.init_train_state(model, key)
+step = jax.jit(steps_lib.make_train_step(model, tcfg))
+_, m_ref = step(state0, batch)
+out["loss_ref"] = float(m_ref["loss"])
+
+# --- sharded (data=2, model=4) ---
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+binding = shlib.Binding(shlib.SINGLE_POD_RULES,
+                        dict(zip(mesh.axis_names, mesh.devices.shape)))
+with jax.set_mesh(mesh), shlib.use_binding(binding):
+    state_abs = jax.eval_shape(
+        lambda k: steps_lib.init_train_state(model, k), key)
+    logical = psh.logical_param_axes(state_abs["params"])
+    p_specs = psh.specs_from_logical(logical, state_abs["params"])
+    p_shard = psh.shardings_for(mesh, p_specs)
+    state = steps_lib.init_train_state(model, key)
+    state = {
+        "params": jax.tree.map(jax.device_put, state["params"], p_shard),
+        "opt": {
+            "m": jax.tree.map(jax.device_put, state["opt"]["m"], p_shard),
+            "v": jax.tree.map(jax.device_put, state["opt"]["v"], p_shard),
+            "step": state["opt"]["step"],
+        },
+    }
+    batch_sh = jax.tree.map(
+        lambda a: jax.device_put(a, NamedSharding(
+            mesh, P(*( ("data",) + (None,) * (a.ndim - 1))))), batch)
+    step_sh = jax.jit(steps_lib.make_train_step(model, tcfg))
+    new_state, m_sh = step_sh(state, batch_sh)
+    out["loss_sharded"] = float(m_sh["loss"])
+    out["gnorm_ref"] = float(m_ref["grad_norm"])
+    out["gnorm_sharded"] = float(m_sh["grad_norm"])
+
+# --- compressed all-reduce vs exact mean ---
+from jax.experimental.shard_map import shard_map
+from repro.optim.compress import compressed_psum_mean
+
+mesh2 = jax.make_mesh((8,), ("data",))
+g = np.random.default_rng(0).standard_normal((8, 64)).astype(np.float32)
+
+def body(gs):
+    mean, _ = compressed_psum_mean({"g": gs[0]}, "data")
+    return mean["g"][None]
+
+with jax.set_mesh(mesh2):
+    got = shard_map(body, mesh=mesh2, in_specs=P("data"),
+                    out_specs=P("data"))(jnp.asarray(g))
+exact = g.mean(axis=0)
+err = np.abs(np.asarray(got) - exact[None]).max()
+out["compress_err"] = float(err)
+out["compress_scale"] = float(np.abs(exact).max())
+
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_loss_matches_single_device(results):
+    assert abs(results["loss_sharded"] - results["loss_ref"]) < 2e-3, results
+
+
+def test_sharded_gradnorm_matches(results):
+    assert abs(results["gnorm_sharded"] - results["gnorm_ref"]) < 2e-2, \
+        results
+
+
+def test_compressed_allreduce_close(results):
+    # int8 quantization: error bounded by ~scale/127
+    assert results["compress_err"] <= results["compress_scale"] / 64, results
