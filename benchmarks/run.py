@@ -4,9 +4,16 @@ Prints ``name,us_per_call,derived`` CSV lines:
   table1_* : Table I  — variants x modalities, end-to-end (CPU stand-in)
   table2_* : Table II — portability (CPU measured + TPU predicted)
   table3_* : Table III — throughput context vs prior work
+  stream_* : sustained streaming throughput (batched stage-graph engine)
   lm_*     : zoo throughput smoke (tokens/s on reduced configs)
 
-``python -m benchmarks.run [--paper] [--fast]``
+``--json PATH`` writes a BENCH_*.json-compatible results file (name,
+t_avg, fps, mbps, percentiles); ``--ndjson PATH`` writes the full
+distribution telemetry (summary / per-sample / per-stage records; schema
+in EXPERIMENTS.md). ``--deadline-ms`` sets the per-forward-pass frame
+budget used for the deadline-miss rate.
+
+``python -m benchmarks.run [--paper] [--fast] [--json PATH] [--ndjson PATH]``
 """
 
 from __future__ import annotations
@@ -53,14 +60,27 @@ def main() -> None:
                     help="exact paper geometry (slow on CPU)")
     ap.add_argument("--fast", action="store_true",
                     help="fewer timed runs")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write BENCH_*.json-compatible results")
+    ap.add_argument("--ndjson", metavar="PATH", default=None,
+                    help="write per-sample / per-stage NDJSON telemetry")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="frame budget per forward pass (miss-rate metric)")
     args = ap.parse_args()
     runs = 2 if args.fast else 5
+    deadline_s = args.deadline_ms / 1e3
 
-    from benchmarks import table1_variants, table2_portability, \
-        table3_comparison
+    # Fail on unwritable telemetry paths now, not after minutes of timing.
+    for path in (args.json, args.ndjson):
+        if path:
+            open(path, "a").close()
+
+    from benchmarks import stream_throughput, table1_variants, \
+        table2_portability, table3_comparison
 
     print("name,us_per_call,derived")
-    t1 = table1_variants.run(paper_scale=args.paper, runs=runs)
+    t1 = table1_variants.run(paper_scale=args.paper, runs=runs,
+                             deadline_s=deadline_s, stage_breakdown=True)
     for r in t1:
         print(r.csv())
         sys.stdout.flush()
@@ -70,9 +90,24 @@ def main() -> None:
         sys.stdout.flush()
     for line in table3_comparison.run(t1):
         print(line)
+    stream_lines, stream_records = stream_throughput.run(
+        paper_scale=args.paper, fast=args.fast,
+        deadline_ms=args.deadline_ms)
+    for line in stream_lines:
+        print(line)
+        sys.stdout.flush()
     for line in _lm_smoke_bench():
         print(line)
         sys.stdout.flush()
+
+    if args.json or args.ndjson:
+        from repro.bench import write_json, write_ndjson
+        if args.json:
+            write_json(args.json, t1,
+                       extra={"stream": stream_records,
+                              "deadline_ms": args.deadline_ms})
+        if args.ndjson:
+            write_ndjson(args.ndjson, t1, extra_records=stream_records)
 
 
 if __name__ == "__main__":

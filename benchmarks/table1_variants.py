@@ -13,7 +13,7 @@ from typing import List
 
 import jax.numpy as jnp
 
-from repro.bench import BenchResult, bench_callable
+from repro.bench import BenchResult, bench_callable, bench_stages
 from repro.core import (Modality, UltrasoundPipeline, Variant)
 from repro.data import synth_rf
 
@@ -24,7 +24,9 @@ MODALITIES = [Modality.DOPPLER, Modality.POWER_DOPPLER, Modality.BMODE]
 VARIANTS = [Variant.DYNAMIC, Variant.CNN, Variant.SPARSE]
 
 
-def run(paper_scale: bool = False, runs: int = 5) -> List[BenchResult]:
+def run(paper_scale: bool = False, runs: int = 5,
+        deadline_s: float = None,
+        stage_breakdown: bool = False) -> List[BenchResult]:
     base = bench_config(paper_scale)
     rf = jnp.asarray(synth_rf(base, seed=0))
     results = []
@@ -36,7 +38,11 @@ def run(paper_scale: bool = False, runs: int = 5) -> List[BenchResult]:
                 f"table1/{cfg.name}/{variant.value}",
                 None, (pipe.consts, rf),
                 input_bytes=cfg.input_bytes, runs=runs,
+                deadline_s=deadline_s,
                 jitted=pipe._fn)
+            if stage_breakdown:
+                res.stage_breakdown = bench_stages(
+                    cfg, rf, runs=min(runs, 3))
             results.append(res)
     return results
 

@@ -1,38 +1,28 @@
 """Serving drivers for both system halves:
 
-1. Ultrasound: stream RF acquisitions through a fixed, fully-initialized
-   pipeline (the paper's execution model) and report steady-state FPS /
-   MB/s per modality.
+1. Ultrasound: stream batched RF acquisitions through the stage-graph
+   engine (serve_ultrasound_stream, 2 batches in flight) and report
+   sustained FPS / MB/s plus the completion-latency distribution.
 2. LM: slot-batched greedy decoding with prefill + KV cache (qwen3 smoke
    config) — the decode-cell path of the dry-run, runnable on CPU.
 
   PYTHONPATH=src python examples/serve_pipeline.py
 """
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import Modality, UltrasoundPipeline, tiny_config
-from repro.data import synth_rf
+from repro.core import tiny_config
+from repro.launch.serve import serve_ultrasound_stream
 
 
-def serve_ultrasound(n_acquisitions: int = 12):
+def serve_ultrasound(n_batches: int = 8, batch: int = 4):
     cfg = tiny_config(nz=32, nx=32, n_f=8, n_c=16)
-    pipe = UltrasoundPipeline(cfg)
-    # distinct acquisitions (e.g. a probe sweep), fixed shapes
-    frames = [jnp.asarray(synth_rf(cfg, seed=s)) for s in
-              range(n_acquisitions)]
-    jax.block_until_ready(pipe(frames[0]))   # warm-up
-
-    t0 = time.perf_counter()
-    for rf in frames:
-        jax.block_until_ready(pipe(rf))
-    dt = (time.perf_counter() - t0) / n_acquisitions
-    print(f"ultrasound {cfg.name}: T_avg={dt * 1e3:.2f} ms "
-          f"FPS={1 / dt:.1f} MB/s={cfg.input_bytes / dt / 1e6:.2f} "
-          f"(x{cfg.n_f} images per pass)")
+    stats = serve_ultrasound_stream(
+        cfg, batch=batch, n_batches=n_batches, depth=2, deadline_s=0.05)
+    lat = stats["latency"]
+    print(f"ultrasound {stats['name']}: {stats['acquisitions']} acquisitions "
+          f"({stats['frames']} frames) FPS={stats['fps']:.1f} "
+          f"MB/s={stats['sustained_mbps']:.2f} "
+          f"p50={lat.p50_s * 1e3:.2f}ms p95={lat.p95_s * 1e3:.2f}ms "
+          f"miss_rate={lat.miss_rate:.2f}")
 
 
 def serve_lm():

@@ -1,1 +1,9 @@
-from repro.bench.harness import BenchResult, bench_callable  # noqa: F401
+from repro.bench.harness import (  # noqa: F401
+    BenchResult,
+    LatencyStats,
+    bench_callable,
+    bench_stages,
+    latency_stats,
+    write_json,
+    write_ndjson,
+)

@@ -6,7 +6,12 @@ Execution model reproduced exactly:
   * explicit device synchronization (block_until_ready) around the timed
     window (§II-E),
   * repeated inference-only forward passes on a fixed input tensor,
-  * T_avg over the steady-state runs;
+  * per-run samples are retained (not just the mean): every result carries
+    the full latency distribution — p50/p95/p99, jitter (p95 − p50), and
+    the deadline-miss rate against a configurable frame budget — because
+    a mean alone cannot support a real-time throughput claim
+    (Kalibera & Jones; CORTEX methodology);
+      T_avg = mean(samples)
       FPS  = 1 / T_avg                      (eq. 1)
       MB/s = B_in / (T_avg * 1e6)           (eq. 2)
   * incremental energy per run E_run = (P_active - P_idle) * T_avg (eq. 3)
@@ -16,19 +21,69 @@ Execution model reproduced exactly:
     roofline compute fraction. Flagged as modeled, never measured.
   * peak memory from compiled.memory_analysis() (args + outputs + temps)
     — the static analogue of the paper's allocator peak.
+
+Telemetry is serialized two ways: the legacy one-line CSV (paper tables,
+unchanged) and NDJSON (one summary line + one line per sample + one line
+per stage; schema in EXPERIMENTS.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 # Energy model constants (documented in EXPERIMENTS.md; eq. 3 shape).
 CHIP_TDP_W = 200.0       # TPU v5e-class accelerator board power
 CHIP_IDLE_W = 60.0
+
+
+# ---------------------------------------------------------------------------
+# Latency distributions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    """Distribution summary of per-run wall-clock samples (seconds)."""
+
+    n: int
+    mean_s: float
+    std_s: float
+    p50_s: float
+    p95_s: float
+    p99_s: float
+    jitter_s: float                       # p95 - p50
+    budget_s: Optional[float] = None      # deadline per run, if configured
+    miss_rate: float = 0.0                # fraction of samples > budget_s
+
+    def json_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def latency_stats(samples_s: List[float],
+                  budget_s: Optional[float] = None) -> LatencyStats:
+    """Summarize per-run samples into the distribution the tables report."""
+    a = np.asarray(samples_s, dtype=np.float64)
+    assert a.size > 0, "latency_stats needs at least one sample"
+    p50, p95, p99 = np.percentile(a, [50.0, 95.0, 99.0])
+    miss = float((a > budget_s).mean()) if budget_s is not None else 0.0
+    return LatencyStats(
+        n=int(a.size), mean_s=float(a.mean()), std_s=float(a.std()),
+        p50_s=float(p50), p95_s=float(p95), p99_s=float(p99),
+        jitter_s=float(p95 - p50), budget_s=budget_s, miss_rate=miss)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -40,19 +95,88 @@ class BenchResult:
     joules_per_run_model: float
     peak_mem_gb: float
     runs: int
+    samples_s: List[float] = dataclasses.field(default_factory=list)
+    stats: Optional[LatencyStats] = None
+    stage_breakdown: Dict[str, LatencyStats] = dataclasses.field(
+        default_factory=dict)
 
     def csv(self) -> str:
+        """Legacy one-line CSV — format frozen (paper-table parsers)."""
         return (f"{self.name},{self.t_avg_s * 1e6:.1f},"
                 f"fps={self.fps:.2f};mbps={self.mbps:.2f};"
                 f"J_run_model={self.joules_per_run_model:.4f};"
                 f"peak_gb={self.peak_mem_gb:.3f}")
 
+    def json_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "t_avg_s": self.t_avg_s,
+            "fps": self.fps,
+            "mbps": self.mbps,
+            "joules_per_run_model": self.joules_per_run_model,
+            "peak_mem_gb": self.peak_mem_gb,
+            "runs": self.runs,
+        }
+        if self.stats is not None:
+            d["latency"] = self.stats.json_dict()
+        if self.stage_breakdown:
+            d["stages"] = {k: v.json_dict()
+                           for k, v in self.stage_breakdown.items()}
+        return d
+
+    def ndjson_lines(self) -> List[str]:
+        """Telemetry records: summary, per-sample, per-stage lines."""
+        lines = [json.dumps({"kind": "summary", **self.json_dict()})]
+        budget = self.stats.budget_s if self.stats else None
+        for i, t in enumerate(self.samples_s):
+            rec = {"kind": "sample", "name": self.name, "run": i, "t_s": t}
+            if budget is not None:
+                rec["deadline_missed"] = bool(t > budget)
+            lines.append(json.dumps(rec))
+        for stage, st in self.stage_breakdown.items():
+            lines.append(json.dumps({
+                "kind": "stage", "name": self.name, "stage": stage,
+                **st.json_dict()}))
+        return lines
+
+
+def write_ndjson(path: str, results: List["BenchResult"],
+                 extra_records: Optional[List[dict]] = None) -> None:
+    with open(path, "w") as f:
+        for r in results:
+            for line in r.ndjson_lines():
+                f.write(line + "\n")
+        for rec in (extra_records or []):
+            f.write(json.dumps(rec) + "\n")
+
+
+def write_json(path: str, results: List["BenchResult"],
+               extra: Optional[dict] = None) -> None:
+    doc = {"schema": "repro-bench-v1",
+           "results": [r.json_dict() for r in results]}
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
 
 def bench_callable(name: str, fn: Callable, args: tuple, *,
                    input_bytes: int, warmup: int = 2, runs: int = 5,
                    utilization: float = 0.5,
+                   deadline_s: Optional[float] = None,
                    jitted: Optional[Callable] = None) -> BenchResult:
-    """Time `fn(*args)` per the paper's execution model."""
+    """Time `fn(*args)` per the paper's execution model.
+
+    Each steady-state run is timed individually (sync'd with
+    block_until_ready) so the result carries the full latency
+    distribution, not just T_avg.
+    """
     fn_j = jitted if jitted is not None else jax.jit(fn)
 
     # warm-up (compilation, caching) — excluded from timing
@@ -60,11 +184,13 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
         out = fn_j(*args)
         jax.block_until_ready(out)
 
-    t0 = time.perf_counter()
+    samples: List[float] = []
     for _ in range(runs):
+        t0 = time.perf_counter()
         out = fn_j(*args)
         jax.block_until_ready(out)
-    t_avg = (time.perf_counter() - t0) / runs
+        samples.append(time.perf_counter() - t0)
+    t_avg = sum(samples) / runs
 
     # peak memory: static analysis of the compiled executable
     peak = 0.0
@@ -80,4 +206,37 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
     return BenchResult(
         name=name, t_avg_s=t_avg, fps=1.0 / t_avg,
         mbps=input_bytes / (t_avg * 1e6),
-        joules_per_run_model=e_run, peak_mem_gb=peak, runs=runs)
+        joules_per_run_model=e_run, peak_mem_gb=peak, runs=runs,
+        samples_s=samples, stats=latency_stats(samples, deadline_s))
+
+
+def bench_stages(cfg, rf, *, warmup: int = 1,
+                 runs: int = 3) -> Dict[str, LatencyStats]:
+    """Per-stage timing breakdown of the stage graph.
+
+    Each stage is jitted and synchronized individually on the real
+    intermediate tensors (each stage consumes its predecessor's output),
+    so the breakdown attributes end-to-end time to demod / beamform /
+    head. Individually-synced stage times need not sum to the fused
+    end-to-end time — fusion across stage boundaries is exactly what the
+    comparison quantifies.
+    """
+    from repro.core import stages as stages_lib
+
+    consts = jax.tree.map(jnp.asarray, stages_lib.init_graph_consts(cfg))
+    out: Dict[str, LatencyStats] = {}
+    x = rf
+    for name, fn in stages_lib.stage_fns(cfg).items():
+        fn_j = jax.jit(fn)
+        for _ in range(warmup):
+            y = fn_j(consts, x)
+            jax.block_until_ready(y)
+        samples = []
+        for _ in range(runs):
+            t0 = time.perf_counter()
+            y = fn_j(consts, x)
+            jax.block_until_ready(y)
+            samples.append(time.perf_counter() - t0)
+        out[name] = latency_stats(samples)
+        x = y
+    return out

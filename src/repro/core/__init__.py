@@ -16,5 +16,14 @@ from repro.core.config import (  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     UltrasoundPipeline,
     init_pipeline,
+    monolithic_pipeline_fn,
     pipeline_fn,
 )
+from repro.core.stages import (  # noqa: F401
+    Stage,
+    build_graph,
+    graph_fn,
+    init_graph_consts,
+    stage_fns,
+)
+from repro.core.executor import BatchedExecutor  # noqa: F401

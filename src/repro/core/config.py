@@ -95,6 +95,13 @@ class UltrasoundConfig:
     # MXU — V2's portability without its HBM operator). CPU: interpret.
     use_das_kernel: bool = False
 
+    # --- batched execution (stage-graph engine) ---------------------------
+    # How the BatchedExecutor maps the stage graph over the leading
+    # acquisition-batch axis: "vmap" vectorizes (one fused program, peak
+    # memory scales with batch), "map" sequentializes via lax.map (constant
+    # memory, serial latency).
+    exec_map: str = "vmap"
+
     # ---------------------------------------------------------------------
     @property
     def fs_iq(self) -> float:

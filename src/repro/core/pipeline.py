@@ -1,13 +1,19 @@
 """End-to-end RF-to-image pipelines (paper §II-A modalities).
 
-`init_pipeline(cfg)` precomputes every constant (geometry tables, FIR taps,
-interpolation operators) — this is module initialization, excluded from
-timing. `pipeline_fn(cfg)` returns a pure function (consts, rf) -> image
-suitable for jax.jit / pjit; rf is the only runtime input.
+Built on the stage graph in `repro.core.stages`:
+`init_pipeline(cfg)` merges every stage's precomputed constants (geometry
+tables, FIR taps, interpolation operators) — module initialization,
+excluded from timing. `pipeline_fn(cfg)` is the stage-graph composition:
+a pure (consts, rf) -> image function suitable for jax.jit / pjit; rf is
+the only runtime input.
 
 The SAME code runs every variant and every backend; variant selection is
 configuration, preserving the paper's "no backend-specific rewrites"
-invariant (§II-E).
+invariant (§II-E). `monolithic_pipeline_fn` keeps the pre-stage-graph
+single-function form as a reference oracle (tests assert the graph
+composition reproduces it exactly).
+
+For batched multi-acquisition execution see `repro.core.executor`.
 """
 
 from __future__ import annotations
@@ -19,35 +25,22 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import beamform, bmode, delays, demod, doppler
-from repro.core.config import Modality, UltrasoundConfig, Variant
+from repro.core import beamform, bmode, demod, doppler, stages
+from repro.core.config import Modality, UltrasoundConfig
 
 
 def init_pipeline(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
     """Precompute all pipeline constants (untimed, deterministic)."""
-    consts: Dict[str, np.ndarray] = dict(demod.demod_consts(cfg))
-    tables = delays.compute_delay_tables(cfg)
-
-    if cfg.variant == Variant.DYNAMIC:
-        consts.update(idx=tables.idx, frac=tables.frac,
-                      apod=tables.apod, rot=tables.rot)
-    elif cfg.variant == Variant.CNN:
-        consts["interp_matrix"] = delays.interp_matrix(cfg, tables)
-    elif cfg.variant == Variant.SPARSE:
-        op = delays.bsr_operator(cfg, tables)
-        consts["bsr_blocks"] = op.blocks
-        consts["bsr_col_idx"] = op.col_idx
-    else:  # pragma: no cover
-        raise ValueError(cfg.variant)
-
-    if cfg.modality in (Modality.DOPPLER, Modality.POWER_DOPPLER):
-        consts["wall_taps"] = doppler.wall_filter_taps(cfg)
-        consts["smooth"] = doppler.smoothing_kernel(cfg)
-    return consts
+    return stages.init_graph_consts(cfg)
 
 
 def pipeline_fn(cfg: UltrasoundConfig) -> Callable:
     """Pure (consts, rf) -> image function for the configured modality."""
+    return stages.graph_fn(cfg)
+
+
+def monolithic_pipeline_fn(cfg: UltrasoundConfig) -> Callable:
+    """Legacy single-function pipeline, kept as the reference oracle."""
 
     def run(consts, rf):
         iq = demod.rf_to_iq(consts, rf, cfg.decim)       # (n_s, n_c, n_f, 2)
@@ -73,6 +66,15 @@ class UltrasoundPipeline:
 
     def __call__(self, rf: jnp.ndarray) -> jnp.ndarray:
         return self._fn(self.consts, rf)
+
+    def stage_callables(self) -> Dict[str, Callable]:
+        """Per-stage jitted (consts, x) -> y functions, in graph order.
+
+        Feeding each stage's output to the next reproduces `__call__`;
+        used for the per-stage timing breakdown (§II-E telemetry).
+        """
+        return {name: jax.jit(fn)
+                for name, fn in stages.stage_fns(self.cfg).items()}
 
     @property
     def input_bytes(self) -> int:

@@ -1,0 +1,136 @@
+"""Stage graph for the RF-to-image pipelines (execution substrate).
+
+The pipeline is declared as an ordered graph of named stages
+
+    demod -> beamform -> {bmode | doppler | power_doppler}
+
+Each stage exposes two pure functions:
+
+  * ``init_consts(cfg)``  — precompute that stage's constants (numpy,
+    untimed, deterministic; the paper's §II-C module-initialization
+    contract, now attributable per stage), and
+  * ``apply(cfg, consts, x)`` — the stage's runtime transform. ``consts``
+    is the *merged* graph constant dict so stages stay composable with
+    the legacy monolithic function signature.
+
+`graph_fn(cfg)` composes the stages back into the monolithic
+(consts, rf) -> image function — same jaxpr as the legacy monolith, so
+jit/pjit callers are unchanged — while `stage_fns(cfg)` returns each
+stage as its own (consts, x) -> y callable so stages can be jitted and
+timed individually (per-stage telemetry, §II-E breakdown).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import beamform, bmode, delays, demod, doppler
+from repro.core.config import Modality, UltrasoundConfig, Variant
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One named node of the pipeline graph."""
+
+    name: str
+    init_consts: Callable[[UltrasoundConfig], Dict[str, np.ndarray]]
+    apply: Callable[[UltrasoundConfig, Dict, jnp.ndarray], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Stage definitions
+# ---------------------------------------------------------------------------
+
+
+def _demod_apply(cfg, consts, rf):
+    return demod.rf_to_iq(consts, rf, cfg.decim)         # (n_s, n_c, n_f, 2)
+
+
+def _beamform_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
+    consts: Dict[str, np.ndarray] = {}
+    tables = delays.compute_delay_tables(cfg)
+    if cfg.variant == Variant.DYNAMIC:
+        consts.update(idx=tables.idx, frac=tables.frac,
+                      apod=tables.apod, rot=tables.rot)
+    elif cfg.variant == Variant.CNN:
+        consts["interp_matrix"] = delays.interp_matrix(cfg, tables)
+    elif cfg.variant == Variant.SPARSE:
+        op = delays.bsr_operator(cfg, tables)
+        consts["bsr_blocks"] = op.blocks
+        consts["bsr_col_idx"] = op.col_idx
+    else:  # pragma: no cover
+        raise ValueError(cfg.variant)
+    return consts
+
+
+def _doppler_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
+    return {"wall_taps": doppler.wall_filter_taps(cfg),
+            "smooth": doppler.smoothing_kernel(cfg)}
+
+
+DEMOD = Stage("demod", lambda cfg: dict(demod.demod_consts(cfg)),
+              _demod_apply)
+
+BEAMFORM = Stage("beamform", _beamform_consts,
+                 lambda cfg, consts, iq: beamform.beamform(cfg, consts, iq))
+
+HEADS: Dict[Modality, Stage] = {
+    Modality.BMODE: Stage(
+        "bmode", lambda cfg: {},
+        lambda cfg, consts, bf: bmode.bmode_image(cfg, bf)),
+    Modality.DOPPLER: Stage(
+        "doppler", _doppler_consts,
+        lambda cfg, consts, bf: doppler.color_doppler_image(cfg, consts, bf)),
+    Modality.POWER_DOPPLER: Stage(
+        "power_doppler", _doppler_consts,
+        lambda cfg, consts, bf:
+            doppler.power_doppler_image(cfg, consts, bf)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Graph construction / composition
+# ---------------------------------------------------------------------------
+
+
+def build_graph(cfg: UltrasoundConfig) -> Tuple[Stage, ...]:
+    """Ordered stage graph for the configured modality."""
+    if cfg.modality not in HEADS:  # pragma: no cover
+        raise ValueError(cfg.modality)
+    return (DEMOD, BEAMFORM, HEADS[cfg.modality])
+
+
+def init_graph_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
+    """Merged constants of every stage (untimed, deterministic)."""
+    consts: Dict[str, np.ndarray] = {}
+    for stage in build_graph(cfg):
+        news = stage.init_consts(cfg)
+        dup = set(news) & set(consts)
+        assert not dup, f"stage {stage.name} redefines consts {dup}"
+        consts.update(news)
+    return consts
+
+
+def graph_fn(cfg: UltrasoundConfig) -> Callable:
+    """Pure (consts, rf) -> image composition of the stage graph."""
+    stages = build_graph(cfg)
+
+    def run(consts, rf):
+        x = rf
+        for stage in stages:
+            x = stage.apply(cfg, consts, x)
+        return x
+
+    return run
+
+
+def stage_fns(cfg: UltrasoundConfig) -> Dict[str, Callable]:
+    """Each stage as an individually jittable (consts, x) -> y callable."""
+    def bind(stage):
+        return lambda consts, x: stage.apply(cfg, consts, x)
+    return {stage.name: bind(stage) for stage in build_graph(cfg)}

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(cols_ref, block_ref, x_ref, y_ref):
     k = pl.program_id(1)
@@ -63,6 +65,6 @@ def bsr_spmm_pallas(cols, blocks, x, *, interpret: bool = True):
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_pb, bp, nf), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(cols, blocks, x)

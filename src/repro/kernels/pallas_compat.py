@@ -1,0 +1,24 @@
+"""Version-compat shims shared by the Pallas kernels.
+
+jax<0.5 exposes TPU compiler params as ``pltpu.TPUCompilerParams``; 0.5+
+renamed it ``CompilerParams``. Resolve once here so the next rename is a
+one-line fix.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _resolve_compiler_params():
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:  # pragma: no cover — future rename
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; update repro.kernels.pallas_compat "
+            "for this jax version")
+    return cls
+
+
+CompilerParams = _resolve_compiler_params()

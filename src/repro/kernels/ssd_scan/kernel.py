@@ -26,6 +26,8 @@ from jax import lax
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
 DEFAULT_CHUNK = 128
 
 
@@ -95,7 +97,7 @@ def ssd_scan_pallas(log_a, x, b, c, *, chunk: int = DEFAULT_CHUNK,
         out_specs=pl.BlockSpec((chunk, p), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((l, p), jnp.float32),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(log_a, x, b, c)

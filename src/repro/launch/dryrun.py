@@ -71,6 +71,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str) -> Dict:
 
         mem = compiled.memory_analysis()
         xla_cost = compiled.cost_analysis()
+        if isinstance(xla_cost, list):  # jax<0.5 returns [dict]
+            xla_cost = xla_cost[0] if xla_cost else {}
         # Loop-aware per-device cost (XLA's cost_analysis counts scan
         # bodies once — useless for 126-layer models; see hlo_cost.py).
         cost = hlo_cost.analyze(compiled.as_text())

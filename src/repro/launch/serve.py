@@ -1,18 +1,29 @@
-"""Batched serving driver: prefill + greedy decode over request batches.
+"""Serving drivers for both system halves.
 
-Slot-based batching: B fixed slots, each request prefills into its slot,
-then all slots decode in lockstep (static shapes — one compiled program
-for the whole serving session, the paper's §II-E execution model). Works
-on CPU with smoke configs; the production mesh shards slots over data and
-heads/experts over model exactly like the dry-run decode cells.
+LM half — slot-based batching: B fixed slots, each request prefills into
+its slot, then all slots decode in lockstep (static shapes — one compiled
+program for the whole serving session, the paper's §II-E execution model).
+Works on CPU with smoke configs; the production mesh shards slots over
+data and heads/experts over model exactly like the dry-run decode cells.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 16 --batch 4 --prompt-len 32 --max-new 32
+
+Ultrasound half — `serve_ultrasound_stream`: a streaming loop over the
+batched stage-graph engine (repro.core.executor). A synthetic acquisition
+source feeds RF batches; up to `depth` batches stay in flight against the
+async dispatch queue, and the loop reports *sustained* MB/s / FPS under
+queue pressure plus the batch-completion latency distribution
+(p50/p95/p99, jitter, deadline misses — semantics in EXPERIMENTS.md).
+
+  PYTHONPATH=src python -m repro.launch.serve --ultrasound \
+      --batch 4 --batches 32 --depth 2 --deadline-ms 50
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import numpy as np
@@ -94,15 +105,127 @@ def _grow_cache(model, cache, max_len: int):
             a is None or isinstance(a, (str, tuple)) for a in x))
 
 
+class SyntheticAcquisitionSource:
+    """Host-side RF batch source (stand-in for a probe front end).
+
+    Pre-generates a pool of distinct (batch, n_l, n_c, n_f) acquisitions
+    (a probe sweep) and cycles it — generation cost stays out of the
+    streaming window, while every dispatch still uploads a fresh
+    host->device buffer like a real acquisition stream would.
+    """
+
+    def __init__(self, cfg, batch: int, *, pool: int = 4, seed: int = 0):
+        from repro.data import synth_rf
+        self.cfg = cfg
+        self.batch = batch
+        self._pool = [
+            np.stack([synth_rf(cfg, seed=seed + b * batch + i)
+                      for i in range(batch)])
+            for b in range(pool)]
+        self._i = 0
+
+    def next(self) -> np.ndarray:
+        rf = self._pool[self._i % len(self._pool)]
+        self._i += 1
+        return rf
+
+
+def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
+                            depth: int = 2, pool: int = 4, seed: int = 0,
+                            deadline_s=None, source=None) -> dict:
+    """Stream RF batches through the stage-graph engine, `depth` in flight.
+
+    Dispatches are asynchronous; the loop only blocks on the *oldest*
+    in-flight batch once `depth` are queued, so host-side source work and
+    device compute overlap. Completion-to-completion intervals form the
+    latency samples; the per-batch deadline budget is
+    ``batch * deadline_s`` (deadline_s is the per-acquisition frame
+    budget — see EXPERIMENTS.md).
+
+    Returns a stats dict with sustained throughput and a LatencyStats.
+    """
+    from repro.bench.harness import latency_stats
+    from repro.core.executor import BatchedExecutor
+
+    if batch < 1 or n_batches < 1 or depth < 1:
+        raise ValueError(
+            f"batch, n_batches, depth must be >= 1 "
+            f"(got {batch}, {n_batches}, {depth})")
+
+    engine = BatchedExecutor(cfg)
+    if source is None:
+        source = SyntheticAcquisitionSource(cfg, batch, pool=pool, seed=seed)
+
+    # warm-up: compile + one full round trip, excluded from timing
+    jax.block_until_ready(engine(jnp.asarray(source.next())))
+
+    in_flight: collections.deque = collections.deque()
+    intervals = []
+    t0 = time.perf_counter()
+    last = t0
+    for _ in range(n_batches):
+        in_flight.append(engine(jnp.asarray(source.next())))
+        while len(in_flight) >= depth:
+            jax.block_until_ready(in_flight.popleft())
+            now = time.perf_counter()
+            intervals.append(now - last)
+            last = now
+    while in_flight:
+        jax.block_until_ready(in_flight.popleft())
+        now = time.perf_counter()
+        intervals.append(now - last)
+        last = now
+    wall = time.perf_counter() - t0
+
+    acqs = n_batches * batch
+    budget = batch * deadline_s if deadline_s is not None else None
+    return {
+        "name": f"stream/{cfg.name}/{cfg.variant.value}/b{batch}",
+        "batch": batch, "n_batches": n_batches, "depth": depth,
+        "wall_s": wall,
+        "acquisitions": acqs,
+        "frames": acqs * cfg.n_f,
+        "sustained_mbps": acqs * cfg.input_bytes / (wall * 1e6),
+        "fps": acqs * cfg.n_f / wall,
+        "acq_per_s": acqs / wall,
+        "latency": latency_stats(intervals, budget_s=budget),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--ultrasound", action="store_true",
+                    help="stream RF through the batched stage-graph engine")
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--batches", type=int, default=32,
+                    help="ultrasound: RF batches to stream")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="ultrasound: max batches in flight")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="ultrasound: per-acquisition frame budget")
     args = ap.parse_args()
+
+    if args.ultrasound:
+        from repro.core import tiny_config
+        cfg = tiny_config(nz=32, nx=32, n_f=8, n_c=16)
+        stats = serve_ultrasound_stream(
+            cfg, batch=args.batch, n_batches=args.batches,
+            depth=args.depth,
+            deadline_s=(args.deadline_ms / 1e3
+                        if args.deadline_ms is not None else None))
+        lat = stats["latency"]
+        print(f"{stats['name']}: {stats['acquisitions']} acquisitions "
+              f"({stats['frames']} frames) in {stats['wall_s']:.2f}s = "
+              f"{stats['sustained_mbps']:.2f} MB/s, {stats['fps']:.1f} FPS; "
+              f"p50={lat.p50_s * 1e3:.2f}ms p95={lat.p95_s * 1e3:.2f}ms "
+              f"p99={lat.p99_s * 1e3:.2f}ms jitter={lat.jitter_s * 1e3:.2f}ms "
+              f"miss_rate={lat.miss_rate:.3f}")
+        return
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     out, stats = serve_session(

@@ -37,7 +37,9 @@ def compressed_psum_mean(grads, axis_names, residual=None):
     n = 1
     for a in (axis_names if isinstance(axis_names, (tuple, list))
               else (axis_names,)):
-        n *= lax.axis_size(a)
+        # jax<0.5 has no lax.axis_size; psum of 1 is the portable spelling.
+        n *= (lax.axis_size(a) if hasattr(lax, "axis_size")
+              else lax.psum(1, a))
 
     def one(g, r):
         gf = g.astype(jnp.float32)

@@ -43,11 +43,15 @@ step = jax.jit(steps_lib.make_train_step(model, tcfg))
 _, m_ref = step(state0, batch)
 out["loss_ref"] = float(m_ref["loss"])
 
+# jax<0.5 has no jax.set_mesh; the Mesh context manager is equivalent here.
+def set_mesh(mesh):
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
 # --- sharded (data=2, model=4) ---
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 binding = shlib.Binding(shlib.SINGLE_POD_RULES,
                         dict(zip(mesh.axis_names, mesh.devices.shape)))
-with jax.set_mesh(mesh), shlib.use_binding(binding):
+with set_mesh(mesh), shlib.use_binding(binding):
     state_abs = jax.eval_shape(
         lambda k: steps_lib.init_train_state(model, k), key)
     logical = psh.logical_param_axes(state_abs["params"])
@@ -82,7 +86,7 @@ def body(gs):
     mean, _ = compressed_psum_mean({"g": gs[0]}, "data")
     return mean["g"][None]
 
-with jax.set_mesh(mesh2):
+with set_mesh(mesh2):
     got = shard_map(body, mesh=mesh2, in_specs=P("data"),
                     out_specs=P("data"))(jnp.asarray(g))
 exact = g.mean(axis=0)

@@ -1,0 +1,87 @@
+"""Streaming serve loop + distribution telemetry (harness upgrade)."""
+
+import json
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.bench import bench_callable, bench_stages, latency_stats
+from repro.core import tiny_config
+from repro.data import synth_rf
+from repro.launch.serve import (SyntheticAcquisitionSource,
+                                serve_ultrasound_stream)
+
+
+def test_latency_stats_percentiles_and_misses():
+    samples = [i / 1000.0 for i in range(1, 101)]      # 1..100 ms
+    st = latency_stats(samples, budget_s=0.050)
+    assert st.n == 100
+    np.testing.assert_allclose(st.p50_s, 0.0505, atol=1e-6)
+    assert st.p50_s <= st.p95_s <= st.p99_s
+    np.testing.assert_allclose(st.jitter_s, st.p95_s - st.p50_s, atol=1e-12)
+    assert st.miss_rate == 0.5                          # 51..100 ms late
+    assert latency_stats(samples).miss_rate == 0.0      # no budget set
+
+
+def test_bench_callable_records_distribution():
+    res = bench_callable("t", lambda x: x * 2.0, (jnp.ones((8, 8)),),
+                         input_bytes=1_000_000, warmup=1, runs=4,
+                         deadline_s=100.0)
+    assert len(res.samples_s) == 4
+    assert res.stats is not None and res.stats.n == 4
+    np.testing.assert_allclose(res.t_avg_s, np.mean(res.samples_s))
+    assert res.stats.miss_rate == 0.0                   # generous budget
+
+
+def test_ndjson_telemetry_schema():
+    res = bench_callable("t", lambda x: x + 1.0, (jnp.ones((4, 4)),),
+                         input_bytes=1000, warmup=1, runs=3, deadline_s=1.0)
+    cfg = tiny_config()
+    res.stage_breakdown = bench_stages(cfg, jnp.asarray(synth_rf(cfg)),
+                                       runs=2)
+    recs = [json.loads(line) for line in res.ndjson_lines()]
+    kinds = [r["kind"] for r in recs]
+    assert kinds[0] == "summary" and kinds.count("sample") == 3
+    assert {r["stage"] for r in recs if r["kind"] == "stage"} == {
+        "demod", "beamform", "bmode"}
+    summary = recs[0]
+    lat = summary["latency"]
+    assert lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"]
+    for r in recs:
+        if r["kind"] == "sample":
+            assert r["deadline_missed"] is False
+
+
+def test_acquisition_source_shapes_and_cycling():
+    cfg = tiny_config()
+    src = SyntheticAcquisitionSource(cfg, batch=3, pool=2, seed=7)
+    a, b, c = src.next(), src.next(), src.next()
+    assert a.shape == (3,) + cfg.rf_shape
+    assert not np.array_equal(a, b)                     # distinct sweeps
+    assert np.array_equal(a, c)                         # pool of 2 cycles
+
+
+def test_streaming_batched_throughput_beats_single_frame():
+    """Acceptance: sustained MB/s at batch N>1 >= single-frame MB/s.
+
+    At tiny geometry the batched engine wins by a wide margin (dispatch
+    overhead dominates), but this is still a wall-clock inequality on a
+    shared machine — retry once so a scheduler stall during one window
+    can't red-flag the suite.
+    """
+    cfg = tiny_config()
+    for attempt in range(2):
+        single = serve_ultrasound_stream(cfg, batch=1, n_batches=8, depth=1,
+                                         deadline_s=1.0)
+        batched = serve_ultrasound_stream(cfg, batch=8, n_batches=8, depth=2,
+                                          deadline_s=1.0)
+        if batched["sustained_mbps"] >= single["sustained_mbps"]:
+            break
+    assert batched["sustained_mbps"] >= single["sustained_mbps"]
+    assert batched["acquisitions"] == 64
+    assert batched["frames"] == 64 * cfg.n_f
+    lat = batched["latency"]
+    assert lat.p50_s <= lat.p95_s <= lat.p99_s
+    assert lat.budget_s == 8 * 1.0                      # batch * deadline
+    assert lat.miss_rate == 0.0
