@@ -13,6 +13,12 @@ distribution telemetry (summary / per-sample / per-stage records; schema
 in EXPERIMENTS.md). ``--deadline-ms`` sets the per-forward-pass frame
 budget used for the deadline-miss rate.
 
+``--plan {fixed,heuristic,autotune}`` selects the variant-resolution
+policy and ``--variant auto`` hands the choice to the planner
+(repro.core.plan); the resolved plan is stamped into every telemetry
+record. ``--only`` restricts the run to one section (the CI autotune
+smoke uses ``--only table1 --variant auto --plan autotune``).
+
 ``python -m benchmarks.run [--paper] [--fast] [--json PATH] [--ndjson PATH]``
 """
 
@@ -66,9 +72,31 @@ def main() -> None:
                     help="write per-sample / per-stage NDJSON telemetry")
     ap.add_argument("--deadline-ms", type=float, default=100.0,
                     help="frame budget per forward pass (miss-rate metric)")
+    ap.add_argument("--plan", default="fixed",
+                    choices=["fixed", "heuristic", "autotune"],
+                    help="variant-resolution policy for the table1/stream "
+                         "sections (repro.core.plan)")
+    ap.add_argument("--variant", default=None,
+                    choices=["dynamic", "cnn", "sparse", "auto"],
+                    help="single variant for the table1/stream sections "
+                         "(auto = planner picks); default: sweep all "
+                         "three. table2's dynamic-vs-cnn comparison is "
+                         "fixed by construction")
+    ap.add_argument("--only", default="all",
+                    choices=["all", "table1", "table2", "table3",
+                             "stream", "lm"],
+                    help="run a single benchmark section")
     args = ap.parse_args()
     runs = 2 if args.fast else 5
     deadline_s = args.deadline_ms / 1e3
+
+    from repro.core import Variant
+    variant = Variant(args.variant) if args.variant else None
+    if variant == Variant.AUTO and args.plan == "fixed":
+        ap.error("--variant auto needs --plan heuristic or autotune")
+
+    def on(section):
+        return args.only in ("all", section)
 
     # Fail on unwritable telemetry paths now, not after minutes of timing.
     for path in (args.json, args.ndjson):
@@ -79,33 +107,44 @@ def main() -> None:
         table2_portability, table3_comparison
 
     print("name,us_per_call,derived")
-    t1 = table1_variants.run(paper_scale=args.paper, runs=runs,
-                             deadline_s=deadline_s, stage_breakdown=True)
-    for r in t1:
-        print(r.csv())
-        sys.stdout.flush()
-    for line in table2_portability.run(paper_scale=args.paper,
-                                       runs=max(runs - 2, 2)):
-        print(line)
-        sys.stdout.flush()
-    for line in table3_comparison.run(t1):
-        print(line)
-    stream_lines, stream_records = stream_throughput.run(
-        paper_scale=args.paper, fast=args.fast,
-        deadline_ms=args.deadline_ms)
-    for line in stream_lines:
-        print(line)
-        sys.stdout.flush()
-    for line in _lm_smoke_bench():
-        print(line)
-        sys.stdout.flush()
+    t1 = []
+    if on("table1") or on("table3"):   # table3 derives from table1 rows
+        t1 = table1_variants.run(paper_scale=args.paper, runs=runs,
+                                 deadline_s=deadline_s, stage_breakdown=True,
+                                 policy=args.plan, variant=variant)
+        if on("table1"):
+            for r in t1:
+                print(r.csv())
+                sys.stdout.flush()
+    if on("table2"):
+        for line in table2_portability.run(paper_scale=args.paper,
+                                           runs=max(runs - 2, 2)):
+            print(line)
+            sys.stdout.flush()
+    if on("table3"):
+        for line in table3_comparison.run(t1):
+            print(line)
+    stream_records = []
+    if on("stream"):
+        stream_lines, stream_records = stream_throughput.run(
+            paper_scale=args.paper, fast=args.fast,
+            deadline_ms=args.deadline_ms,
+            policy=args.plan, variant=variant)
+        for line in stream_lines:
+            print(line)
+            sys.stdout.flush()
+    if on("lm"):
+        for line in _lm_smoke_bench():
+            print(line)
+            sys.stdout.flush()
 
     if args.json or args.ndjson:
         from repro.bench import write_json, write_ndjson
         if args.json:
             write_json(args.json, t1,
                        extra={"stream": stream_records,
-                              "deadline_ms": args.deadline_ms})
+                              "deadline_ms": args.deadline_ms,
+                              "plan_policy": args.plan})
         if args.ndjson:
             write_ndjson(args.ndjson, t1, extra_records=stream_records)
 

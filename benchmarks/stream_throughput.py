@@ -11,7 +11,7 @@ sustained MB/s should be monotone non-decreasing in batch on every backend.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core import Variant
 from repro.launch.serve import serve_ultrasound_stream
@@ -22,11 +22,16 @@ BATCH_SIZES = [1, 4]
 
 
 def run(paper_scale: bool = False, fast: bool = False,
-        deadline_ms: float = 100.0) -> Tuple[List[str], List[dict]]:
+        deadline_ms: float = 100.0, policy: Optional[str] = None,
+        variant: Optional[Variant] = None
+        ) -> Tuple[List[str], List[dict]]:
     """Returns (csv lines, json-ready records), one per batch size."""
-    # DYNAMIC is the fast variant on the gather-friendly CPU stand-in
-    # (paper GPU rows) — stream the heaviest realistic path, B-mode.
-    cfg = stream_config(paper_scale).with_(variant=Variant.DYNAMIC)
+    # Default: DYNAMIC, the fast variant on the gather-friendly CPU
+    # stand-in (paper GPU rows) — stream the heaviest realistic path,
+    # B-mode. `variant=Variant.AUTO` + a policy delegates to the planner;
+    # the resolved plan rides along in every record.
+    cfg = stream_config(paper_scale).with_(
+        variant=variant if variant is not None else Variant.DYNAMIC)
     n_batches = 8 if fast else 24
     deadline_s = deadline_ms / 1e3
 
@@ -37,7 +42,7 @@ def run(paper_scale: bool = False, fast: bool = False,
         stats = serve_ultrasound_stream(
             cfg, batch=batch, n_batches=n_batches,
             depth=1 if batch == 1 else 2,
-            deadline_s=deadline_s)
+            deadline_s=deadline_s, policy=policy)
         lat = stats["latency"]
         t_acq_us = 1e6 / stats["acq_per_s"]
         lines.append(

@@ -5,16 +5,21 @@ reporting T_avg, FPS, MB/s, modeled J/run, peak memory — the paper's exact
 column set. CPU stand-in for the RTX 5090 rows; relative variant structure
 (dynamic fastest on gather-friendly hardware, CNN heavier but portable,
 sparse in between with higher memory) is the validated claim.
+
+Every row is measured through an explicit `PipelinePlan` and the resolved
+plan is stamped into the BenchResult, so each number is attributable to an
+exact (backend, variant, exec_map, policy) decision. `variant="auto"` +
+a policy runs a single planner-resolved row instead of the full sweep.
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import jax.numpy as jnp
 
 from repro.bench import BenchResult, bench_callable, bench_stages
-from repro.core import (Modality, UltrasoundPipeline, Variant)
+from repro.core import (Modality, UltrasoundPipeline, Variant, plan_pipeline)
 from repro.data import synth_rf
 
 from benchmarks.common import bench_config
@@ -26,20 +31,25 @@ VARIANTS = [Variant.DYNAMIC, Variant.CNN, Variant.SPARSE]
 
 def run(paper_scale: bool = False, runs: int = 5,
         deadline_s: float = None,
-        stage_breakdown: bool = False) -> List[BenchResult]:
+        stage_breakdown: bool = False,
+        policy: str = "fixed",
+        variant: Optional[Variant] = None) -> List[BenchResult]:
     base = bench_config(paper_scale)
     rf = jnp.asarray(synth_rf(base, seed=0))
+    variants = VARIANTS if variant is None else [variant]
     results = []
-    for variant in VARIANTS:
+    for v in variants:
         for modality in MODALITIES:
-            cfg = base.with_(variant=variant, modality=modality)
-            pipe = UltrasoundPipeline(cfg)     # init excluded from timing
+            cfg = base.with_(variant=v, modality=modality)
+            plan = plan_pipeline(cfg, policy=policy)
+            pipe = UltrasoundPipeline(cfg, plan=plan)
+            cfg = pipe.cfg                 # plan-resolved (AUTO -> concrete)
             res = bench_callable(
-                f"table1/{cfg.name}/{variant.value}",
+                f"table1/{cfg.name}/{cfg.variant.value}",
                 None, (pipe.consts, rf),
                 input_bytes=cfg.input_bytes, runs=runs,
                 deadline_s=deadline_s,
-                jitted=pipe._fn)
+                jitted=pipe.jitted, plan=plan)
             if stage_breakdown:
                 res.stage_breakdown = bench_stages(
                     cfg, rf, runs=min(runs, 3))

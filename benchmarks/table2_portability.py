@@ -36,7 +36,7 @@ HBM_BW = 819e9
 
 
 def predicted_tpu_time(pipe: UltrasoundPipeline, rf) -> dict:
-    compiled = pipe._fn.lower(pipe.consts, rf).compile()
+    compiled = pipe.jitted.lower(pipe.consts, rf).compile()
     cost = hlo_cost.analyze(compiled.as_text())
     t_gather = cost.gather_elems / GATHER_RATE
     t = max(cost.flops / PEAK_FLOPS, cost.bytes_min / HBM_BW, t_gather)
@@ -61,7 +61,8 @@ def run(paper_scale: bool = False, runs: int = 3) -> List[str]:
             cpu = bench_callable(
                 f"table2/{cfg.name}/{variant.value}/cpu",
                 None, (pipe.consts, rf),
-                input_bytes=cfg.input_bytes, runs=runs, jitted=pipe._fn)
+                input_bytes=cfg.input_bytes, runs=runs, jitted=pipe.jitted,
+                plan=pipe.plan)
             pred = predicted_tpu_time(pipe, rf)
             mbps_tpu = cfg.input_bytes / (pred["t_pred_s"] * 1e6)
             lines.append(

@@ -31,6 +31,8 @@ def main():
         expected = -4.0 * flow
         est = {}
         for v in Variant:
+            if not v.concrete:      # AUTO: planner token, not a formulation
+                continue
             img = np.asarray(UltrasoundPipeline(
                 cfg0.with_(variant=v))(jnp.asarray(rf)))
             # velocity where signal exists (central region)

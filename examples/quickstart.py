@@ -35,6 +35,8 @@ def main():
 
     for modality in Modality:
         for variant in Variant:
+            if not variant.concrete:           # AUTO demoed below
+                continue
             cfg = cfg0.with_(modality=modality, variant=variant)
             pipe = UltrasoundPipeline(cfg)     # init: precompute (untimed)
             out = pipe(rf)                     # warm-up / compile
@@ -46,6 +48,13 @@ def main():
             print(f"{cfg.name:24s} {variant.value:8s} "
                   f"T={dt * 1e3:7.2f} ms  FPS={1 / dt:7.1f}  "
                   f"MB/s={cfg.input_bytes / dt / 1e6:8.2f}")
+
+    # Variant.AUTO: let the backend-aware planner pick the formulation
+    # (policy="autotune" would measure instead of consulting the registry).
+    auto = UltrasoundPipeline(cfg0.with_(variant=Variant.AUTO))
+    print(f"\nplanner: {auto.plan.provenance} "
+          f"(policy={auto.plan.policy}, backend={auto.plan.backend})")
+
     print("\nB-mode (dynamic variant, frame 0):\n")
     img = np.asarray(UltrasoundPipeline(
         cfg0.with_(modality=Modality.BMODE))(rf))[..., 0]

@@ -99,6 +99,9 @@ class BenchResult:
     stats: Optional[LatencyStats] = None
     stage_breakdown: Dict[str, LatencyStats] = dataclasses.field(
         default_factory=dict)
+    # Resolved execution plan (PipelinePlan.json_dict()): the exact
+    # (backend, variant, exec_map, policy) decision behind this number.
+    plan: Optional[dict] = None
 
     def csv(self) -> str:
         """Legacy one-line CSV — format frozen (paper-table parsers)."""
@@ -117,6 +120,8 @@ class BenchResult:
             "peak_mem_gb": self.peak_mem_gb,
             "runs": self.runs,
         }
+        if self.plan is not None:
+            d["plan"] = self.plan
         if self.stats is not None:
             d["latency"] = self.stats.json_dict()
         if self.stage_breakdown:
@@ -125,18 +130,27 @@ class BenchResult:
         return d
 
     def ndjson_lines(self) -> List[str]:
-        """Telemetry records: summary, per-sample, per-stage lines."""
+        """Telemetry records: summary, per-sample, per-stage lines.
+
+        Every record carries the resolved plan (when one was stamped) so
+        each row is independently attributable to an exact
+        (backend, variant, exec_map) decision.
+        """
         lines = [json.dumps({"kind": "summary", **self.json_dict()})]
         budget = self.stats.budget_s if self.stats else None
         for i, t in enumerate(self.samples_s):
             rec = {"kind": "sample", "name": self.name, "run": i, "t_s": t}
             if budget is not None:
                 rec["deadline_missed"] = bool(t > budget)
+            if self.plan is not None:
+                rec["plan"] = self.plan
             lines.append(json.dumps(rec))
         for stage, st in self.stage_breakdown.items():
-            lines.append(json.dumps({
-                "kind": "stage", "name": self.name, "stage": stage,
-                **st.json_dict()}))
+            rec = {"kind": "stage", "name": self.name, "stage": stage,
+                   **st.json_dict()}
+            if self.plan is not None:
+                rec["plan"] = self.plan
+            lines.append(json.dumps(rec))
         return lines
 
 
@@ -166,30 +180,40 @@ def write_json(path: str, results: List["BenchResult"],
 # ---------------------------------------------------------------------------
 
 
-def bench_callable(name: str, fn: Callable, args: tuple, *,
-                   input_bytes: int, warmup: int = 2, runs: int = 5,
-                   utilization: float = 0.5,
-                   deadline_s: Optional[float] = None,
-                   jitted: Optional[Callable] = None) -> BenchResult:
-    """Time `fn(*args)` per the paper's execution model.
-
-    Each steady-state run is timed individually (sync'd with
-    block_until_ready) so the result carries the full latency
-    distribution, not just T_avg.
-    """
-    fn_j = jitted if jitted is not None else jax.jit(fn)
-
-    # warm-up (compilation, caching) — excluded from timing
+def _timed_samples(fn_j: Callable, args: tuple, *, warmup: int,
+                   runs: int) -> List[float]:
+    """The paper's §II-E measurement protocol, shared by every bench:
+    warm-up iterations excluded from timing, then per-run wall clock with
+    device sync (block_until_ready) bracketing each sample."""
     for _ in range(warmup):
-        out = fn_j(*args)
-        jax.block_until_ready(out)
-
+        jax.block_until_ready(fn_j(*args))
     samples: List[float] = []
     for _ in range(runs):
         t0 = time.perf_counter()
         out = fn_j(*args)
         jax.block_until_ready(out)
         samples.append(time.perf_counter() - t0)
+    return samples
+
+
+def bench_callable(name: str, fn: Callable, args: tuple, *,
+                   input_bytes: int, warmup: int = 2, runs: int = 5,
+                   utilization: float = 0.5,
+                   deadline_s: Optional[float] = None,
+                   jitted: Optional[Callable] = None,
+                   plan=None) -> BenchResult:
+    """Time `fn(*args)` per the paper's execution model.
+
+    Each steady-state run is timed individually (sync'd with
+    block_until_ready) so the result carries the full latency
+    distribution, not just T_avg. `plan` (a PipelinePlan or its
+    json_dict) is stamped into the result and every telemetry record.
+    """
+    fn_j = jitted if jitted is not None else jax.jit(fn)
+    if plan is not None and not isinstance(plan, dict):
+        plan = plan.json_dict()
+
+    samples = _timed_samples(fn_j, args, warmup=warmup, runs=runs)
     t_avg = sum(samples) / runs
 
     # peak memory: static analysis of the compiled executable
@@ -207,7 +231,8 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
         name=name, t_avg_s=t_avg, fps=1.0 / t_avg,
         mbps=input_bytes / (t_avg * 1e6),
         joules_per_run_model=e_run, peak_mem_gb=peak, runs=runs,
-        samples_s=samples, stats=latency_stats(samples, deadline_s))
+        samples_s=samples, stats=latency_stats(samples, deadline_s),
+        plan=plan)
 
 
 def bench_stages(cfg, rf, *, warmup: int = 1,
@@ -222,21 +247,14 @@ def bench_stages(cfg, rf, *, warmup: int = 1,
     comparison quantifies.
     """
     from repro.core import stages as stages_lib
+    from repro.core.pipeline import init_pipeline
 
-    consts = jax.tree.map(jnp.asarray, stages_lib.init_graph_consts(cfg))
+    consts = jax.tree.map(jnp.asarray, init_pipeline(cfg))
     out: Dict[str, LatencyStats] = {}
     x = rf
     for name, fn in stages_lib.stage_fns(cfg).items():
         fn_j = jax.jit(fn)
-        for _ in range(warmup):
-            y = fn_j(consts, x)
-            jax.block_until_ready(y)
-        samples = []
-        for _ in range(runs):
-            t0 = time.perf_counter()
-            y = fn_j(consts, x)
-            jax.block_until_ready(y)
-            samples.append(time.perf_counter() - t0)
+        samples = _timed_samples(fn_j, (consts, x), warmup=warmup, runs=runs)
         out[name] = latency_stats(samples)
-        x = y
+        x = fn_j(consts, x)
     return out

@@ -10,14 +10,24 @@ from repro.core.config import (  # noqa: F401
     PIPELINE_NAMES,
     UltrasoundConfig,
     Variant,
+    config_hash,
     paper_config,
     tiny_config,
 )
 from repro.core.pipeline import (  # noqa: F401
+    CONSTS_CACHE_STATS,
     UltrasoundPipeline,
+    clear_consts_cache,
+    consts_cache_dir,
     init_pipeline,
     monolithic_pipeline_fn,
     pipeline_fn,
+    set_consts_cache_dir,
+)
+from repro.core.plan import (  # noqa: F401
+    PipelinePlan,
+    plan_pipeline,
+    register_backend_preference,
 )
 from repro.core.stages import (  # noqa: F401
     Stage,

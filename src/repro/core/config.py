@@ -14,7 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Tuple
+import hashlib
+import json
+from typing import Collection, Tuple
 
 
 class Variant(str, enum.Enum):
@@ -23,11 +25,19 @@ class Variant(str, enum.Enum):
     DYNAMIC - V1: explicit gather / dynamic indexing.
     CNN     - V2: convolutions, pointwise ops, matmuls (1x1 convs), reductions.
     SPARSE  - V3: structured (block-) sparse matrices.
+    AUTO    - planner placeholder: resolved to one of the above per backend
+              by ``repro.core.plan.plan_pipeline`` before any consts are
+              built or code is compiled. Never executable directly.
     """
 
     DYNAMIC = "dynamic"
     CNN = "cnn"
     SPARSE = "sparse"
+    AUTO = "auto"
+
+    @property
+    def concrete(self) -> bool:
+        return self is not Variant.AUTO
 
 
 class Modality(str, enum.Enum):
@@ -132,6 +142,34 @@ class UltrasoundConfig:
 
     def with_(self, **kwargs) -> "UltrasoundConfig":
         return dataclasses.replace(self, **kwargs)
+
+    def canonical_hash(self, exclude: Collection[str] = ()) -> str:
+        return config_hash(self, exclude=exclude)
+
+
+# Bump when the meaning of a config field (and hence of any artifact keyed
+# on the hash — consts cache entries, autotune memos) changes incompatibly.
+CONFIG_HASH_SCHEMA = "ultrasound-cfg-v1"
+
+
+def config_hash(cfg: UltrasoundConfig, *,
+                exclude: Collection[str] = ()) -> str:
+    """Canonical content hash of a config (hex, 16 chars).
+
+    Every dataclass field participates unless listed in ``exclude``
+    (e.g. the planner memoizes autotune results per config *ignoring*
+    ``variant``, the axis it searches over). Enum fields serialize as
+    their string values and floats via repr, so the hash is stable
+    across processes — it keys the on-disk constants cache.
+    """
+    d = dataclasses.asdict(cfg)
+    for name in exclude:
+        if name not in d:
+            raise KeyError(f"unknown config field: {name!r}")
+        del d[name]
+    payload = json.dumps([CONFIG_HASH_SCHEMA, d], sort_keys=True,
+                         default=lambda o: o.value)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
 def paper_config(**overrides) -> UltrasoundConfig:

@@ -10,6 +10,12 @@ dispatch/launch overhead amortizes and the compiler sees the whole batch.
   * ``cfg.exec_map == "map"``  — sequentialize via ``lax.map`` (constant
     memory; use when the vmapped CNN-variant operator would not fit).
 
+Execution decisions (variant — possibly ``Variant.AUTO`` —, exec_map,
+donation) resolve through a `PipelinePlan` (repro.core.plan); pass one
+explicitly or let the constructor build it (`policy=` selects fixed /
+heuristic / autotune). Constants come from the shared two-tier cache, so
+a serve restart or a variant sweep pays the delay-table precompute once.
+
 The batch axis carries the logical "batch" sharding name, so under an
 active mesh binding (runtime/sharding.py) acquisitions shard across the
 data axis with zero code changes — the same single-source portability
@@ -25,7 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import UltrasoundConfig
-from repro.core.stages import graph_fn, init_graph_consts
+from repro.core.pipeline import _resolve_plan, init_pipeline
+from repro.core.stages import graph_fn
 from repro.runtime import sharding
 
 
@@ -33,25 +40,30 @@ class BatchedExecutor:
     """Init once, jit once, run (B, n_l, n_c, n_f) batches many times."""
 
     def __init__(self, cfg: UltrasoundConfig, *,
-                 donate: Optional[bool] = None):
-        self.cfg = cfg
-        self.consts = jax.tree.map(jnp.asarray, init_graph_consts(cfg))
-        fn = graph_fn(cfg)
+                 donate: Optional[bool] = None, plan=None,
+                 policy: Optional[str] = None):
+        self.plan = _resolve_plan(cfg, plan, policy, donate=donate)
+        self.cfg = self.plan.concretize(cfg)
+        self.consts = jax.tree.map(jnp.asarray, init_pipeline(self.cfg))
+        fn = graph_fn(self.cfg)
 
-        if cfg.exec_map == "vmap":
+        if self.cfg.exec_map == "vmap":
             mapped = jax.vmap(fn, in_axes=(None, 0))
-        elif cfg.exec_map == "map":
+        elif self.cfg.exec_map == "map":
             def mapped(consts, rf_b):
                 return jax.lax.map(lambda rf: fn(consts, rf), rf_b)
         else:
-            raise ValueError(f"unknown exec_map: {cfg.exec_map!r}")
+            raise ValueError(f"unknown exec_map: {self.cfg.exec_map!r}")
 
         def run(consts, rf_b):
             rf_b = sharding.shard_pin(rf_b, d0="batch")
             return mapped(consts, rf_b)
 
-        # Donation is a no-op warning on the CPU stand-in; enable it only
-        # where the runtime can actually alias the buffer.
+        # Donation precedence: constructor arg > plan > backend default.
+        # It is a no-op warning on the CPU stand-in; enable it only where
+        # the runtime can actually alias the buffer.
+        if donate is None:
+            donate = self.plan.donate
         if donate is None:
             donate = jax.default_backend() != "cpu"
         self.donate = donate
@@ -60,6 +72,11 @@ class BatchedExecutor:
     def __call__(self, rf_batch: jnp.ndarray) -> jnp.ndarray:
         """(B, n_l, n_c, n_f) RF batch -> (B, *image_shape)."""
         return self._fn(self.consts, rf_batch)
+
+    @property
+    def jitted(self):
+        """The compiled (consts, rf_batch) -> images callable."""
+        return self._fn
 
     @property
     def input_bytes_per_acq(self) -> int:

@@ -1,0 +1,234 @@
+"""Backend-aware pipeline planning (variant auto-selection).
+
+The paper's portability contract says ONE source tree runs on every
+backend — but *which* operator formulation (dynamic / cnn / sparse) wins
+is backend-dependent (paper Table I; ConvBench), so leaving the variant
+choice to the user reintroduces exactly the hardware-specific decision
+the contract is supposed to eliminate. This module closes that gap:
+
+    plan = plan_pipeline(cfg.with_(variant=Variant.AUTO), policy=...)
+
+produces a frozen `PipelinePlan` — the resolved variant plus every other
+execution decision (exec_map, donation, per-stage jit toggles) and full
+provenance — which `UltrasoundPipeline`, `BatchedExecutor`, the serve
+loop, and the benchmark drivers all accept and stamp into telemetry, so
+every reported MB/s–FPS row is attributable to an exact
+(backend, variant, exec_map) decision.
+
+Three policies:
+
+  * ``fixed``     — today's behavior: honor ``cfg.variant`` verbatim.
+    Refuses ``Variant.AUTO`` (a fixed plan has nothing to resolve it with).
+  * ``heuristic`` — resolve AUTO from a per-backend preference registry
+    encoding the structure of the paper's Table I: gather-friendly
+    backends (cpu/gpu) run V1-dynamic fastest; matmul-unit backends
+    (tpu) want the dense CNN formulation. Deterministic and free.
+  * ``autotune``  — measure every concrete variant end-to-end for a few
+    warm runs through the bench harness and pick the winner. Memoized per
+    (config-hash-ignoring-variant, backend) so sweeps pay the search once.
+
+The registry and the autotune memo are process-global; both are plain
+dicts so tests (and future multi-backend sweeps) can inspect or reset
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.config import UltrasoundConfig, Variant, config_hash
+
+POLICIES = ("fixed", "heuristic", "autotune")
+
+# Paper Table I structure, keyed on jax.default_backend(): backends with a
+# fast irregular-access path prefer the explicit-gather formulation; systolic
+# matmul-unit backends prefer the dense CNN re-expression. Extendable via
+# register_backend_preference (e.g. a future backend measured differently).
+BACKEND_VARIANT_PREFERENCE: Dict[str, Variant] = {
+    "cpu": Variant.DYNAMIC,
+    "gpu": Variant.DYNAMIC,
+    "cuda": Variant.DYNAMIC,
+    "rocm": Variant.DYNAMIC,
+    "tpu": Variant.CNN,
+}
+# Unknown backends get the portable dense formulation (runs everywhere the
+# paper tested, never pathological — the conservative Table I read).
+DEFAULT_PREFERENCE = Variant.CNN
+
+CONCRETE_VARIANTS = (Variant.DYNAMIC, Variant.CNN, Variant.SPARSE)
+
+# (geometry key, backend, runs, warmup) -> tuple of (variant value, t_avg_s)
+_AUTOTUNE_MEMO: Dict[Tuple[str, str, int, int],
+                     Tuple[Tuple[str, float], ...]] = {}
+
+
+def register_backend_preference(backend: str, variant: Variant) -> None:
+    """Extend/override the heuristic registry (measured, not assumed)."""
+    if not variant.concrete:
+        raise ValueError("preference must be a concrete variant")
+    BACKEND_VARIANT_PREFERENCE[backend] = variant
+
+
+def clear_autotune_memo() -> None:
+    _AUTOTUNE_MEMO.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """A fully resolved execution plan for one pipeline config.
+
+    Everything a consumer needs to build and run the pipeline — and
+    everything telemetry needs to attribute a throughput number to an
+    exact decision. ``variant`` is always concrete (never AUTO).
+    """
+
+    variant: Variant
+    exec_map: str                                  # "vmap" | "map"
+    donate: Optional[bool]                         # None = backend default
+    jit_stages: Tuple[Tuple[str, bool], ...]       # (stage name, jit?) pairs
+    backend: str                                   # jax.default_backend()
+    policy: str                                    # member of POLICIES
+    config_key: str                                # hash of the REQUESTED cfg
+    geometry_key: str                              # hash sans variant/exec_map
+    provenance: str                                # how the variant was chosen
+    autotune_t_s: Optional[Tuple[Tuple[str, float], ...]] = None
+
+    def __post_init__(self):
+        assert self.variant.concrete, "plan must carry a concrete variant"
+
+    def matches(self, cfg: UltrasoundConfig) -> bool:
+        """True iff this plan was built for ``cfg``'s geometry.
+
+        Variant and exec_map are the axes the plan itself decides, so
+        they are excluded — a plan built on an AUTO config matches the
+        resolved config and vice versa. Everything else differing means
+        the plan's decision (and its telemetry stamp) belongs to some
+        other pipeline.
+        """
+        return self.geometry_key == _geometry_key(cfg)
+
+    def concretize(self, cfg: UltrasoundConfig) -> UltrasoundConfig:
+        """The requested config with every planned decision applied."""
+        return cfg.with_(variant=self.variant, exec_map=self.exec_map)
+
+    def stage_jit(self, stage_name: str) -> bool:
+        return dict(self.jit_stages).get(stage_name, True)
+
+    def json_dict(self) -> dict:
+        d = {
+            "policy": self.policy,
+            "backend": self.backend,
+            "variant": self.variant.value,
+            "exec_map": self.exec_map,
+            "donate": self.donate,
+            "jit_stages": {k: v for k, v in self.jit_stages},
+            "config_key": self.config_key,
+            "geometry_key": self.geometry_key,
+            "provenance": self.provenance,
+        }
+        if self.autotune_t_s is not None:
+            d["autotune_t_s"] = {k: v for k, v in self.autotune_t_s}
+        return d
+
+
+def _geometry_key(cfg: UltrasoundConfig) -> str:
+    return config_hash(cfg, exclude=("variant", "exec_map"))
+
+
+def _default_measure(cfg: UltrasoundConfig, variant: Variant, *,
+                     runs: int, warmup: int) -> float:
+    """T_avg of one concrete variant, via the paper's bench methodology."""
+    import jax.numpy as jnp
+
+    from repro.bench.harness import bench_callable
+    from repro.core.pipeline import UltrasoundPipeline
+    from repro.data import synth_rf
+
+    c = cfg.with_(variant=variant)
+    pipe = UltrasoundPipeline(c)                  # consts cached; untimed
+    rf = jnp.asarray(synth_rf(c, seed=0))
+    res = bench_callable(
+        f"autotune/{c.name}/{variant.value}", None, (pipe.consts, rf),
+        input_bytes=c.input_bytes, warmup=warmup, runs=runs,
+        jitted=pipe.jitted)
+    return res.t_avg_s
+
+
+def _autotune_timings(cfg: UltrasoundConfig, backend: str, *,
+                      runs: int, warmup: int,
+                      measure: Optional[Callable]
+                      ) -> Tuple[Tuple[str, float], ...]:
+    # Probe settings are part of the key (2-run timings must not answer a
+    # 50-run request); an injected `measure` is not — tests that swap
+    # probes call clear_autotune_memo(). exec_map is excluded too: the
+    # probe times single-acquisition pipelines, which never read it.
+    memo_key = (_geometry_key(cfg), backend, runs, warmup)
+    if memo_key in _AUTOTUNE_MEMO:
+        return _AUTOTUNE_MEMO[memo_key]
+    measure = measure or _default_measure
+    timings = tuple(
+        (v.value, float(measure(cfg, v, runs=runs, warmup=warmup)))
+        for v in CONCRETE_VARIANTS)
+    _AUTOTUNE_MEMO[memo_key] = timings
+    return timings
+
+
+def _stage_jit_defaults(cfg: UltrasoundConfig) -> Tuple[Tuple[str, bool],
+                                                        ...]:
+    # Imported here: stages imports config, and plan must stay importable
+    # from config-only contexts.
+    from repro.core.stages import build_graph
+    return tuple((s.name, True) for s in build_graph(cfg))
+
+
+def plan_pipeline(cfg: UltrasoundConfig, policy: str = "fixed", *,
+                  donate: Optional[bool] = None,
+                  autotune_runs: int = 3, autotune_warmup: int = 1,
+                  measure: Optional[Callable] = None) -> PipelinePlan:
+    """Resolve a config (possibly ``Variant.AUTO``) into a PipelinePlan.
+
+    ``measure(cfg, variant, runs=, warmup=)`` overrides the autotune
+    timing probe (tests inject deterministic timings through it).
+    An explicitly concrete ``cfg.variant`` is honored under every policy
+    — the planner only ever decides what the user left open.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown plan policy: {policy!r} "
+                         f"(expected one of {POLICIES})")
+    backend = jax.default_backend()
+    key = config_hash(cfg)
+    autotune_t_s = None
+
+    if cfg.variant.concrete:
+        variant = cfg.variant
+        provenance = f"explicit:{variant.value}"
+    elif policy == "fixed":
+        raise ValueError(
+            "policy 'fixed' cannot resolve Variant.AUTO — pass a concrete "
+            "variant or use policy='heuristic' / 'autotune'")
+    elif policy == "heuristic":
+        variant = BACKEND_VARIANT_PREFERENCE.get(backend, DEFAULT_PREFERENCE)
+        known = backend in BACKEND_VARIANT_PREFERENCE
+        provenance = (f"heuristic:{backend}->{variant.value}"
+                      f"{'' if known else ' (default: unknown backend)'}")
+    else:  # autotune
+        autotune_t_s = _autotune_timings(
+            cfg, backend, runs=autotune_runs, warmup=autotune_warmup,
+            measure=measure)
+        winner = min(autotune_t_s, key=lambda kv: kv[1])
+        variant = Variant(winner[0])
+        provenance = (f"autotune:{backend}->{variant.value} "
+                      f"(t_avg={winner[1]:.3e}s over "
+                      f"{len(autotune_t_s)} variants)")
+
+    # The modality decides the head stage, so jit toggles come from the
+    # resolved graph. Default: jit every stage (today's behavior).
+    resolved = cfg.with_(variant=variant)
+    return PipelinePlan(
+        variant=variant, exec_map=cfg.exec_map, donate=donate,
+        jit_stages=_stage_jit_defaults(resolved), backend=backend,
+        policy=policy, config_key=key, geometry_key=_geometry_key(cfg),
+        provenance=provenance, autotune_t_s=autotune_t_s)

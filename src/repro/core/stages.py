@@ -52,6 +52,10 @@ def _demod_apply(cfg, consts, rf):
 
 
 def _beamform_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
+    if not cfg.variant.concrete:
+        raise ValueError(
+            "Variant.AUTO has no constants — resolve it with "
+            "repro.core.plan.plan_pipeline before building the graph")
     consts: Dict[str, np.ndarray] = {}
     tables = delays.compute_delay_tables(cfg)
     if cfg.variant == Variant.DYNAMIC:

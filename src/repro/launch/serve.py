@@ -132,7 +132,8 @@ class SyntheticAcquisitionSource:
 
 def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
                             depth: int = 2, pool: int = 4, seed: int = 0,
-                            deadline_s=None, source=None) -> dict:
+                            deadline_s=None, source=None,
+                            plan=None, policy=None) -> dict:
     """Stream RF batches through the stage-graph engine, `depth` in flight.
 
     Dispatches are asynchronous; the loop only blocks on the *oldest*
@@ -141,6 +142,11 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
     latency samples; the per-batch deadline budget is
     ``batch * deadline_s`` (deadline_s is the per-acquisition frame
     budget — see EXPERIMENTS.md).
+
+    `plan` / `policy` resolve the executor's variant and exec_map
+    (repro.core.plan); the resolved plan is stamped into the stats so
+    streaming telemetry stays attributable. ``Variant.AUTO`` configs
+    resolve heuristically when neither is given.
 
     Returns a stats dict with sustained throughput and a LatencyStats.
     """
@@ -152,7 +158,8 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
             f"batch, n_batches, depth must be >= 1 "
             f"(got {batch}, {n_batches}, {depth})")
 
-    engine = BatchedExecutor(cfg)
+    engine = BatchedExecutor(cfg, plan=plan, policy=policy)
+    cfg = engine.cfg                 # plan-resolved (concrete variant)
     if source is None:
         source = SyntheticAcquisitionSource(cfg, batch, pool=pool, seed=seed)
 
@@ -182,6 +189,7 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
     return {
         "name": f"stream/{cfg.name}/{cfg.variant.value}/b{batch}",
         "batch": batch, "n_batches": n_batches, "depth": depth,
+        "plan": engine.plan.json_dict(),
         "wall_s": wall,
         "acquisitions": acqs,
         "frames": acqs * cfg.n_f,
@@ -208,17 +216,31 @@ def main() -> None:
                     help="ultrasound: max batches in flight")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="ultrasound: per-acquisition frame budget")
+    ap.add_argument("--plan", default=None,
+                    choices=["fixed", "heuristic", "autotune"],
+                    help="ultrasound: variant-resolution policy")
+    ap.add_argument("--variant", default=None,
+                    choices=["dynamic", "cnn", "sparse", "auto"],
+                    help="ultrasound: operator variant (auto = planner)")
     args = ap.parse_args()
 
     if args.ultrasound:
-        from repro.core import tiny_config
+        from repro.core import Variant, tiny_config
+        if args.variant == "auto" and args.plan == "fixed":
+            ap.error("--variant auto needs --plan heuristic or autotune")
         cfg = tiny_config(nz=32, nx=32, n_f=8, n_c=16)
+        if args.variant is not None:
+            cfg = cfg.with_(variant=Variant(args.variant))
         stats = serve_ultrasound_stream(
             cfg, batch=args.batch, n_batches=args.batches,
-            depth=args.depth,
+            depth=args.depth, policy=args.plan,
             deadline_s=(args.deadline_ms / 1e3
                         if args.deadline_ms is not None else None))
         lat = stats["latency"]
+        plan = stats["plan"]
+        print(f"plan: policy={plan['policy']} backend={plan['backend']} "
+              f"variant={plan['variant']} exec_map={plan['exec_map']} "
+              f"({plan['provenance']})")
         print(f"{stats['name']}: {stats['acquisitions']} acquisitions "
               f"({stats['frames']} frames) in {stats['wall_s']:.2f}s = "
               f"{stats['sustained_mbps']:.2f} MB/s, {stats['fps']:.1f} FPS; "

@@ -255,6 +255,10 @@ _DISPATCH = {
 def moe_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
               ) -> Tuple[jnp.ndarray, Dict]:
     """x (B, S, d) -> (B, S, d), aux losses. Variant from cfg.moe_variant."""
+    if cfg.moe_variant not in _DISPATCH:
+        raise ValueError(
+            f"moe_variant must be concrete (got {cfg.moe_variant!r}); "
+            "Variant.AUTO is resolved by the ultrasound planner only")
     b, s, d = x.shape
     x_flat = x.reshape(b * s, d)
     w, idx, aux = route(cfg, params["router"], x_flat)

@@ -4,6 +4,19 @@ import pytest
 import jax
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _sandbox_consts_cache(tmp_path_factory):
+    """Keep the on-disk consts cache inside the test session.
+
+    Tests must never read entries a previous checkout wrote to the user
+    cache dir (stale constants would corrupt oracle comparisons), nor
+    leave test-geometry entries behind.
+    """
+    from repro.core import set_consts_cache_dir
+    set_consts_cache_dir(str(tmp_path_factory.mktemp("consts-cache")))
+    yield
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

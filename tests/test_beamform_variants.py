@@ -19,6 +19,8 @@ def test_variant_equivalence(modality):
     rf = jnp.asarray(synth_rf(cfg0, seed=3))
     outs = {}
     for v in Variant:
+        if not v.concrete:          # AUTO resolves to one of these three
+            continue
         pipe = UltrasoundPipeline(cfg0.with_(variant=v))
         outs[v] = np.asarray(pipe(rf))
     for v in [Variant.CNN, Variant.SPARSE]:

@@ -38,6 +38,8 @@ def test_variants_equivalent_with_ample_capacity(key, rng, t):
     x = (rng.standard_normal((1, t, cfg.d_model)) * 0.5).astype(np.float32)
     outs = {}
     for v in Variant:
+        if not v.concrete:          # AUTO is an ultrasound-planner token
+            continue
         y, aux = moe.moe_apply(params, cfg.with_(moe_variant=v),
                                jnp.asarray(x))
         outs[v] = np.asarray(y)

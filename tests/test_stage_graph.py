@@ -12,7 +12,8 @@ from repro.core import (BatchedExecutor, Modality, UltrasoundPipeline,
                         init_pipeline, monolithic_pipeline_fn, tiny_config)
 from repro.data import synth_rf
 
-COMBOS = [(v, m) for v in Variant for m in Modality]
+# AUTO is a planner placeholder, not an executable variant (test_plan.py)
+COMBOS = [(v, m) for v in Variant if v.concrete for m in Modality]
 
 
 @pytest.mark.parametrize(
@@ -31,8 +32,9 @@ def test_graph_engine_contract(variant, modality):
     ref = np.asarray(mono(pipe.consts, rf_b[0]))
     np.testing.assert_allclose(per_frame[0], ref, rtol=1e-5, atol=1e-6)
 
-    # 2. batched executor == per-frame execution
-    batched = np.asarray(BatchedExecutor(cfg)(rf_b))
+    # 2. batched executor == per-frame execution (donate=False: rf_b is
+    # reused above, and on accelerator backends donation would free it)
+    batched = np.asarray(BatchedExecutor(cfg, donate=False)(rf_b))
     np.testing.assert_allclose(batched, per_frame, rtol=1e-5, atol=1e-5)
 
 
@@ -40,8 +42,9 @@ def test_exec_map_sequential_matches_vmap():
     """lax.map execution path == vmap path (fusion-order float noise only)."""
     cfg = tiny_config(n_f=8, modality=Modality.DOPPLER)
     rf_b = jnp.stack([jnp.asarray(synth_rf(cfg, seed=s)) for s in range(3)])
-    a = np.asarray(BatchedExecutor(cfg)(rf_b))
-    b = np.asarray(BatchedExecutor(cfg.with_(exec_map="map"))(rf_b))
+    a = np.asarray(BatchedExecutor(cfg, donate=False)(rf_b))
+    b = np.asarray(BatchedExecutor(cfg.with_(exec_map="map"),
+                                   donate=False)(rf_b))
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
 
 
