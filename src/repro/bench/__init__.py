@@ -7,3 +7,21 @@ from repro.bench.harness import (  # noqa: F401
     write_json,
     write_ndjson,
 )
+from repro.bench.resources import (  # noqa: F401
+    NvmlEnergyMeter,
+    ResourceMeter,
+    ResourceStats,
+)
+
+__all__ = [
+    "BenchResult",
+    "LatencyStats",
+    "NvmlEnergyMeter",
+    "ResourceMeter",
+    "ResourceStats",
+    "bench_callable",
+    "bench_stages",
+    "latency_stats",
+    "write_json",
+    "write_ndjson",
+]

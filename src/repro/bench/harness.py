@@ -1,5 +1,29 @@
 """The paper's benchmarking methodology (§II-E..I), as a harness.
 
+Public API (full methodology reference: docs/benchmarking-methodology.md)
+-------------------------------------------------------------------------
+`latency_stats`  — per-run samples -> `LatencyStats` (p50/p95/p99,
+                   jitter = p95-p50, deadline-miss rate).
+`bench_callable` — time a jitted callable per the paper's execution
+                   model; returns a `BenchResult` carrying the full
+                   sample distribution, the resolved `plan` stamp, and
+                   measured `ResourceStats` (repro.bench.resources).
+`bench_stages`   — per-stage timing breakdown of the stage graph.
+`BenchResult`    — one benchmark row; `csv()` (frozen legacy format),
+                   `json_dict()`, `ndjson_lines()` (summary / sample /
+                   stage records; every record carries the plan stamp,
+                   and summary/sample additionally carry the resources
+                   stamp for the metered window — stage timings run in
+                   their own windows, so stamping the end-to-end
+                   resources on them would misattribute).
+`write_json` / `write_ndjson` — telemetry serialization.
+
+Invariants: warm-up runs never count toward samples; every timed sample
+is bracketed by `jax.block_until_ready`; metering (resources.py) is
+exception-free and reports `None` — never zero — for metrics the
+backend cannot measure; `csv()` output stays parseable by the frozen
+paper-table readers.
+
 Execution model reproduced exactly:
   * constants precomputed at init, excluded from timing (§II-C),
   * multiple warm-up iterations amortize compilation/graph setup (§II-E),
@@ -18,9 +42,13 @@ Execution model reproduced exactly:
     — on this CPU stand-in there is no board telemetry (the paper hits the
     same wall on TPU), so E_run is reported from a documented MODEL:
     P_active - P_idle ≈ utilization * (TDP - idle), utilization from the
-    roofline compute fraction. Flagged as modeled, never measured.
+    roofline compute fraction. Flagged as modeled, never measured. Where
+    NVML board power IS available, the *measured* incremental energy
+    rides along in `ResourceStats.energy_joules` (None elsewhere).
   * peak memory from compiled.memory_analysis() (args + outputs + temps)
-    — the static analogue of the paper's allocator peak.
+    — the static analogue of the paper's allocator peak — plus the
+    *measured* high-water mark in `ResourceStats.peak_memory_bytes`
+    (allocator stats on GPU/TPU, live-array sampling fallback on CPU).
 
 Telemetry is serialized two ways: the legacy one-line CSV (paper tables,
 unchanged) and NDJSON (one summary line + one line per sample + one line
@@ -100,8 +128,13 @@ class BenchResult:
     stage_breakdown: Dict[str, LatencyStats] = dataclasses.field(
         default_factory=dict)
     # Resolved execution plan (PipelinePlan.json_dict()): the exact
-    # (backend, variant, exec_map, policy) decision behind this number.
+    # (backend, variant, exec_map, policy, devices) decision behind this
+    # number.
     plan: Optional[dict] = None
+    # Measured resource usage over the timed window
+    # (ResourceStats.json_dict()): peak_memory_bytes + energy_joules,
+    # None where the backend cannot measure them.
+    resources: Optional[dict] = None
 
     def csv(self) -> str:
         """Legacy one-line CSV — format frozen (paper-table parsers)."""
@@ -122,6 +155,8 @@ class BenchResult:
         }
         if self.plan is not None:
             d["plan"] = self.plan
+        if self.resources is not None:
+            d["resources"] = self.resources
         if self.stats is not None:
             d["latency"] = self.stats.json_dict()
         if self.stage_breakdown:
@@ -144,6 +179,8 @@ class BenchResult:
                 rec["deadline_missed"] = bool(t > budget)
             if self.plan is not None:
                 rec["plan"] = self.plan
+            if self.resources is not None:
+                rec["resources"] = self.resources
             lines.append(json.dumps(rec))
         for stage, st in self.stage_breakdown.items():
             rec = {"kind": "stage", "name": self.name, "stage": stage,
@@ -181,18 +218,25 @@ def write_json(path: str, results: List["BenchResult"],
 
 
 def _timed_samples(fn_j: Callable, args: tuple, *, warmup: int,
-                   runs: int) -> List[float]:
+                   runs: int, meter=None) -> List[float]:
     """The paper's §II-E measurement protocol, shared by every bench:
     warm-up iterations excluded from timing, then per-run wall clock with
-    device sync (block_until_ready) bracketing each sample."""
+    device sync (block_until_ready) bracketing each sample. `meter` (a
+    ResourceMeter) is started only after the warm-up loop — compilation
+    energy/memory never count — and sampled after each run, outside the
+    timed bracket, so metering overhead never pollutes the samples."""
     for _ in range(warmup):
         jax.block_until_ready(fn_j(*args))
+    if meter is not None:
+        meter.start()
     samples: List[float] = []
     for _ in range(runs):
         t0 = time.perf_counter()
         out = fn_j(*args)
         jax.block_until_ready(out)
         samples.append(time.perf_counter() - t0)
+        if meter is not None:
+            meter.sample()
     return samples
 
 
@@ -207,13 +251,22 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
     Each steady-state run is timed individually (sync'd with
     block_until_ready) so the result carries the full latency
     distribution, not just T_avg. `plan` (a PipelinePlan or its
-    json_dict) is stamped into the result and every telemetry record.
+    json_dict) is stamped into the result and every telemetry record,
+    as is the measured `ResourceStats` for the timed window (peak
+    memory + incremental energy, None where unsupported).
     """
+    from repro.bench.resources import ResourceMeter, devices_of
+
     fn_j = jitted if jitted is not None else jax.jit(fn)
     if plan is not None and not isinstance(plan, dict):
         plan = plan.json_dict()
 
-    samples = _timed_samples(fn_j, args, warmup=warmup, runs=runs)
+    # Scope the meter to the devices holding the inputs (host-resident
+    # args: fall back to all local); started post-warmup by _timed_samples.
+    meter = ResourceMeter(devices=devices_of(args))
+    samples = _timed_samples(fn_j, args, warmup=warmup, runs=runs,
+                             meter=meter)
+    resources = meter.stop()
     t_avg = sum(samples) / runs
 
     # peak memory: static analysis of the compiled executable
@@ -232,7 +285,7 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
         mbps=input_bytes / (t_avg * 1e6),
         joules_per_run_model=e_run, peak_mem_gb=peak, runs=runs,
         samples_s=samples, stats=latency_stats(samples, deadline_s),
-        plan=plan)
+        plan=plan, resources=resources.json_dict())
 
 
 def bench_stages(cfg, rf, *, warmup: int = 1,

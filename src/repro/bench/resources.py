@@ -1,0 +1,435 @@
+"""Resource metering: measured peak device memory + incremental energy.
+
+The paper reports "incremental energy per run and peak memory usage,
+where available" — the two columns the harness so far only *modeled*
+(eq. 3 energy model, static `memory_analysis()` peak). This module adds
+the measured counterparts, with the paper's "where available" contract
+made literal:
+
+  * **Peak memory** — where the backend exposes allocator statistics
+    (GPU/TPU), the window peak is ``memory_stats()["peak_bytes_in_use"]``
+    *when the allocator sets a new process high-water mark during the
+    window* (source ``"device_memory_stats"``); otherwise — the process
+    peak predates this window, so reporting it would attribute some
+    earlier benchmark's allocation — the meter falls back to the max of
+    ``bytes_in_use`` at the sample points (source
+    ``"device_bytes_in_use"``, a window-scoped lower bound). The CPU
+    stand-in has no allocator telemetry at all and samples
+    `jax.live_arrays()` instead (source ``"live_arrays"``). The source
+    is always recorded so a reader knows which of the three produced the
+    number.
+  * **Incremental energy** — NVML board power polled on a background
+    thread and trapezoid-integrated over the metering window, minus the
+    idle baseline sampled at meter *construction* — before warm-up or
+    compilation has heated the board (the paper's eq. 3
+    ``(P_active - P_idle) * T``, measured). `ResourceMeter` scopes the
+    NVML handles to the GPU ordinals of the devices it meters, so a
+    co-tenant ramping a *different* board never leaks into this run's
+    joules (a bare ``NvmlEnergyMeter()`` sums every board — documented
+    all-board scope). Where NVML is unavailable (no pynvml, no NVIDIA
+    GPU — including this repo's CPU stand-in and the paper's TPU, which
+    hits the same wall) the meter degrades to ``energy_joules=None``.
+    It must never crash a benchmark.
+
+Public API
+----------
+`ResourceStats`   — frozen record: ``peak_memory_bytes``,
+                    ``memory_source``, ``energy_joules``,
+                    ``energy_source``, ``devices``, ``duration_s``;
+                    ``json_dict()`` for telemetry stamping.
+`ResourceMeter`   — start() -> sample()* -> stop() -> ResourceStats.
+                    ``sample()`` is cheap and safe to call once per
+                    timed run; ``stop()`` always returns a stats object.
+`NvmlEnergyMeter` — the NVML polling thread; ``available()`` is the
+                    gate. Injectable into `ResourceMeter` for tests.
+
+Invariants: meters never raise out of start/sample/stop (metering must
+not take down the benchmark it observes); unavailable metrics are
+``None``, never 0.0, so "not measured" is distinguishable from
+"measured nothing".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = [
+    "ResourceStats",
+    "ResourceMeter",
+    "NvmlEnergyMeter",
+    "device_memory_stats_list",
+    "device_peak_memory_bytes",
+    "devices_of",
+    "live_array_bytes",
+    "nvml_indices_for_local_gpus",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceStats:
+    """Measured resource usage over one metering window.
+
+    ``None`` fields mean "not measurable on this backend" (the paper's
+    "where available"), never zero.
+    """
+
+    peak_memory_bytes: Optional[int] = None
+    # "device_memory_stats" (allocator window peak) |
+    # "device_bytes_in_use" (sampled allocator usage) | "live_arrays"
+    memory_source: Optional[str] = None
+    energy_joules: Optional[float] = None
+    energy_source: Optional[str] = None   # "nvml"
+    devices: int = 1
+    duration_s: Optional[float] = None
+
+    def json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Peak memory
+# ---------------------------------------------------------------------------
+
+
+def device_memory_stats_list(devices) -> Optional[list]:
+    """Per-device (peak_bytes_in_use, bytes_in_use) pairs, or None.
+
+    GPU/TPU runtimes expose ``memory_stats()``; the CPU host backend
+    returns nothing useful. Any device missing the counters makes the
+    whole reading None (a partial reading would silently under-report).
+    Note the peak is the allocator's *process-lifetime* high-water mark
+    — `ResourceMeter` window-scopes it against the start() baseline,
+    **per device** (summed lifetime peaks would let one device's old
+    peak masquerade as another device's window).
+    """
+    out = []
+    for d in devices:
+        try:
+            stats = d.memory_stats()
+        except Exception:   # noqa: BLE001 — no allocator telemetry
+            return None
+        if (not stats or stats.get("peak_bytes_in_use") is None
+                or stats.get("bytes_in_use") is None):
+            return None
+        out.append((int(stats["peak_bytes_in_use"]),
+                    int(stats["bytes_in_use"])))
+    return out
+
+
+def device_peak_memory_bytes(devices) -> Optional[int]:
+    """Sum of allocator process-lifetime peaks across `devices`, or None."""
+    stats = device_memory_stats_list(devices)
+    return sum(p for p, _ in stats) if stats is not None else None
+
+
+def live_array_bytes(devices) -> int:
+    """Bytes of live jax arrays resident on `devices` (snapshot).
+
+    The CPU fallback proxy: sampling this at known points (after each
+    timed run) gives a lower bound on the allocator peak — it sees
+    arrays that are still referenced, not transient temporaries.
+    """
+    devset = set(devices)
+    total = 0
+    for a in jax.live_arrays():
+        try:
+            if devset & set(a.devices()):
+                total += a.nbytes
+        except Exception:   # noqa: BLE001 — deleted/donated buffers
+            continue
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Energy
+# ---------------------------------------------------------------------------
+
+
+def devices_of(*trees) -> Optional[tuple]:
+    """The distinct devices holding the jax arrays in `trees`, or None.
+
+    Lets single-device producers (bench_callable, the single-device
+    serve loop) scope their ResourceMeter to the devices actually in
+    use instead of every local device — on a multi-device host the
+    difference is whether a neighbor's buffers pollute the peak.
+    """
+    devs: dict = {}
+    for t in trees:
+        for leaf in jax.tree.leaves(t):
+            get = getattr(leaf, "devices", None)
+            if callable(get):
+                try:
+                    for d in get():
+                        devs[d] = None
+                except Exception:   # noqa: BLE001 — deleted buffers
+                    continue
+    return tuple(devs) if devs else None
+
+
+_PYNVML_UNSET = object()
+_pynvml_cache = _PYNVML_UNSET
+
+# First idle-power reading per NVML handle set (coldest this process saw).
+_IDLE_W_CACHE: dict = {}
+
+
+def _load_pynvml():
+    # Memoized: every meter construction would otherwise re-scan
+    # sys.path / re-fail nvmlInit on NVML-less hosts (one per bench row).
+    global _pynvml_cache
+    if _pynvml_cache is not _PYNVML_UNSET:
+        return _pynvml_cache
+    try:
+        import pynvml
+        pynvml.nvmlInit()
+        _pynvml_cache = pynvml
+    except Exception:   # noqa: BLE001 — missing module, driver, or GPU
+        _pynvml_cache = None
+    return _pynvml_cache
+
+
+def nvml_indices_for_local_gpus(local_ids, *,
+                                visible=None) -> Optional[list]:
+    """Map JAX local GPU ordinals to global NVML board indices.
+
+    NVML numbers *all* boards on the host and ignores
+    ``CUDA_VISIBLE_DEVICES``, while JAX's local ids are positions within
+    the visible set — polling by local id on a pinned job would meter a
+    co-tenant's boards. Returns None (caller should treat the scope as
+    unknown and stay unavailable rather than guess) when the visible
+    list uses UUID/MIG selectors that cannot be mapped numerically.
+    """
+    if visible is None:
+        visible = os.environ.get("CUDA_VISIBLE_DEVICES")
+    if visible is None:
+        return list(local_ids)              # identity: all boards visible
+    entries = [e.strip() for e in visible.split(",") if e.strip()]
+    try:
+        globals_ = [int(e) for e in entries]
+    except ValueError:                      # UUID / MIG selectors
+        return None
+    try:
+        return [globals_[i] for i in local_ids]
+    except IndexError:
+        return None
+
+
+class NvmlEnergyMeter:
+    """Incremental GPU board energy over a window, via NVML polling.
+
+    A daemon thread samples board power every ``poll_s`` seconds and
+    trapezoid-integrates it; ``stop()`` returns joules *above the idle
+    baseline* sampled at construction (eq. 3, measured — construct the
+    meter before warm-up so the baseline sees the board cold).
+    ``device_indices`` selects the NVML board ordinals to integrate
+    (None = every board on the host; an empty/fully-invalid selection
+    makes the meter unavailable). Where NVML or a GPU is absent,
+    ``available()`` is False and ``stop()`` returns None.
+    """
+
+    def __init__(self, poll_s: float = 0.05,
+                 device_indices: Optional[Sequence[int]] = None):
+        self.poll_s = poll_s
+        self._nvml = _load_pynvml()
+        self._handles = []
+        self._board_key = ()
+        if self._nvml is not None:
+            try:
+                count = self._nvml.nvmlDeviceGetCount()
+                indices = list(range(count) if device_indices is None
+                               else [i for i in device_indices
+                                     if 0 <= i < count])
+                self._handles = [
+                    self._nvml.nvmlDeviceGetHandleByIndex(i)
+                    for i in indices]
+                self._board_key = tuple(sorted(indices))
+            except Exception:   # noqa: BLE001
+                self._handles = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._joules = 0.0
+        self._idle_w = 0.0
+        self._integrated = False        # any valid interval accumulated?
+        # Idle baseline (eq. 3 P_idle) sampled at construction: callers
+        # build the meter BEFORE their warm-up/compile work, when the
+        # board is as close to idle as this process can observe. A
+        # post-warm-up reading would still be near active power (GPU
+        # clocks decay over seconds) and bias incremental energy to ~0.
+        # The FIRST reading per board set is cached process-wide: in a
+        # back-to-back sweep (one meter per table row) row N's
+        # construction-time reading is still hot from row N-1, so every
+        # row reuses the coldest baseline this process ever saw.
+        self._idle_w0 = None
+        if self._handles:
+            if self._board_key not in _IDLE_W_CACHE:
+                idle = self._power_w()
+                if idle is not None:
+                    _IDLE_W_CACHE[self._board_key] = idle
+            self._idle_w0 = _IDLE_W_CACHE.get(self._board_key)
+
+    def available(self) -> bool:
+        return bool(self._handles)
+
+    def _power_w(self) -> Optional[float]:
+        try:
+            return sum(self._nvml.nvmlDeviceGetPowerUsage(h)
+                       for h in self._handles) / 1e3   # mW -> W
+        except Exception:   # noqa: BLE001
+            return None
+
+    def _poll(self) -> None:
+        last_t = time.perf_counter()
+        last_p = self._power_w()
+        while True:
+            # Integrate on the stop tick too: the tail between the last
+            # poll and stop() (and the whole window, when it is shorter
+            # than poll_s) must not be dropped.
+            stopped = self._stop_evt.wait(self.poll_s)
+            now, p = time.perf_counter(), self._power_w()
+            if p is not None and last_p is not None:
+                self._joules += (0.5 * (p + last_p) - self._idle_w) \
+                    * (now - last_t)
+                self._integrated = True
+            last_t, last_p = now, p
+            if stopped:
+                return
+
+    def start(self) -> None:
+        if not self.available():
+            return
+        self._joules = 0.0
+        self._integrated = False
+        idle = self._idle_w0 if self._idle_w0 is not None \
+            else self._power_w()
+        if idle is None:
+            # No idle baseline -> incremental energy is undefined; stay
+            # unmeasured (None) rather than integrate absolute power.
+            return
+        self._idle_w = idle
+        self._stop_evt.clear()
+        self._thread = threading.Thread(target=self._poll, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> Optional[float]:
+        """Joules above idle since start(), or None if unmeasured.
+
+        None whenever no valid power interval was integrated (meter
+        unavailable, idle read failed, or every poll errored) — a
+        measured 0.0 only ever means "ran at idle power".
+        """
+        if self._thread is None:
+            return None
+        self._stop_evt.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+        if not self._integrated:
+            return None
+        return max(self._joules, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# The meter
+# ---------------------------------------------------------------------------
+
+
+class ResourceMeter:
+    """Meters one benchmark window: ``start() -> sample()* -> stop()``.
+
+    ``sample()`` updates the peak-memory high-water mark; call it at
+    points where interesting buffers are live (after each timed run /
+    batch completion). ``stop()`` takes a final sample and returns the
+    `ResourceStats`. All three are exception-free by contract.
+    """
+
+    def __init__(self, devices: Optional[Sequence] = None, *,
+                 energy_meter=None):
+        self.devices = tuple(devices) if devices is not None \
+            else tuple(jax.local_devices())
+        if energy_meter is not None:
+            self._energy = energy_meter
+        else:
+            # Scope NVML to the boards we actually meter: local GPU ids
+            # map through CUDA_VISIBLE_DEVICES to global NVML ordinals.
+            # No GPUs in the set (cpu/tpu), or an unmappable visibility
+            # selector (UUID/MIG), yields zero handles -> unavailable —
+            # a co-resident board never fakes or pollutes a measurement.
+            gpu_ids = [d.id for d in self.devices
+                       if getattr(d, "platform", None) == "gpu"]
+            nvml_ids = nvml_indices_for_local_gpus(gpu_ids)
+            self._energy = NvmlEnergyMeter(
+                device_indices=nvml_ids if nvml_ids is not None else [])
+        self._peak: Optional[int] = None
+        self._source: Optional[str] = None
+        self._t0: Optional[float] = None
+        self._baseline_alloc_peaks: Optional[list] = None
+
+    def start(self) -> None:
+        self._peak, self._source = None, None
+        self._t0 = time.perf_counter()
+        # Allocator peaks are process-lifetime marks; remember where each
+        # device's high-water stood at window start so sample() can tell
+        # a peak set *during* this window from one inherited from
+        # earlier runs — per device, never on the sums.
+        try:
+            stats = device_memory_stats_list(self.devices)
+            self._baseline_alloc_peaks = (
+                [p for p, _ in stats] if stats is not None else None)
+        except Exception:   # noqa: BLE001
+            self._baseline_alloc_peaks = None
+        try:
+            self._energy.start()
+        except Exception:   # noqa: BLE001 — a dying driver is not our crash
+            pass
+        self.sample()
+
+    def sample(self) -> None:
+        try:
+            stats = device_memory_stats_list(self.devices)
+            if stats is not None:
+                base = self._baseline_alloc_peaks
+                peak, all_alloc = 0, base is not None and len(base) == \
+                    len(stats)
+                for i, (alloc_peak, in_use) in enumerate(stats):
+                    if (base is not None and i < len(base)
+                            and alloc_peak > base[i]):
+                        # this device set a new high-water mark inside
+                        # the window — that IS its window peak,
+                        # temporaries included
+                        peak += alloc_peak
+                    else:
+                        # this device's lifetime peak predates the
+                        # window: use its sampled current usage
+                        # (window-scoped lower bound)
+                        peak += in_use
+                        all_alloc = False
+                source = ("device_memory_stats" if all_alloc
+                          else "device_bytes_in_use")
+            else:
+                peak, source = live_array_bytes(self.devices), "live_arrays"
+            if self._peak is None or peak > self._peak:
+                self._peak, self._source = peak, source
+        except Exception:   # noqa: BLE001 — metering must never crash a run
+            pass
+
+    def stop(self) -> ResourceStats:
+        self.sample()
+        duration = (time.perf_counter() - self._t0
+                    if self._t0 is not None else None)
+        joules = None
+        try:
+            joules = self._energy.stop()
+        except Exception:   # noqa: BLE001
+            pass
+        return ResourceStats(
+            peak_memory_bytes=self._peak,
+            memory_source=self._source if self._peak is not None else None,
+            energy_joules=joules,
+            energy_source="nvml" if joules is not None else None,
+            devices=len(self.devices),
+            duration_s=duration)

@@ -3,9 +3,15 @@
 The paper's contribution: complete RF-to-image pipelines (B-mode, Color
 Doppler, Power Doppler) built from a restricted, deterministic operator set,
 in three implementation variants (dynamic / cnn / sparse).
+
+Module map (details in docs/architecture.md): config -> stages ->
+plan -> pipeline/executor. `UltrasoundPipeline` is the one-acquisition
+convenience wrapper; `BatchedExecutor` / `ShardedExecutor` are the
+batched single-/multi-device engines the serving loop drives.
 """
 
 from repro.core.config import (  # noqa: F401
+    EXEC_MAPS,
     Modality,
     PIPELINE_NAMES,
     UltrasoundConfig,
@@ -26,6 +32,7 @@ from repro.core.pipeline import (  # noqa: F401
 )
 from repro.core.plan import (  # noqa: F401
     PipelinePlan,
+    clear_autotune_memo,
     plan_pipeline,
     register_backend_preference,
 )
@@ -36,4 +43,42 @@ from repro.core.stages import (  # noqa: F401
     init_graph_consts,
     stage_fns,
 )
-from repro.core.executor import BatchedExecutor  # noqa: F401
+from repro.core.executor import (  # noqa: F401
+    BatchedExecutor,
+    ShardedExecutor,
+)
+
+__all__ = [
+    # config
+    "EXEC_MAPS",
+    "Modality",
+    "PIPELINE_NAMES",
+    "UltrasoundConfig",
+    "Variant",
+    "config_hash",
+    "paper_config",
+    "tiny_config",
+    # pipeline + consts cache
+    "CONSTS_CACHE_STATS",
+    "UltrasoundPipeline",
+    "clear_consts_cache",
+    "consts_cache_dir",
+    "init_pipeline",
+    "monolithic_pipeline_fn",
+    "pipeline_fn",
+    "set_consts_cache_dir",
+    # planning
+    "PipelinePlan",
+    "clear_autotune_memo",
+    "plan_pipeline",
+    "register_backend_preference",
+    # stage graph
+    "Stage",
+    "build_graph",
+    "graph_fn",
+    "init_graph_consts",
+    "stage_fns",
+    # executors
+    "BatchedExecutor",
+    "ShardedExecutor",
+]

@@ -48,6 +48,9 @@ class Modality(str, enum.Enum):
     POWER_DOPPLER = "power_doppler"
 
 
+# Batch-mapping strategies the executors accept (config.exec_map).
+EXEC_MAPS = ("vmap", "map")
+
 # Paper table names, e.g. RF2IQ_DAS_BMODE.
 PIPELINE_NAMES = {
     Modality.BMODE: "RF2IQ_DAS_BMODE",
@@ -106,11 +109,18 @@ class UltrasoundConfig:
     use_das_kernel: bool = False
 
     # --- batched execution (stage-graph engine) ---------------------------
-    # How the BatchedExecutor maps the stage graph over the leading
-    # acquisition-batch axis: "vmap" vectorizes (one fused program, peak
-    # memory scales with batch), "map" sequentializes via lax.map (constant
-    # memory, serial latency).
+    # How the Batched/Sharded executors map the stage graph over the
+    # leading acquisition-batch axis: "vmap" vectorizes (one fused
+    # program, peak memory scales with batch), "map" sequentializes via
+    # lax.map (constant memory, serial latency). Validated at
+    # construction so a typo fails before any planning or compilation.
     exec_map: str = "vmap"
+
+    def __post_init__(self):
+        if self.exec_map not in EXEC_MAPS:
+            raise ValueError(
+                f"unknown exec_map: {self.exec_map!r} "
+                f"(expected one of {EXEC_MAPS})")
 
     # ---------------------------------------------------------------------
     @property

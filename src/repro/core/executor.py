@@ -1,9 +1,29 @@
-"""Batched stage-graph executor: N acquisitions per dispatch.
+"""Batched + multi-device sharded stage-graph executors.
 
 The paper (and the legacy `UltrasoundPipeline`) times one acquisition per
 call. Production traffic wants N acquisitions per dispatch so the fixed
-dispatch/launch overhead amortizes and the compiler sees the whole batch.
-`BatchedExecutor` maps the composed stage graph over a leading batch axis:
+dispatch/launch overhead amortizes and the compiler sees the whole batch
+— and past one device, wants that batch *split across every local
+device* so throughput scales with hardware instead of clock speed.
+
+Public API
+----------
+`BatchedExecutor`  — init once, jit once, run (B, n_l, n_c, n_f)
+    batches many times on the default device. The batch axis carries the
+    logical "batch" sharding name, so under an active mesh binding
+    (runtime/sharding.py) it composes with the LM half's meshes.
+`ShardedExecutor`  — the same contract, data-parallel over an explicit
+    1-D ``jax.sharding.Mesh`` of local devices ("data" axis): consts are
+    replicated, the acquisition batch axis is split via `NamedSharding`,
+    and outputs come back batch-sharded. Uneven batches (B % devices
+    != 0) are zero-padded to the next multiple and the padding is
+    sliced off the result — callers never see it. On hosts with one
+    physical device, force a multi-device CPU mesh anywhere with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    JAX initializes; see benchmarks/scaling.py and
+    tests/test_sharded_executor.py).
+
+Both executors map the composed stage graph over the leading batch axis:
 
   * ``cfg.exec_map == "vmap"`` — vectorize: one fused program over the
     batch (throughput-optimal; peak memory scales with batch size),
@@ -13,27 +33,60 @@ dispatch/launch overhead amortizes and the compiler sees the whole batch.
 Execution decisions (variant — possibly ``Variant.AUTO`` —, exec_map,
 donation) resolve through a `PipelinePlan` (repro.core.plan); pass one
 explicitly or let the constructor build it (`policy=` selects fixed /
-heuristic / autotune). Constants come from the shared two-tier cache, so
-a serve restart or a variant sweep pays the delay-table precompute once.
+heuristic / autotune). The `ShardedExecutor` stamps its device topology
+into the plan (`PipelinePlan.with_devices`) so every telemetry record
+downstream names the mesh it ran on. Constants come from the shared
+two-tier cache, so a serve restart or a variant sweep pays the
+delay-table precompute once.
 
-The batch axis carries the logical "batch" sharding name, so under an
-active mesh binding (runtime/sharding.py) acquisitions shard across the
-data axis with zero code changes — the same single-source portability
-contract the LM half uses. The RF input buffer is donated on accelerator
-backends (each batch is consumed exactly once in the streaming loop).
+Invariants: executors are immutable after construction (one compiled
+program each); a sharded and a single-device executor built from the
+same config produce allclose images for any batch size (asserted in
+tests/test_sharded_executor.py); the RF input buffer is donated only on
+accelerator backends (each batch is consumed exactly once in the
+streaming loop).
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.config import UltrasoundConfig
 from repro.core.pipeline import _resolve_plan, init_pipeline
 from repro.core.stages import graph_fn
 from repro.runtime import sharding
+
+
+def _mapped_graph_fn(cfg: UltrasoundConfig):
+    """The stage graph mapped over the leading batch axis per exec_map."""
+    fn = graph_fn(cfg)
+    if cfg.exec_map == "vmap":
+        return jax.vmap(fn, in_axes=(None, 0))
+    # UltrasoundConfig.__post_init__ already validated against EXEC_MAPS
+    assert cfg.exec_map == "map", cfg.exec_map
+
+    def mapped(consts, rf_b):
+        return jax.lax.map(lambda rf: fn(consts, rf), rf_b)
+    return mapped
+
+
+def _resolve_donate(donate: Optional[bool], plan) -> bool:
+    """Donation precedence: constructor arg > plan > backend default.
+
+    It is a no-op warning on the CPU stand-in; enable it only where the
+    runtime can actually alias the buffer.
+    """
+    if donate is None:
+        donate = plan.donate
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return donate
 
 
 class BatchedExecutor:
@@ -45,29 +98,14 @@ class BatchedExecutor:
         self.plan = _resolve_plan(cfg, plan, policy, donate=donate)
         self.cfg = self.plan.concretize(cfg)
         self.consts = jax.tree.map(jnp.asarray, init_pipeline(self.cfg))
-        fn = graph_fn(self.cfg)
-
-        if self.cfg.exec_map == "vmap":
-            mapped = jax.vmap(fn, in_axes=(None, 0))
-        elif self.cfg.exec_map == "map":
-            def mapped(consts, rf_b):
-                return jax.lax.map(lambda rf: fn(consts, rf), rf_b)
-        else:
-            raise ValueError(f"unknown exec_map: {self.cfg.exec_map!r}")
+        mapped = _mapped_graph_fn(self.cfg)
 
         def run(consts, rf_b):
             rf_b = sharding.shard_pin(rf_b, d0="batch")
             return mapped(consts, rf_b)
 
-        # Donation precedence: constructor arg > plan > backend default.
-        # It is a no-op warning on the CPU stand-in; enable it only where
-        # the runtime can actually alias the buffer.
-        if donate is None:
-            donate = self.plan.donate
-        if donate is None:
-            donate = jax.default_backend() != "cpu"
-        self.donate = donate
-        self._fn = jax.jit(run, donate_argnums=(1,) if donate else ())
+        self.donate = _resolve_donate(donate, self.plan)
+        self._fn = jax.jit(run, donate_argnums=(1,) if self.donate else ())
 
     def __call__(self, rf_batch: jnp.ndarray) -> jnp.ndarray:
         """(B, n_l, n_c, n_f) RF batch -> (B, *image_shape)."""
@@ -87,3 +125,111 @@ class BatchedExecutor:
     def name(self) -> str:
         return (f"{self.cfg.name}:{self.cfg.variant.value}"
                 f":{self.cfg.exec_map}")
+
+
+class ShardedExecutor:
+    """Data-parallel `BatchedExecutor` over a 1-D mesh of local devices.
+
+    The acquisition batch axis is split across the "data" mesh axis with
+    `NamedSharding`; constants are replicated. One jitted SPMD program
+    serves every call; XLA partitions it so each device runs the stage
+    graph on its batch shard with no cross-device communication (the
+    pipeline is embarrassingly parallel over acquisitions).
+
+    ``devices=None`` takes every local device. Uneven batches are
+    zero-padded up to a device multiple and the pad rows sliced off the
+    returned images, so any B >= 1 is accepted — at the cost of one
+    wasted device-row of compute for remainders (callers streaming for
+    throughput should keep B a multiple of ``n_devices``).
+    """
+
+    def __init__(self, cfg: UltrasoundConfig, *,
+                 devices: Optional[Sequence] = None,
+                 donate: Optional[bool] = None, plan=None,
+                 policy: Optional[str] = None):
+        devs = tuple(devices) if devices is not None \
+            else tuple(jax.local_devices())
+        if not devs:
+            raise ValueError("ShardedExecutor needs at least one device")
+        self.devices = devs
+        self.n_devices = len(devs)
+        base = _resolve_plan(cfg, plan, policy, donate=donate)
+        self.plan = base.with_devices(self.n_devices,
+                                      (("data", self.n_devices),))
+        self.cfg = self.plan.concretize(cfg)
+
+        self.mesh = Mesh(np.asarray(devs), ("data",))
+        self._consts_sharding = NamedSharding(self.mesh, P())
+        self._batch_sharding = NamedSharding(self.mesh, P("data"))
+        self.consts = jax.device_put(
+            jax.tree.map(jnp.asarray, init_pipeline(self.cfg)),
+            self._consts_sharding)
+        mapped = _mapped_graph_fn(self.cfg)
+        if self.cfg.exec_map == "map":
+            # lax.map is a sequential scan GSPMD cannot partition — left
+            # to the partitioner it would all-gather the batch and run
+            # it whole on every device. shard_map keeps the contract:
+            # each device scans only its local batch shard (constant
+            # memory per device, still data-parallel, no collectives).
+            from jax.experimental.shard_map import shard_map
+            mapped = shard_map(mapped, mesh=self.mesh,
+                               in_specs=(P(), P("data")),
+                               out_specs=P("data"))
+
+        def run(consts, rf_b):
+            return mapped(consts, rf_b)
+
+        self.donate = _resolve_donate(donate, self.plan)
+        self._fn = jax.jit(
+            run,
+            in_shardings=(self._consts_sharding, self._batch_sharding),
+            out_shardings=self._batch_sharding,
+            donate_argnums=(1,) if self.donate else ())
+
+    def _pad(self, rf_batch: jnp.ndarray) -> tuple:
+        b = rf_batch.shape[0]
+        if b < 1:
+            raise ValueError("empty RF batch")
+        pad = -b % self.n_devices
+        if pad:
+            fill = jnp.zeros((pad,) + rf_batch.shape[1:], rf_batch.dtype)
+            rf_batch = jnp.concatenate([rf_batch, fill])
+        return rf_batch, b, pad
+
+    def __call__(self, rf_batch: jnp.ndarray) -> jnp.ndarray:
+        """(B, n_l, n_c, n_f) RF batch -> (B, *image_shape), any B >= 1."""
+        rf_batch, b, pad = self._pad(rf_batch)
+        out = self._fn(self.consts, rf_batch)
+        return out[:b] if pad else out
+
+    def dispatch(self, rf_batch: jnp.ndarray) -> jnp.ndarray:
+        """Like ``__call__`` but keeps the (padded) batch-sharded result.
+
+        The streaming loop uses this to track per-device shards of the
+        in-flight output; B must already be a device multiple so no
+        host-side slicing re-synchronizes the stream.
+        """
+        b = rf_batch.shape[0]
+        if b < 1:
+            raise ValueError("empty RF batch")
+        if b % self.n_devices:
+            raise ValueError(
+                f"dispatch() needs batch % n_devices == 0 "
+                f"(got B={b}, n_devices={self.n_devices}); use __call__ "
+                "for remainder-padded one-shot execution")
+        return self._fn(self.consts, rf_batch)
+
+    @property
+    def jitted(self):
+        """The compiled SPMD (consts, rf_batch) -> images callable."""
+        return self._fn
+
+    @property
+    def input_bytes_per_acq(self) -> int:
+        """B_in of one acquisition (paper eq. 2 normalization)."""
+        return self.cfg.input_bytes
+
+    @property
+    def name(self) -> str:
+        return (f"{self.cfg.name}:{self.cfg.variant.value}"
+                f":{self.cfg.exec_map}:d{self.n_devices}")

@@ -30,6 +30,25 @@ Three policies:
 The registry and the autotune memo are process-global; both are plain
 dicts so tests (and future multi-backend sweeps) can inspect or reset
 them.
+
+Public API
+----------
+`plan_pipeline(cfg, policy=...)`        — resolve a config into a plan.
+`PipelinePlan`                          — the frozen result; consumed by
+    `UltrasoundPipeline`, `BatchedExecutor`, `ShardedExecutor`,
+    `serve_ultrasound_stream` and stamped (``json_dict()``) into every
+    telemetry record. ``with_devices(n, mesh_shape)`` derives the
+    multi-device form the `ShardedExecutor` stamps — ``devices``/
+    ``mesh_shape`` keep every NDJSON row attributable to the exact
+    device topology that produced it.
+`register_backend_preference`           — extend the heuristic registry.
+`clear_autotune_memo`                   — reset the measurement memo.
+
+Invariants: plans are frozen; ``variant`` is always concrete (never
+AUTO); ``matches(cfg)`` gates consumption so a plan's telemetry stamp
+can never be attached to a pipeline with different geometry; the
+planner never decides ``exec_map`` or ``devices`` — it records what the
+config/executor chose.
 """
 
 from __future__ import annotations
@@ -95,9 +114,34 @@ class PipelinePlan:
     geometry_key: str                              # hash sans variant/exec_map
     provenance: str                                # how the variant was chosen
     autotune_t_s: Optional[Tuple[Tuple[str, float], ...]] = None
+    # Device topology the plan executes on. 1/None = single-device (the
+    # BatchedExecutor default); the ShardedExecutor stamps its mesh via
+    # with_devices() so every telemetry record names its topology.
+    devices: int = 1
+    mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def __post_init__(self):
         assert self.variant.concrete, "plan must carry a concrete variant"
+        assert self.devices >= 1, "plan needs at least one device"
+        if self.mesh_shape is not None:
+            n = 1
+            for _, extent in self.mesh_shape:
+                n *= extent
+            assert n == self.devices, \
+                f"mesh_shape {self.mesh_shape} != devices {self.devices}"
+
+    def with_devices(self, devices: int,
+                     mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None
+                     ) -> "PipelinePlan":
+        """This plan, stamped with the executing device topology.
+
+        The decision axes (variant/exec_map/policy/provenance) are
+        unchanged — sharding scales the plan out, it never re-plans.
+        """
+        if mesh_shape is None:
+            mesh_shape = (("data", devices),)
+        return dataclasses.replace(self, devices=devices,
+                                   mesh_shape=mesh_shape)
 
     def matches(self, cfg: UltrasoundConfig) -> bool:
         """True iff this plan was built for ``cfg``'s geometry.
@@ -128,6 +172,10 @@ class PipelinePlan:
             "config_key": self.config_key,
             "geometry_key": self.geometry_key,
             "provenance": self.provenance,
+            "devices": self.devices,
+            "mesh_shape": ([[name, extent] for name, extent
+                            in self.mesh_shape]
+                           if self.mesh_shape is not None else None),
         }
         if self.autotune_t_s is not None:
             d["autotune_t_s"] = {k: v for k, v in self.autotune_t_s}

@@ -9,21 +9,48 @@ data and heads/experts over model exactly like the dry-run decode cells.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 16 --batch 4 --prompt-len 32 --max-new 32
 
-Ultrasound half — `serve_ultrasound_stream`: a streaming loop over the
-batched stage-graph engine (repro.core.executor). A synthetic acquisition
-source feeds RF batches; up to `depth` batches stay in flight against the
-async dispatch queue, and the loop reports *sustained* MB/s / FPS under
-queue pressure plus the batch-completion latency distribution
-(p50/p95/p99, jitter, deadline misses — semantics in EXPERIMENTS.md).
+Ultrasound half — two streaming drivers over the stage-graph executors
+(repro.core.executor), both fed by a synthetic acquisition source and
+both reporting *sustained* MB/s / FPS under queue pressure plus the
+completion-latency distribution (p50/p95/p99, jitter, deadline misses —
+semantics in EXPERIMENTS.md and docs/benchmarking-methodology.md):
+
+  * `serve_ultrasound_stream` — single-device `BatchedExecutor` loop;
+    up to `depth` batches stay in flight against the async dispatch
+    queue.
+  * `serve_ultrasound_sharded` — multi-device `ShardedExecutor` loop:
+    every dispatch splits its batch across the mesh, each device gets
+    its own in-flight queue of output shards (per-device completion
+    intervals -> per-device latency stats), and the stats report
+    aggregated throughput plus scale efficiency against a single-device
+    baseline (speedup_vs_single = sharded FPS / single-device FPS;
+    scale_efficiency = speedup / n_devices).
+
+Both stamp the resolved `PipelinePlan` (with device topology) and the
+measured `ResourceStats` (peak memory; energy where NVML exists, else
+None) into their stats dict, so streaming telemetry carries the same
+attribution and resource columns as the offline tables.
+
+Invariants: warm-up round trips never count toward the timed window;
+throughput is computed over wall clock of the whole window (sustained,
+not best-case); the sharded loop only dispatches device-aligned batches
+(batch_per_device * n_devices), so no host-side remainder slicing ever
+re-synchronizes the stream.
 
   PYTHONPATH=src python -m repro.launch.serve --ultrasound \
       --batch 4 --batches 32 --depth 2 --deadline-ms 50
+
+  # multi-device (CPU hosts: force a 2-device mesh first)
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  PYTHONPATH=src python -m repro.launch.serve --ultrasound \
+      --devices 2 --batch 4 --batches 32 --depth 2
 """
 
 from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import time
 
 import numpy as np
@@ -151,6 +178,7 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
     Returns a stats dict with sustained throughput and a LatencyStats.
     """
     from repro.bench.harness import latency_stats
+    from repro.bench.resources import ResourceMeter, devices_of
     from repro.core.executor import BatchedExecutor
 
     if batch < 1 or n_batches < 1 or depth < 1:
@@ -163,9 +191,14 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
     if source is None:
         source = SyntheticAcquisitionSource(cfg, batch, pool=pool, seed=seed)
 
+    # Meter built BEFORE warm-up so the NVML idle baseline sees the
+    # board cold; scoped to the engine's device — a sharded neighbor's
+    # buffers on other devices must not pollute this single-device stamp.
+    meter = ResourceMeter(devices=devices_of(engine.consts))
+
     # warm-up: compile + one full round trip, excluded from timing
     jax.block_until_ready(engine(jnp.asarray(source.next())))
-
+    meter.start()
     in_flight: collections.deque = collections.deque()
     intervals = []
     t0 = time.perf_counter()
@@ -177,11 +210,13 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
             now = time.perf_counter()
             intervals.append(now - last)
             last = now
+            meter.sample()
     while in_flight:
         jax.block_until_ready(in_flight.popleft())
         now = time.perf_counter()
         intervals.append(now - last)
         last = now
+        meter.sample()
     wall = time.perf_counter() - t0
 
     acqs = n_batches * batch
@@ -197,6 +232,148 @@ def serve_ultrasound_stream(cfg, *, batch: int = 4, n_batches: int = 32,
         "fps": acqs * cfg.n_f / wall,
         "acq_per_s": acqs / wall,
         "latency": latency_stats(intervals, budget_s=budget),
+        "resources": meter.stop().json_dict(),
+    }
+
+
+def serve_ultrasound_sharded(cfg, *, batch_per_device: int = 4,
+                             n_batches: int = 32, depth: int = 2,
+                             pool: int = 4, seed: int = 0,
+                             deadline_s=None, devices=None, source=None,
+                             plan=None, policy=None,
+                             baseline_fps=None,
+                             measure_baseline: bool = True) -> dict:
+    """Stream RF through the `ShardedExecutor`, per-device in-flight queues.
+
+    Every dispatch carries ``batch_per_device * n_devices`` acquisitions,
+    split across the mesh by the executor's batch sharding. The output
+    stays sharded; each device's output shard goes onto that device's
+    own in-flight queue, and once ``depth`` dispatches are queued the
+    loop blocks on the *oldest shard of each device* — so per-device
+    completion intervals (and stragglers) are observable individually
+    while dispatch stays global and asynchronous.
+
+    Scale efficiency: ``baseline_fps`` is the single-device sustained
+    FPS at the same per-device batch (measured via
+    `serve_ultrasound_stream` when not supplied and
+    ``measure_baseline``); the stats report
+    ``speedup_vs_single = fps / baseline_fps`` and
+    ``scale_efficiency = speedup_vs_single / n_devices`` (1.0 = perfect
+    linear scaling). Both are None when no baseline is available.
+
+    Returns a stats dict shaped like `serve_ultrasound_stream`'s plus
+    ``devices``, ``per_device_latency``, ``speedup_vs_single``,
+    ``scale_efficiency``; ``plan`` carries the mesh topology and
+    ``resources`` the measured peak memory / energy.
+    """
+    from repro.bench.harness import latency_stats
+    from repro.bench.resources import ResourceMeter
+    from repro.core.executor import ShardedExecutor
+
+    if batch_per_device < 1 or n_batches < 1 or depth < 1:
+        raise ValueError(
+            f"batch_per_device, n_batches, depth must be >= 1 "
+            f"(got {batch_per_device}, {n_batches}, {depth})")
+
+    engine = ShardedExecutor(cfg, devices=devices, plan=plan, policy=policy)
+    cfg = engine.cfg                 # plan-resolved (concrete variant)
+    n_dev = engine.n_devices
+    batch = batch_per_device * n_dev
+
+    # Meter built first — before the single-device baseline stream and
+    # the warm-up run heat the boards — so the NVML idle baseline
+    # actually sees them cold.
+    meter = ResourceMeter(devices=engine.devices)
+
+    if baseline_fps is None and measure_baseline:
+        # Same resolved decisions, single-device topology stamp: the
+        # baseline's telemetry must not claim the mesh it didn't use.
+        baseline_plan = dataclasses.replace(
+            engine.plan, devices=1, mesh_shape=None)
+        baseline_fps = serve_ultrasound_stream(
+            cfg, batch=batch_per_device, n_batches=n_batches, depth=depth,
+            pool=pool, seed=seed, deadline_s=deadline_s,
+            plan=baseline_plan, policy=None)["fps"]
+
+    if source is None:
+        source = SyntheticAcquisitionSource(cfg, batch, pool=pool, seed=seed)
+
+    # warm-up: compile + one full sharded round trip, excluded from timing
+    jax.block_until_ready(engine.dispatch(jnp.asarray(source.next())))
+
+    dev_index = {d: i for i, d in enumerate(engine.devices)}
+    queues = [collections.deque() for _ in engine.devices]
+    dev_intervals = [[] for _ in engine.devices]
+    intervals = []                     # global: all devices of a dispatch
+
+    meter.start()
+    t0 = time.perf_counter()
+    last_dev = [t0] * n_dev
+    last_global = t0
+
+    def drain_one():
+        """Retire the oldest in-flight shard of every device.
+
+        Completion times are observed by polling shard readiness, not
+        by blocking in device order — a straggling device must not
+        inflate the recorded completion time of devices that already
+        finished (its stall shows up in *its own* interval only).
+        """
+        nonlocal last_global
+        pending = {i: q.popleft() for i, q in enumerate(queues)}
+        while pending:
+            for i in list(pending):
+                sh = pending[i]
+                ready = sh.is_ready() if hasattr(sh, "is_ready") else True
+                if ready:
+                    jax.block_until_ready(sh)     # settled: returns at once
+                    now = time.perf_counter()
+                    dev_intervals[i].append(now - last_dev[i])
+                    last_dev[i] = now
+                    del pending[i]
+            if pending:
+                time.sleep(1e-4)
+        now = time.perf_counter()
+        intervals.append(now - last_global)
+        last_global = now
+        meter.sample()
+
+    for _ in range(n_batches):
+        out = engine.dispatch(jnp.asarray(source.next()))
+        for sh in out.addressable_shards:
+            queues[dev_index[sh.device]].append(sh.data)
+        while len(queues[0]) >= depth:
+            drain_one()
+    while queues[0]:
+        drain_one()
+    wall = time.perf_counter() - t0
+
+    acqs = n_batches * batch
+    fps = acqs * cfg.n_f / wall
+    budget = batch * deadline_s if deadline_s is not None else None
+    speedup = fps / baseline_fps if baseline_fps else None
+    return {
+        "name": (f"stream/{cfg.name}/{cfg.variant.value}"
+                 f"/b{batch_per_device}xd{n_dev}"),
+        "devices": n_dev,
+        "batch_per_device": batch_per_device,
+        "batch": batch, "n_batches": n_batches, "depth": depth,
+        "plan": engine.plan.json_dict(),
+        "wall_s": wall,
+        "acquisitions": acqs,
+        "frames": acqs * cfg.n_f,
+        "sustained_mbps": acqs * cfg.input_bytes / (wall * 1e6),
+        "fps": fps,
+        "acq_per_s": acqs / wall,
+        "latency": latency_stats(intervals, budget_s=budget),
+        "per_device_latency": {
+            str(d): latency_stats(dev_intervals[i]).json_dict()
+            for i, d in enumerate(engine.devices)},
+        "baseline_fps": baseline_fps,
+        "speedup_vs_single": speedup,
+        "scale_efficiency": (speedup / n_dev
+                             if speedup is not None else None),
+        "resources": meter.stop().json_dict(),
     }
 
 
@@ -216,6 +393,11 @@ def main() -> None:
                     help="ultrasound: max batches in flight")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="ultrasound: per-acquisition frame budget")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="ultrasound: shard each batch across N local "
+                         "devices (--batch becomes per-device; CPU hosts "
+                         "need XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--plan", default=None,
                     choices=["fixed", "heuristic", "autotune"],
                     help="ultrasound: variant-resolution policy")
@@ -231,22 +413,50 @@ def main() -> None:
         cfg = tiny_config(nz=32, nx=32, n_f=8, n_c=16)
         if args.variant is not None:
             cfg = cfg.with_(variant=Variant(args.variant))
-        stats = serve_ultrasound_stream(
-            cfg, batch=args.batch, n_batches=args.batches,
-            depth=args.depth, policy=args.plan,
-            deadline_s=(args.deadline_ms / 1e3
-                        if args.deadline_ms is not None else None))
+        deadline_s = (args.deadline_ms / 1e3
+                      if args.deadline_ms is not None else None)
+        if args.devices is not None:
+            local = jax.local_devices()
+            if args.devices < 1:
+                ap.error(f"--devices must be >= 1 (got {args.devices})")
+            if args.devices > len(local):
+                ap.error(f"--devices {args.devices} > {len(local)} local "
+                         "devices (CPU hosts: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count="
+                         f"{args.devices})")
+            stats = serve_ultrasound_sharded(
+                cfg, batch_per_device=args.batch, n_batches=args.batches,
+                depth=args.depth, policy=args.plan,
+                devices=local[:args.devices], deadline_s=deadline_s)
+        else:
+            stats = serve_ultrasound_stream(
+                cfg, batch=args.batch, n_batches=args.batches,
+                depth=args.depth, policy=args.plan, deadline_s=deadline_s)
         lat = stats["latency"]
         plan = stats["plan"]
         print(f"plan: policy={plan['policy']} backend={plan['backend']} "
               f"variant={plan['variant']} exec_map={plan['exec_map']} "
-              f"({plan['provenance']})")
+              f"devices={plan['devices']} ({plan['provenance']})")
         print(f"{stats['name']}: {stats['acquisitions']} acquisitions "
               f"({stats['frames']} frames) in {stats['wall_s']:.2f}s = "
               f"{stats['sustained_mbps']:.2f} MB/s, {stats['fps']:.1f} FPS; "
               f"p50={lat.p50_s * 1e3:.2f}ms p95={lat.p95_s * 1e3:.2f}ms "
               f"p99={lat.p99_s * 1e3:.2f}ms jitter={lat.jitter_s * 1e3:.2f}ms "
               f"miss_rate={lat.miss_rate:.3f}")
+        res = stats.get("resources") or {}
+        peak = res.get("peak_memory_bytes")
+        joules = res.get("energy_joules")
+        print("resources: "
+              f"peak_mem={peak / 1e6:.1f}MB ({res.get('memory_source')}) "
+              if peak is not None else "resources: peak_mem=n/a ",
+              end="")
+        print(f"energy={joules:.2f}J" if joules is not None
+              else "energy=n/a (no NVML)")
+        if stats.get("speedup_vs_single") is not None:
+            print(f"scaling: {stats['devices']} devices, "
+                  f"baseline_fps={stats['baseline_fps']:.1f}, "
+                  f"speedup={stats['speedup_vs_single']:.2f}x, "
+                  f"scale_efficiency={stats['scale_efficiency']:.2f}")
         return
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
