@@ -1,0 +1,156 @@
+"""Multi-tenant serving benchmark: clients x batch policy sweep.
+
+Beyond the single-probe streaming rows: N open-loop tenants (alternating
+B-mode / Color-Doppler configs at staggered frame rates — the mixed
+traffic a real scanner fleet produces) contend for one device through
+the dynamic-batching scheduler (`repro.launch.scheduler`), and each
+(clients, policy) cell reports aggregate sustained MB/s / FPS plus the
+distributions throughput claims hide: per-stream completion latency
+p50/p95/p99, queue delay, batch occupancy / fill rate, and the
+per-stream deadline-miss rate.
+
+The policy axis is the Jouppi trade: ``max_batch=1`` is
+dispatch-on-arrival (best latency, no amortization), larger
+``max_batch`` with a ``max_queue_delay_ms`` bound buys occupancy with
+bounded waiting. Determinism is not on the axis at all — the scheduler
+oracle test pins every cell's outputs to the per-frame monolithic
+reference bit-for-bit.
+
+NDJSON rows are ``{"kind": "multitenant", ...}`` — schema enforced by
+`repro.bench.schema` (CI validates the smoke artifact with exactly that
+module):
+
+  PYTHONPATH=src python -m benchmarks.multitenant --fast \
+      --ndjson MT.ndjson
+  PYTHONPATH=src python -m repro.bench.schema MT.ndjson \
+      --require-kind multitenant
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+# (max_batch, max_queue_delay_ms) cells: dispatch-on-arrival baseline,
+# then two coalescing depths at a realistic wait bound.
+DEFAULT_POLICIES = ((1, 0.0), (4, 5.0), (8, 10.0))
+DEFAULT_CLIENTS = (1, 2, 4)
+
+
+def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
+        policies: Sequence[Tuple[int, float]] = DEFAULT_POLICIES, *,
+        fast: bool = False, deadline_ms: Optional[float] = 100.0,
+        plan_policy: Optional[str] = None, cfg_bmode=None,
+        cfg_doppler=None, variant=None) -> Tuple[List[str], List[dict]]:
+    """Returns (csv lines, NDJSON-ready records), one per sweep cell.
+
+    ``cfg_bmode`` / ``cfg_doppler`` override the tenant geometries
+    (tests and the CI smoke pass tiny configs); the default is the
+    streaming benchmark geometry with the Doppler head swapped in for
+    odd tenants.
+    """
+    from benchmarks.common import stream_config
+    from repro.core import Modality, Variant
+    from repro.launch.scheduler import (BatchPolicy, make_mixed_streams,
+                                        serve_multitenant)
+
+    v = variant if variant is not None else Variant.DYNAMIC
+    if cfg_bmode is None:
+        cfg_bmode = stream_config(False).with_(variant=v)
+    if cfg_doppler is None:
+        cfg_doppler = cfg_bmode.with_(modality=Modality.DOPPLER)
+    n_frames = 8 if fast else 24
+
+    lines, records = [], []
+    for n in client_counts:
+        streams = make_mixed_streams(n, cfg_bmode, cfg_doppler,
+                                     n_frames=n_frames,
+                                     deadline_ms=deadline_ms)
+        for max_batch, delay_ms in policies:
+            stats = serve_multitenant(
+                streams, policy=BatchPolicy(max_batch, delay_ms),
+                plan_policy=plan_policy)
+            rec = {"kind": "multitenant", **stats}
+            records.append(rec)
+            lat, occ = stats["latency"], stats["occupancy"]
+            worst_p95 = max(s["latency"]["p95_s"]
+                            for s in stats["per_stream"].values())
+            lines.append(
+                f"{stats['name']},{1e6 / stats['acq_per_s']:.1f},"
+                f"clients={n};max_batch={max_batch};"
+                f"delay_ms={delay_ms:g};"
+                f"mbps={stats['sustained_mbps']:.2f};"
+                f"fps={stats['fps']:.2f};"
+                f"p50_ms={lat['p50_s'] * 1e3:.2f};"
+                f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
+                f"fill={occ['mean_fill']:.2f};"
+                f"miss_rate={stats['deadline_miss_rate']:.3f}")
+    return lines, records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer frames per tenant")
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny test geometry (CI smoke)")
+    ap.add_argument("--clients", default=None,
+                    help="comma-separated tenant counts "
+                         f"(default {','.join(map(str, DEFAULT_CLIENTS))})")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="single policy cell: coalescing ceiling")
+    ap.add_argument("--queue-delay-ms", type=float, default=5.0,
+                    help="single policy cell: max queue delay "
+                         "(with --max-batch)")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="per-frame completion budget (miss-rate metric)")
+    ap.add_argument("--ndjson", metavar="PATH", default=None,
+                    help="write one multitenant record per line")
+    ap.add_argument("--plan", default=None,
+                    choices=["fixed", "heuristic", "autotune"],
+                    help="variant-resolution policy (repro.core.plan)")
+    ap.add_argument("--variant", default=None,
+                    choices=["dynamic", "cnn", "sparse", "auto"],
+                    help="operator variant (auto = planner picks via "
+                         "--plan; default: dynamic)")
+    args = ap.parse_args()
+
+    # Fail on an unwritable telemetry path now, not after the sweep.
+    if args.ndjson:
+        open(args.ndjson, "a").close()
+
+    from repro.core import Modality, Variant, tiny_config
+    variant = Variant(args.variant) if args.variant else None
+    if variant == Variant.AUTO and args.plan == "fixed":
+        ap.error("--variant auto needs --plan heuristic or autotune")
+
+    cfg_bmode = cfg_doppler = None
+    if args.tiny:
+        v = variant if variant is not None else Variant.DYNAMIC
+        cfg_bmode = tiny_config(variant=v)
+        cfg_doppler = cfg_bmode.with_(modality=Modality.DOPPLER)
+
+    client_counts = ([int(x) for x in args.clients.split(",")]
+                     if args.clients else DEFAULT_CLIENTS)
+    policies = ([(args.max_batch, args.queue_delay_ms)]
+                if args.max_batch is not None else DEFAULT_POLICIES)
+
+    lines, records = run(client_counts, policies, fast=args.fast,
+                         deadline_ms=args.deadline_ms,
+                         plan_policy=args.plan, cfg_bmode=cfg_bmode,
+                         cfg_doppler=cfg_doppler, variant=variant)
+    print("name,us_per_acq,derived")
+    for line in lines:
+        print(line)
+        sys.stdout.flush()
+
+    if args.ndjson:
+        with open(args.ndjson, "w") as f:
+            for rec in records:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,12 +53,14 @@ def _device_counts(n_local: int) -> list:
 
 
 def run(device_counts=None, batch_sizes=(1, 4), *, fast: bool = False,
-        deadline_ms: float = 100.0, policy=None, variant=None):
+        deadline_ms: float = 100.0, policy=None, variant=None, cfg=None):
     """Returns (csv lines, NDJSON-ready records), one per (devices, batch).
 
     ``device_counts=None`` sweeps 1, powers of two, and all local
     devices. Single-device rows run through `serve_ultrasound_stream`
     and seed the scale-efficiency baselines for the sharded rows.
+    ``cfg`` overrides the streaming geometry (tests pass tiny configs
+    to exercise the emitter cheaply).
     """
     import jax
 
@@ -76,8 +78,10 @@ def run(device_counts=None, batch_sizes=(1, 4), *, fast: bool = False,
             f"device counts {bad} exceed {len(local)} local devices "
             "(CPU hosts: XLA_FLAGS=--xla_force_host_platform_device_count=N)")
 
-    cfg = stream_config(False).with_(
-        variant=variant if variant is not None else Variant.DYNAMIC)
+    if cfg is None:
+        cfg = stream_config(False).with_(variant=Variant.DYNAMIC)
+    if variant is not None:
+        cfg = cfg.with_(variant=variant)   # explicit ask beats cfg's own
     n_batches = 8 if fast else 24
     deadline_s = deadline_ms / 1e3
 

@@ -23,15 +23,21 @@ BATCH_SIZES = [1, 4]
 
 def run(paper_scale: bool = False, fast: bool = False,
         deadline_ms: float = 100.0, policy: Optional[str] = None,
-        variant: Optional[Variant] = None
+        variant: Optional[Variant] = None, cfg=None
         ) -> Tuple[List[str], List[dict]]:
-    """Returns (csv lines, json-ready records), one per batch size."""
+    """Returns (csv lines, json-ready records), one per batch size.
+
+    ``cfg`` overrides the streaming geometry (tests pass tiny configs
+    to exercise the emitter cheaply); default is `stream_config`.
+    """
     # Default: DYNAMIC, the fast variant on the gather-friendly CPU
     # stand-in (paper GPU rows) — stream the heaviest realistic path,
     # B-mode. `variant=Variant.AUTO` + a policy delegates to the planner;
     # the resolved plan rides along in every record.
-    cfg = stream_config(paper_scale).with_(
-        variant=variant if variant is not None else Variant.DYNAMIC)
+    if cfg is None:
+        cfg = stream_config(paper_scale).with_(variant=Variant.DYNAMIC)
+    if variant is not None:
+        cfg = cfg.with_(variant=variant)   # explicit ask beats cfg's own
     n_batches = 8 if fast else 24
     deadline_s = deadline_ms / 1e3
 

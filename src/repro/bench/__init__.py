@@ -1,9 +1,11 @@
 from repro.bench.harness import (  # noqa: F401
     BenchResult,
     LatencyStats,
+    OccupancyStats,
     bench_callable,
     bench_stages,
     latency_stats,
+    occupancy_stats,
     write_json,
     write_ndjson,
 )
@@ -12,16 +14,21 @@ from repro.bench.resources import (  # noqa: F401
     ResourceMeter,
     ResourceStats,
 )
+# NDJSON schema validation lives in repro.bench.schema — imported
+# directly (not re-exported here) so `python -m repro.bench.schema`
+# doesn't double-execute the module under runpy.
 
 __all__ = [
     "BenchResult",
     "LatencyStats",
     "NvmlEnergyMeter",
+    "OccupancyStats",
     "ResourceMeter",
     "ResourceStats",
     "bench_callable",
     "bench_stages",
     "latency_stats",
+    "occupancy_stats",
     "write_json",
     "write_ndjson",
 ]

@@ -3,7 +3,12 @@
 Public API (full methodology reference: docs/benchmarking-methodology.md)
 -------------------------------------------------------------------------
 `latency_stats`  — per-run samples -> `LatencyStats` (p50/p95/p99,
-                   jitter = p95-p50, deadline-miss rate).
+                   jitter = p95-p50, deadline-miss rate). Also used for
+                   queue-delay distributions (any per-event seconds
+                   samples summarize the same way).
+`occupancy_stats`— per-dispatch batch sizes -> `OccupancyStats` (mean /
+                   p50 occupancy, fill fraction, full-batch rate) for
+                   the dynamic-batching scheduler's coalescing window.
 `bench_callable` — time a jitted callable per the paper's execution
                    model; returns a `BenchResult` carrying the full
                    sample distribution, the resolved `plan` stamp, and
@@ -107,6 +112,57 @@ def latency_stats(samples_s: List[float],
         n=int(a.size), mean_s=float(a.mean()), std_s=float(a.std()),
         p50_s=float(p50), p95_s=float(p95), p99_s=float(p99),
         jitter_s=float(p95 - p50), budget_s=budget_s, miss_rate=miss)
+
+
+# ---------------------------------------------------------------------------
+# Batch occupancy (dynamic-batching scheduler telemetry)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OccupancyStats:
+    """Distribution of per-dispatch batch occupancy under coalescing.
+
+    One sample per dispatched batch: how many *valid* frames it carried
+    against the policy's ``max_batch`` padding target. ``mean_fill``
+    (mean occupancy / max_batch) is the fraction of dispatched compute
+    that served real frames — the padding waste is ``1 - mean_fill`` —
+    and ``full_rate`` is the fraction of dispatches at exactly
+    ``max_batch`` (coalescing filled the batch before the queue-delay
+    bound forced a partial flush).
+    """
+
+    batches: int
+    frames: int
+    max_batch: int
+    mean_occupancy: float
+    p50_occupancy: float
+    min_occupancy: int
+    max_occupancy: int
+    mean_fill: float                      # mean_occupancy / max_batch
+    full_rate: float                      # fraction dispatched at max_batch
+
+    def json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def occupancy_stats(batch_sizes: List[int],
+                    max_batch: int) -> OccupancyStats:
+    """Summarize per-dispatch occupancy samples (scheduler invariant:
+    no sample may exceed ``max_batch`` — asserted here so a policy bug
+    shows up in telemetry generation, not in silently wrong ratios)."""
+    a = np.asarray(batch_sizes, dtype=np.int64)
+    assert a.size > 0, "occupancy_stats needs at least one batch"
+    assert max_batch >= 1, max_batch
+    assert a.min() >= 1 and a.max() <= max_batch, (
+        f"occupancy outside 1..{max_batch}: {a.min()}..{a.max()}")
+    return OccupancyStats(
+        batches=int(a.size), frames=int(a.sum()), max_batch=int(max_batch),
+        mean_occupancy=float(a.mean()),
+        p50_occupancy=float(np.percentile(a, 50.0)),
+        min_occupancy=int(a.min()), max_occupancy=int(a.max()),
+        mean_fill=float(a.mean() / max_batch),
+        full_rate=float((a == max_batch).mean()))
 
 
 # ---------------------------------------------------------------------------

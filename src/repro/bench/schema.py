@@ -1,0 +1,265 @@
+"""NDJSON telemetry schema validation (`repro-bench-v1`).
+
+One schema, every emitter: `benchmarks/run.py` (summary / sample /
+stage + stream records), `benchmarks/stream_throughput.py`,
+`benchmarks/scaling.py`, and `benchmarks/multitenant.py` all funnel
+through `validate_record`, and the CI smoke rows assert their artifact
+files with the module CLI instead of ad-hoc inline asserts:
+
+  PYTHONPATH=src python -m repro.bench.schema BENCH_ci.ndjson \
+      SCALING_ci.ndjson --require-kind scaling --require-multidevice
+
+Validation is structural — required keys and JSON types per record
+``kind``, plus the nested `plan` (PipelinePlan.json_dict), `resources`
+(ResourceStats.json_dict), `latency` (LatencyStats.json_dict), and
+`occupancy` (OccupancyStats.json_dict) stamps. ``None`` is legal
+exactly where the producers document "not measurable on this backend"
+(energy off-NVML, budget_s without a deadline) — a missing *key* is
+always an error, so a producer that silently drops a column fails CI
+loudly instead of drifting.
+
+Tests apply the same helper to records generated in-process
+(tests/test_ndjson_schema.py), so the schema cannot fork between what
+CI checks and what the emitters write.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+from typing import Dict, Iterable, Optional, Tuple
+
+SCHEMA = "repro-bench-v1"
+
+# Type tokens: "str" / "int" / "real" / "bool" / "dict" / "list".
+# A "?" suffix additionally admits None (nullable column, never absent).
+_CHECKS = {
+    "str": lambda v: isinstance(v, str),
+    "int": lambda v: isinstance(v, numbers.Integral)
+    and not isinstance(v, bool),
+    "real": lambda v: isinstance(v, numbers.Real)
+    and not isinstance(v, bool),
+    "bool": lambda v: isinstance(v, bool),
+    "dict": lambda v: isinstance(v, dict),
+    "list": lambda v: isinstance(v, (list, tuple)),
+}
+
+LATENCY_KEYS: Dict[str, str] = {
+    "n": "int", "mean_s": "real", "std_s": "real", "p50_s": "real",
+    "p95_s": "real", "p99_s": "real", "jitter_s": "real",
+    "budget_s": "real?", "miss_rate": "real",
+}
+
+PLAN_KEYS: Dict[str, str] = {
+    "policy": "str", "backend": "str", "variant": "str",
+    "exec_map": "str", "donate": "bool?", "jit_stages": "dict",
+    "config_key": "str", "geometry_key": "str", "provenance": "str",
+    "devices": "int", "mesh_shape": "list?",
+}
+
+RESOURCE_KEYS: Dict[str, str] = {
+    "peak_memory_bytes": "int?", "memory_source": "str?",
+    "energy_joules": "real?", "energy_source": "str?",
+    "devices": "int", "duration_s": "real?",
+}
+
+OCCUPANCY_KEYS: Dict[str, str] = {
+    "batches": "int", "frames": "int", "max_batch": "int",
+    "mean_occupancy": "real", "p50_occupancy": "real",
+    "min_occupancy": "int", "max_occupancy": "int",
+    "mean_fill": "real", "full_rate": "real",
+}
+
+# Per-stream block inside a multitenant record (one per client).
+MT_STREAM_KEYS: Dict[str, str] = {
+    "pipeline": "str", "variant": "str", "arrival_fps": "real",
+    "frames": "int", "acquisitions": "int", "latency": "dict",
+    "queue_delay": "dict", "deadline_miss_rate": "real",
+}
+
+# kind -> required top-level keys. Stamps (plan/resources/latency/
+# occupancy) listed here are REQUIRED for that kind; extra keys are
+# always permitted (schema grows forward-compatibly).
+RECORD_KEYS: Dict[str, Dict[str, str]] = {
+    "summary": {
+        "name": "str", "t_avg_s": "real", "fps": "real", "mbps": "real",
+        "joules_per_run_model": "real", "peak_mem_gb": "real",
+        "runs": "int", "latency": "dict",
+    },
+    "sample": {"name": "str", "run": "int", "t_s": "real"},
+    "stage": {"name": "str", "stage": "str", **LATENCY_KEYS},
+    "stream": {
+        "name": "str", "batch": "int", "n_batches": "int", "depth": "int",
+        "plan": "dict", "wall_s": "real", "acquisitions": "int",
+        "frames": "int", "sustained_mbps": "real", "fps": "real",
+        "acq_per_s": "real", "latency": "dict", "resources": "dict",
+    },
+    "scaling": {
+        "name": "str", "plan": "dict", "devices": "int",
+        "batch_per_device": "int", "batch": "int", "n_batches": "int",
+        "wall_s": "real", "fps": "real", "sustained_mbps": "real",
+        "peak_memory_bytes": "int?", "memory_source": "str?",
+        "energy_joules": "real?", "joules_per_frame": "real?",
+        "speedup_vs_single": "real?", "scale_efficiency": "real?",
+        "latency": "dict",
+    },
+    "multitenant": {
+        "name": "str", "clients": "int", "policy": "dict",
+        "wall_s": "real", "acquisitions": "int", "frames": "int",
+        "sustained_mbps": "real", "fps": "real", "acq_per_s": "real",
+        "deadline_miss_rate": "real", "latency": "dict",
+        "queue_delay": "dict", "occupancy": "dict",
+        "per_stream": "dict", "groups": "dict", "resources": "dict",
+    },
+}
+
+MT_POLICY_KEYS: Dict[str, str] = {
+    "max_batch": "int", "max_queue_delay_ms": "real",
+}
+
+
+class SchemaError(AssertionError):
+    """A telemetry record violates the repro-bench-v1 schema."""
+
+
+def _check(rec: dict, keys: Dict[str, str], path: str) -> None:
+    for key, token in keys.items():
+        if key not in rec:
+            raise SchemaError(f"{path}: missing required key {key!r}")
+        nullable = token.endswith("?")
+        v = rec[key]
+        if v is None:
+            if not nullable:
+                raise SchemaError(f"{path}.{key}: null not allowed")
+            continue
+        if not _CHECKS[token.rstrip("?")](v):
+            raise SchemaError(
+                f"{path}.{key}: expected {token}, got "
+                f"{type(v).__name__} ({v!r})")
+
+
+def _check_latency(lat: dict, path: str) -> None:
+    _check(lat, LATENCY_KEYS, path)
+    if not (lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"]):
+        raise SchemaError(f"{path}: percentiles not monotone "
+                          f"(p50={lat['p50_s']}, p95={lat['p95_s']}, "
+                          f"p99={lat['p99_s']})")
+
+
+def validate_record(rec: dict, path: str = "record") -> str:
+    """Validate one NDJSON record; returns its kind, raises SchemaError.
+
+    The `plan` / `resources` stamps are validated structurally wherever
+    they appear (and are *required* where RECORD_KEYS says so); latency
+    blocks additionally assert percentile monotonicity.
+    """
+    if not isinstance(rec, dict):
+        raise SchemaError(f"{path}: not a JSON object")
+    kind = rec.get("kind")
+    if kind not in RECORD_KEYS:
+        raise SchemaError(
+            f"{path}: unknown kind {kind!r} "
+            f"(expected one of {sorted(RECORD_KEYS)})")
+    _check(rec, RECORD_KEYS[kind], path)
+
+    if "plan" in rec and rec["plan"] is not None:
+        _check(rec["plan"], PLAN_KEYS, f"{path}.plan")
+    if "resources" in rec and rec["resources"] is not None:
+        _check(rec["resources"], RESOURCE_KEYS, f"{path}.resources")
+    if kind == "stage":
+        _check_latency(rec, path)
+    elif "latency" in rec and rec["latency"] is not None:
+        _check_latency(rec["latency"], f"{path}.latency")
+    if "queue_delay" in rec and rec["queue_delay"] is not None:
+        _check_latency(rec["queue_delay"], f"{path}.queue_delay")
+    if "occupancy" in rec and rec["occupancy"] is not None:
+        _check(rec["occupancy"], OCCUPANCY_KEYS, f"{path}.occupancy")
+
+    if kind == "multitenant":
+        _check(rec["policy"], MT_POLICY_KEYS, f"{path}.policy")
+        if not rec["per_stream"]:
+            raise SchemaError(f"{path}.per_stream: empty")
+        for sid, s in rec["per_stream"].items():
+            spath = f"{path}.per_stream[{sid}]"
+            _check(s, MT_STREAM_KEYS, spath)
+            _check_latency(s["latency"], f"{spath}.latency")
+            _check_latency(s["queue_delay"], f"{spath}.queue_delay")
+        if not rec["groups"]:
+            raise SchemaError(f"{path}.groups: empty")
+        for gid, g in rec["groups"].items():
+            gpath = f"{path}.groups[{gid}]"
+            _check(g, {"plan": "dict", "streams": "list",
+                       "batches": "int", "occupancy": "dict"}, gpath)
+            _check(g["plan"], PLAN_KEYS, f"{gpath}.plan")
+            _check(g["occupancy"], OCCUPANCY_KEYS, f"{gpath}.occupancy")
+    return kind
+
+
+def validate_lines(lines: Iterable[str], *,
+                   source: str = "<ndjson>") -> Dict[str, int]:
+    """Validate NDJSON lines; returns {kind: count}, raises SchemaError."""
+    counts: Dict[str, int] = {}
+    n = 0
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise SchemaError(f"{source}:{i + 1}: invalid JSON: {e}")
+        kind = validate_record(rec, f"{source}:{i + 1}")
+        counts[kind] = counts.get(kind, 0) + 1
+        n += 1
+    if n == 0:
+        raise SchemaError(f"{source}: no NDJSON records")
+    return counts
+
+
+def validate_ndjson(path: str) -> Dict[str, int]:
+    """Validate a telemetry file; returns {kind: count}."""
+    with open(path) as f:
+        return validate_lines(f, source=path)
+
+
+def main(argv: Optional[Tuple[str, ...]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate repro-bench-v1 NDJSON telemetry files.")
+    ap.add_argument("paths", nargs="+", help="NDJSON files to validate")
+    ap.add_argument("--require-kind", action="append", default=[],
+                    metavar="KIND",
+                    help="fail unless at least one record of KIND exists "
+                         "across the given files (repeatable)")
+    ap.add_argument("--require-multidevice", action="store_true",
+                    help="fail unless some record ran on >= 2 devices")
+    args = ap.parse_args(argv)
+
+    totals: Dict[str, int] = {}
+    multidevice = False
+    try:
+        for path in args.paths:
+            counts = validate_ndjson(path)
+            for k, v in counts.items():
+                totals[k] = totals.get(k, 0) + v
+            if args.require_multidevice and not multidevice:
+                with open(path) as f:
+                    multidevice = any(
+                        json.loads(line).get("devices", 1) >= 2
+                        for line in f if line.strip())
+            print(f"{path}: " + ", ".join(
+                f"{v} {k}" for k, v in sorted(counts.items())) + " ok")
+        for kind in args.require_kind:
+            if totals.get(kind, 0) == 0:
+                raise SchemaError(f"no {kind!r} records in {args.paths}")
+        if args.require_multidevice and not multidevice:
+            raise SchemaError(
+                f"no multi-device (devices >= 2) record in {args.paths}")
+    except SchemaError as e:
+        print(f"schema violation: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -76,6 +76,29 @@ def _mapped_graph_fn(cfg: UltrasoundConfig):
     return mapped
 
 
+def _pad_rows(rf_batch: jnp.ndarray, pad_to: int) -> tuple:
+    """Zero-pad a ragged batch up to ``pad_to`` rows; returns (batch, b).
+
+    Shared by the executors' ``call_padded`` fixed-shape dispatch: the
+    multi-tenant scheduler coalesces heterogeneous arrivals into batches
+    of any occupancy 1..pad_to, but every dispatch must hit the SAME
+    compiled program — a recompile per occupancy would stall the serving
+    loop. Pad rows are zeros; per-example mapping (vmap / lax.map) keeps
+    them from influencing the valid rows, and callers slice them off.
+    """
+    b = rf_batch.shape[0]
+    if b < 1:
+        raise ValueError("empty RF batch")
+    if b > pad_to:
+        raise ValueError(
+            f"batch of {b} exceeds pad_to={pad_to} — the scheduler must "
+            "never coalesce past its policy's max_batch")
+    if b == pad_to:
+        return rf_batch, b
+    fill = jnp.zeros((pad_to - b,) + rf_batch.shape[1:], rf_batch.dtype)
+    return jnp.concatenate([rf_batch, fill]), b
+
+
 def _resolve_donate(donate: Optional[bool], plan) -> bool:
     """Donation precedence: constructor arg > plan > backend default.
 
@@ -110,6 +133,20 @@ class BatchedExecutor:
     def __call__(self, rf_batch: jnp.ndarray) -> jnp.ndarray:
         """(B, n_l, n_c, n_f) RF batch -> (B, *image_shape)."""
         return self._fn(self.consts, rf_batch)
+
+    def call_padded(self, rf_batch: jnp.ndarray,
+                    pad_to: int) -> jnp.ndarray:
+        """Fixed-shape dispatch of a ragged batch (B <= pad_to rows).
+
+        Heterogeneous-arrival entry point for the dynamic-batching
+        scheduler (repro.launch.scheduler): zero-pads the batch to
+        ``pad_to`` rows so every occupancy 1..pad_to reuses one compiled
+        program, then slices the valid rows off the result. Pad rows
+        cost compute, never a recompile.
+        """
+        rf_batch, b = _pad_rows(rf_batch, pad_to)
+        out = self._fn(self.consts, rf_batch)
+        return out[:b] if b != pad_to else out
 
     @property
     def jitted(self):
@@ -218,6 +255,23 @@ class ShardedExecutor:
                 f"(got B={b}, n_devices={self.n_devices}); use __call__ "
                 "for remainder-padded one-shot execution")
         return self._fn(self.consts, rf_batch)
+
+    def call_padded(self, rf_batch: jnp.ndarray,
+                    pad_to: int) -> jnp.ndarray:
+        """Fixed-shape dispatch of a ragged batch (B <= pad_to rows).
+
+        The sharded counterpart of `BatchedExecutor.call_padded`:
+        ``pad_to`` must be a device multiple so the one compiled SPMD
+        shape splits evenly across the mesh (the scheduler enforces
+        ``max_batch % n_devices == 0`` at construction).
+        """
+        if pad_to % self.n_devices:
+            raise ValueError(
+                f"call_padded needs pad_to % n_devices == 0 "
+                f"(got pad_to={pad_to}, n_devices={self.n_devices})")
+        rf_batch, b = _pad_rows(rf_batch, pad_to)
+        out = self._fn(self.consts, rf_batch)
+        return out[:b] if b != pad_to else out
 
     @property
     def jitted(self):

@@ -1,0 +1,427 @@
+"""Multi-tenant dynamic-batching serve scheduler.
+
+`serve_ultrasound_stream` measures ONE synthetic probe feeding the
+engine as fast as it can. Real deployments (the ROADMAP north star)
+look different: N independent probes — mixed modalities, mixed
+geometries, mixed frame rates — each producing acquisitions on its own
+clock, all contending for the same accelerator. Accelerator serving
+throughput is won or lost in the batching-under-latency-bound policy
+(Jouppi et al.: datacenter inference batches aggressively but bounds
+queue delay), and the determinism contract (TINA lineage, paper §II-C)
+requires that none of that batching changes a single output bit.
+
+This module is that frontend:
+
+  * `StreamSpec` — one client: an `UltrasoundConfig`, an arrival rate
+    (``fps`` acquisitions per second; open-loop arrivals, frame k of a
+    stream arrives at k/fps on the window clock whether or not the
+    device is keeping up), a frame count, a seed, and an optional
+    per-frame completion deadline.
+  * `BatchPolicy` — the two knobs of dynamic batching: ``max_batch``
+    (coalescing ceiling = the padded dispatch shape) and
+    ``max_queue_delay_ms`` (the longest any frame may wait for
+    companions; 0 = greedy dispatch-on-arrival).
+  * `serve_multitenant` — per-config queues: frames are grouped by the
+    full canonical config hash (only identical pipelines may share a
+    compiled program), coalesced into batches under the policy, and
+    dispatched through `BatchedExecutor.call_padded` (or
+    `ShardedExecutor.call_padded` when ``devices`` spans a mesh) at ONE
+    fixed compiled shape per group — occupancy varies, the program
+    never recompiles. Among queues eligible to flush (full, or oldest
+    frame past the delay bound) the oldest head dispatches first, so a
+    saturated tenant never starves a sparse one (FIFO fairness; frames
+    of one stream never reorder).
+
+Telemetry per window (stamped into the established NDJSON records by
+`benchmarks/multitenant.py`): per-frame queue delay (dispatch − arrival)
+and completion latency (done − arrival) distributions, aggregate and
+per-stream (LatencyStats: p50/p95/p99, jitter, deadline-miss rate
+against each stream's own budget), per-dispatch batch occupancy
+(`OccupancyStats`: mean fill, full-batch rate), per-group resolved
+`PipelinePlan` stamps, and the `ResourceStats` of the window.
+
+Invariants (asserted in tests/test_scheduler.py):
+
+  * determinism oracle — every frame served through the coalescing
+    scheduler is bit-identical (`np.array_equal`) to the same frame run
+    alone through `monolithic_pipeline_fn`, across all three variants
+    and both modalities: batching composition, padding, and arrival
+    order leave no trace in the pixels;
+  * a lone frame flushes once its queue delay reaches the policy bound
+    — it never waits for companions that are not coming;
+  * occupancy never exceeds ``max_batch``; warm-up compilation happens
+    before the window opens and never counts toward any metric.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import UltrasoundConfig
+
+__all__ = ["BatchPolicy", "StreamSpec", "make_mixed_streams",
+           "serve_multitenant"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Dynamic-batching policy: coalescing ceiling + queue-delay bound.
+
+    ``max_batch`` is both the coalescing limit and the padded dispatch
+    shape (one compiled program per config group). ``max_queue_delay_ms``
+    bounds how long the OLDEST queued frame may wait for companions
+    before the batch is flushed partial; 0 means dispatch whatever is
+    queued the moment the device is free (greedy, lowest latency,
+    worst occupancy).
+    """
+
+    max_batch: int = 4
+    max_queue_delay_ms: float = 5.0
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1 "
+                             f"(got {self.max_batch})")
+        if self.max_queue_delay_ms < 0:
+            raise ValueError(f"max_queue_delay_ms must be >= 0 "
+                             f"(got {self.max_queue_delay_ms})")
+
+    def json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One tenant: a probe configuration plus its arrival process.
+
+    ``fps`` is the open-loop arrival rate in acquisitions per second
+    (frame k arrives at ``k / fps`` on the window clock); ``phase_s``
+    offsets the whole stream (staggering tenants de-synchronizes their
+    bursts). ``pool`` pre-generated acquisitions cycle like
+    `SyntheticAcquisitionSource` so host-side synthesis stays out of
+    the serving window; frame k carries RF
+    ``synth_rf(cfg, seed=seed + (k % pool))``.
+    """
+
+    stream_id: str
+    cfg: UltrasoundConfig
+    fps: float = 100.0
+    n_frames: int = 16
+    seed: int = 0
+    pool: int = 4
+    phase_s: float = 0.0
+    deadline_ms: Optional[float] = None   # per-frame completion budget
+
+    def __post_init__(self):
+        if self.fps <= 0:
+            raise ValueError(f"fps must be > 0 (got {self.fps})")
+        if self.n_frames < 1:
+            raise ValueError(f"n_frames must be >= 1 "
+                             f"(got {self.n_frames})")
+        if self.pool < 1:
+            raise ValueError(f"pool must be >= 1 (got {self.pool})")
+
+    def arrival_s(self, k: int) -> float:
+        return self.phase_s + k / self.fps
+
+
+def make_mixed_streams(n_clients: int, cfg_bmode: UltrasoundConfig,
+                       cfg_doppler: UltrasoundConfig, *,
+                       base_fps: float = 120.0, n_frames: int = 24,
+                       deadline_ms: Optional[float] = 100.0
+                       ) -> List[StreamSpec]:
+    """Mixed-tenant traffic: alternating modalities, staggered rates.
+
+    Client i runs B-mode (even) or Color Doppler (odd) at
+    ``base_fps / (1 + i/2)`` — tenants never share a clock, so the
+    scheduler's coalescing has to earn its occupancy from genuinely
+    unaligned arrivals. Phases stagger by 1/4 of the fastest period.
+    Used by ``--multitenant`` serving and `benchmarks/multitenant.py`.
+    """
+    if n_clients < 1:
+        raise ValueError(f"n_clients must be >= 1 (got {n_clients})")
+    return [
+        StreamSpec(
+            stream_id=f"probe{i}",
+            cfg=cfg_bmode if i % 2 == 0 else cfg_doppler,
+            fps=base_fps / (1 + i / 2), n_frames=n_frames,
+            seed=17 * i, phase_s=i * 0.25 / base_fps,
+            deadline_ms=deadline_ms)
+        for i in range(n_clients)]
+
+
+@dataclasses.dataclass
+class _Frame:
+    """One enqueued acquisition, tracked from arrival to completion."""
+
+    stream: int            # index into the spec list
+    seq: int               # per-stream sequence number
+    rf: np.ndarray
+    t_arrival: float       # window clock (s)
+    t_dispatch: float = -1.0
+    t_done: float = -1.0
+
+
+class _Group:
+    """All streams sharing one canonical config hash -> one executor."""
+
+    def __init__(self, key: str, cfg: UltrasoundConfig, engine):
+        self.key = key
+        self.cfg = cfg
+        self.engine = engine
+        self.queue: collections.deque = collections.deque()
+        self.stream_ids: List[str] = []
+        self.occupancies: List[int] = []
+
+
+def _build_groups(specs: Sequence[StreamSpec], policy: BatchPolicy, *,
+                  devices, plan_policy) -> Tuple[List["_Group"],
+                                                 List["_Group"]]:
+    """Group specs by full config hash and build one executor each.
+
+    Returns (groups, group_of_stream). Grouping uses the PLAN-RESOLVED
+    config's canonical hash: two tenants may share a compiled program
+    only when every config field agrees — same geometry, same modality,
+    same resolved variant, same exec_map. `Variant.AUTO` tenants
+    resolve through ``plan_policy`` first, so an AUTO B-mode probe and
+    an explicit one land in the same group when the planner agrees.
+    """
+    from repro.core.executor import BatchedExecutor, ShardedExecutor
+    from repro.core.pipeline import _resolve_plan
+
+    sharded = devices is not None and len(devices) > 1
+    if sharded and policy.max_batch % len(devices):
+        raise ValueError(
+            f"max_batch={policy.max_batch} must be a multiple of "
+            f"n_devices={len(devices)} for sharded dispatch")
+
+    groups: Dict[str, _Group] = {}
+    group_of_stream: List[_Group] = []
+    for spec in specs:
+        # Resolve the plan (cheap, cached) BEFORE building anything —
+        # duplicate configs must share the group's one executor, not
+        # construct a throwaway each.
+        plan = _resolve_plan(spec.cfg, None, plan_policy)
+        key = plan.concretize(spec.cfg).canonical_hash()
+        if key not in groups:
+            engine = (ShardedExecutor(spec.cfg, devices=devices, plan=plan)
+                      if sharded
+                      else BatchedExecutor(spec.cfg, plan=plan))
+            groups[key] = _Group(key, engine.cfg, engine)
+        groups[key].stream_ids.append(spec.stream_id)
+        group_of_stream.append(groups[key])
+    return list(groups.values()), group_of_stream
+
+
+def _make_frames(specs: Sequence[StreamSpec]) -> List[_Frame]:
+    """Pre-generate every frame (arrival-sorted); synthesis is untimed."""
+    from repro.data import synth_rf
+
+    pools = []
+    for spec in specs:
+        n = min(spec.pool, spec.n_frames)
+        pools.append([synth_rf(spec.cfg, seed=spec.seed + i)
+                      for i in range(n)])
+    frames = [
+        _Frame(stream=si, seq=k, rf=pools[si][k % len(pools[si])],
+               t_arrival=spec.arrival_s(k))
+        for si, spec in enumerate(specs)
+        for k in range(spec.n_frames)]
+    frames.sort(key=lambda f: (f.t_arrival, f.stream, f.seq))
+    return frames
+
+
+def _pick_group(groups: List[_Group], now: float,
+                policy: BatchPolicy) -> Optional[_Group]:
+    """The group to flush now, or None if every queue may keep waiting.
+
+    A queue becomes *eligible* when it is full (occupancy is free
+    throughput) or when its oldest frame has waited max_queue_delay.
+    Among eligible queues the OLDEST head wins — bounded queue delay
+    beats occupancy, so a saturated tenant whose queue is always full
+    can never starve a sparse tenant's expired frame past the bound by
+    more than the in-service dispatch ahead of it.
+    """
+    delay_s = policy.max_queue_delay_ms / 1e3
+    best, best_head = None, None
+    for g in groups:
+        if not g.queue:
+            continue
+        head = g.queue[0].t_arrival
+        if len(g.queue) >= policy.max_batch or now - head >= delay_s:
+            if best is None or head < best_head:
+                best, best_head = g, head
+    return best
+
+
+def serve_multitenant(streams: Sequence[StreamSpec], *,
+                      policy: BatchPolicy = BatchPolicy(),
+                      devices=None, plan_policy: Optional[str] = None,
+                      collect_outputs: bool = False) -> dict:
+    """Serve N open-loop tenants through coalescing dynamic batching.
+
+    Runs one serving window: every frame of every stream is admitted at
+    its scheduled arrival time, queued per config group, coalesced
+    under ``policy``, executed at the group's fixed padded shape, and
+    timed from arrival to completion. Dispatch is synchronous (one
+    batch in flight — queue delay and occupancy are the axes under
+    test; in-flight depth composes the same way `serve_ultrasound_stream`
+    demonstrates).
+
+    ``devices``: a sequence of >= 2 local devices routes dispatch
+    through `ShardedExecutor.call_padded` (``max_batch`` must divide
+    evenly). ``plan_policy`` resolves `Variant.AUTO` tenants
+    (repro.core.plan). ``collect_outputs=True`` additionally returns
+    every served image (``outputs[stream_id][seq]``, numpy) — the hook
+    the determinism-oracle tests compare against the per-frame
+    monolithic reference.
+
+    Returns a stats dict (schema: `repro.bench.schema`, kind
+    "multitenant" once the benchmark stamps it): aggregate + per-stream
+    latency and queue-delay LatencyStats, OccupancyStats, per-group
+    plan stamps, ResourceStats, sustained MB/s / FPS / acq/s.
+    """
+    from repro.bench.harness import latency_stats, occupancy_stats
+    from repro.bench.resources import ResourceMeter
+
+    if not streams:
+        raise ValueError("serve_multitenant needs at least one stream")
+    ids = [s.stream_id for s in streams]
+    if len(set(ids)) != len(ids):
+        raise ValueError(f"duplicate stream_id in {ids}")
+
+    specs = list(streams)
+    groups, group_of_stream = _build_groups(
+        specs, policy, devices=devices, plan_policy=plan_policy)
+    frames = _make_frames(specs)
+
+    # Meter before warm-up: the NVML idle baseline must see the board
+    # cold; one meter spans every group's devices.
+    meter = ResourceMeter()
+
+    # Warm-up: compile each group's ONE padded program (occupancy 1 and
+    # max_batch hit the same shape) — excluded from the window.
+    for g in groups:
+        rf0 = np.zeros((1,) + g.cfg.rf_shape,
+                       dtype=np.dtype(g.cfg.rf_dtype))
+        jax.block_until_ready(
+            g.engine.call_padded(jnp.asarray(rf0), policy.max_batch))
+
+    outputs: Dict[str, dict] = {s.stream_id: {} for s in specs}
+    delay_s = policy.max_queue_delay_ms / 1e3
+
+    meter.start()
+    t0 = time.perf_counter()
+    ai, done = 0, 0
+    while done < len(frames):
+        now = time.perf_counter() - t0
+        while ai < len(frames) and frames[ai].t_arrival <= now:
+            f = frames[ai]
+            ai += 1
+            group_of_stream[f.stream].queue.append(f)
+        g = _pick_group(groups, now, policy)
+        if g is None:
+            # Nothing must flush yet: sleep to the next arrival or the
+            # earliest queue-delay expiry, whichever comes first.
+            horizon = []
+            if ai < len(frames):
+                horizon.append(frames[ai].t_arrival)
+            horizon.extend(g2.queue[0].t_arrival + delay_s
+                           for g2 in groups if g2.queue)
+            dt = min(horizon) - (time.perf_counter() - t0)
+            if dt > 0:
+                time.sleep(min(dt, 0.05))
+            continue
+
+        batch = [g.queue.popleft()
+                 for _ in range(min(len(g.queue), policy.max_batch))]
+        t_dispatch = time.perf_counter() - t0
+        out = g.engine.call_padded(
+            jnp.asarray(np.stack([f.rf for f in batch])),
+            policy.max_batch)
+        out = np.asarray(jax.block_until_ready(out))
+        t_done = time.perf_counter() - t0
+        meter.sample()
+        g.occupancies.append(len(batch))
+        for i, f in enumerate(batch):
+            f.t_dispatch, f.t_done = t_dispatch, t_done
+            if collect_outputs:
+                outputs[specs[f.stream].stream_id][f.seq] = out[i]
+        done += len(batch)
+    wall = time.perf_counter() - t0
+    resources = meter.stop()
+
+    # ---- telemetry ----------------------------------------------------
+    def budget(spec):
+        return (spec.deadline_ms / 1e3
+                if spec.deadline_ms is not None else None)
+
+    per_stream = {}
+    misses, with_budget = 0, 0
+    for si, spec in enumerate(specs):
+        fs = [f for f in frames if f.stream == si]
+        lat = latency_stats([f.t_done - f.t_arrival for f in fs],
+                            budget_s=budget(spec))
+        qd = latency_stats([f.t_dispatch - f.t_arrival for f in fs])
+        if budget(spec) is not None:
+            misses += int(round(lat.miss_rate * lat.n))
+            with_budget += lat.n
+        per_stream[spec.stream_id] = {
+            "pipeline": spec.cfg.name,
+            "variant": group_of_stream[si].cfg.variant.value,
+            "arrival_fps": spec.fps,
+            "acquisitions": spec.n_frames,
+            "frames": spec.n_frames * spec.cfg.n_f,
+            "deadline_ms": spec.deadline_ms,
+            "latency": lat.json_dict(),
+            "queue_delay": qd.json_dict(),
+            "deadline_miss_rate": lat.miss_rate,
+        }
+
+    acqs = len(frames)
+    total_frames = sum(s.n_frames * s.cfg.n_f for s in specs)
+    total_bytes = sum(s.n_frames * s.cfg.input_bytes for s in specs)
+    all_occ = [n for g in groups for n in g.occupancies]
+    stats = {
+        "name": (f"multitenant/{len(specs)}streams/{len(groups)}groups"
+                 f"/b{policy.max_batch}q{policy.max_queue_delay_ms:g}"),
+        "clients": len(specs),
+        "policy": policy.json_dict(),
+        "wall_s": wall,
+        "acquisitions": acqs,
+        "frames": total_frames,
+        "sustained_mbps": total_bytes / (wall * 1e6),
+        "fps": total_frames / wall,
+        "acq_per_s": acqs / wall,
+        "deadline_miss_rate": (misses / with_budget if with_budget
+                               else 0.0),
+        "latency": latency_stats(
+            [f.t_done - f.t_arrival for f in frames]).json_dict(),
+        "queue_delay": latency_stats(
+            [f.t_dispatch - f.t_arrival for f in frames]).json_dict(),
+        "occupancy": occupancy_stats(all_occ,
+                                     policy.max_batch).json_dict(),
+        "per_stream": per_stream,
+        "groups": {
+            g.key: {
+                "plan": g.engine.plan.json_dict(),
+                "streams": list(g.stream_ids),
+                "batches": len(g.occupancies),
+                "occupancy": occupancy_stats(
+                    g.occupancies, policy.max_batch).json_dict(),
+            } for g in groups},
+        "resources": resources.json_dict(),
+    }
+    if collect_outputs:
+        stats["outputs"] = {
+            sid: [seqs[k] for k in sorted(seqs)]
+            for sid, seqs in outputs.items()}
+    return stats

@@ -37,6 +37,14 @@ not best-case); the sharded loop only dispatches device-aligned batches
 (batch_per_device * n_devices), so no host-side remainder slicing ever
 re-synchronizes the stream.
 
+Multi-tenant serving (`--multitenant`) runs N open-loop probe clients
+— alternating B-mode / Doppler configs at staggered frame rates —
+through the dynamic-batching scheduler (`repro.launch.scheduler`):
+per-config queues, same-config-hash coalescing under a
+max_batch / max_queue_delay_ms policy, fixed padded dispatch shapes,
+per-stream latency + queue-delay + occupancy telemetry. Design and
+knobs: docs/serving.md.
+
   PYTHONPATH=src python -m repro.launch.serve --ultrasound \
       --batch 4 --batches 32 --depth 2 --deadline-ms 50
 
@@ -44,6 +52,11 @@ re-synchronizes the stream.
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
   PYTHONPATH=src python -m repro.launch.serve --ultrasound \
       --devices 2 --batch 4 --batches 32 --depth 2
+
+  # 4 mixed-modality tenants through the dynamic-batching scheduler
+  PYTHONPATH=src python -m repro.launch.serve --ultrasound \
+      --multitenant --clients 4 --max-batch 4 --queue-delay-ms 5 \
+      --deadline-ms 100
 """
 
 from __future__ import annotations
@@ -395,8 +408,9 @@ def main() -> None:
                     help="ultrasound: per-acquisition frame budget")
     ap.add_argument("--devices", type=int, default=None,
                     help="ultrasound: shard each batch across N local "
-                         "devices (--batch becomes per-device; CPU hosts "
-                         "need XLA_FLAGS="
+                         "devices (--batch becomes per-device; with "
+                         "--multitenant, --max-batch must divide by N; "
+                         "CPU hosts need XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--plan", default=None,
                     choices=["fixed", "heuristic", "autotune"],
@@ -404,30 +418,106 @@ def main() -> None:
     ap.add_argument("--variant", default=None,
                     choices=["dynamic", "cnn", "sparse", "auto"],
                     help="ultrasound: operator variant (auto = planner)")
+    ap.add_argument("--multitenant", action="store_true",
+                    help="ultrasound: N mixed-modality clients through "
+                         "the dynamic-batching scheduler "
+                         "(repro.launch.scheduler; docs/serving.md)")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="multitenant: number of probe clients")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="multitenant: coalescing ceiling (padded "
+                         "dispatch shape)")
+    ap.add_argument("--queue-delay-ms", type=float, default=5.0,
+                    help="multitenant: max wait of the oldest queued "
+                         "frame before a partial batch flushes")
+    ap.add_argument("--frames", type=int, default=24,
+                    help="multitenant: acquisitions per client")
     args = ap.parse_args()
+
+    if args.variant == "auto" and args.plan == "fixed":
+        ap.error("--variant auto needs --plan heuristic or autotune")
+
+    def cli_devices():
+        """Validated --devices -> prefix of local devices (None = unset).
+
+        Shared by the sharded-stream and multitenant paths so the range
+        checks (and the XLA_FLAGS hint) cannot drift between them.
+        """
+        if args.devices is None:
+            return None
+        local = jax.local_devices()
+        if args.devices < 1:
+            ap.error(f"--devices must be >= 1 (got {args.devices})")
+        if args.devices > len(local):
+            ap.error(f"--devices {args.devices} > {len(local)} local "
+                     "devices (CPU hosts: set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count="
+                     f"{args.devices})")
+        return local[:args.devices]
+
+    if args.multitenant:                 # implies --ultrasound
+        from repro.core import Modality, Variant, tiny_config
+        from repro.launch.scheduler import (BatchPolicy,
+                                            make_mixed_streams,
+                                            serve_multitenant)
+        if args.clients < 1:
+            ap.error(f"--clients must be >= 1 (got {args.clients})")
+        variant = (Variant(args.variant) if args.variant
+                   else Variant.DYNAMIC)
+        cfg = tiny_config(nz=32, nx=32, n_f=8, n_c=16, variant=variant)
+        streams = make_mixed_streams(
+            args.clients, cfg, cfg.with_(modality=Modality.DOPPLER),
+            n_frames=args.frames, deadline_ms=args.deadline_ms)
+        stats = serve_multitenant(
+            streams,
+            policy=BatchPolicy(args.max_batch, args.queue_delay_ms),
+            devices=cli_devices(), plan_policy=args.plan)
+        lat, qd = stats["latency"], stats["queue_delay"]
+        occ = stats["occupancy"]
+        print(f"{stats['name']}: {stats['acquisitions']} acquisitions "
+              f"({stats['frames']} frames) from {stats['clients']} "
+              f"clients in {stats['wall_s']:.2f}s = "
+              f"{stats['sustained_mbps']:.2f} MB/s, "
+              f"{stats['fps']:.1f} FPS")
+        print(f"latency: p50={lat['p50_s'] * 1e3:.2f}ms "
+              f"p95={lat['p95_s'] * 1e3:.2f}ms "
+              f"p99={lat['p99_s'] * 1e3:.2f}ms; queue delay "
+              f"p50={qd['p50_s'] * 1e3:.2f}ms "
+              f"p95={qd['p95_s'] * 1e3:.2f}ms; "
+              f"occupancy={occ['mean_occupancy']:.2f}/"
+              f"{occ['max_batch']} (fill={occ['mean_fill']:.2f}, "
+              f"full_rate={occ['full_rate']:.2f}); "
+              f"miss_rate={stats['deadline_miss_rate']:.3f}")
+        for sid, s in stats["per_stream"].items():
+            sl = s["latency"]
+            print(f"  {sid} [{s['pipeline']}/{s['variant']}"
+                  f"@{s['arrival_fps']:.0f}fps]: "
+                  f"p50={sl['p50_s'] * 1e3:.2f}ms "
+                  f"p95={sl['p95_s'] * 1e3:.2f}ms "
+                  f"p99={sl['p99_s'] * 1e3:.2f}ms "
+                  f"miss_rate={s['deadline_miss_rate']:.3f}")
+        for key, g in stats["groups"].items():
+            plan = g["plan"]
+            print(f"  group {key}: streams={g['streams']} "
+                  f"variant={plan['variant']} "
+                  f"backend={plan['backend']} "
+                  f"batches={g['batches']} "
+                  f"fill={g['occupancy']['mean_fill']:.2f}")
+        return
 
     if args.ultrasound:
         from repro.core import Variant, tiny_config
-        if args.variant == "auto" and args.plan == "fixed":
-            ap.error("--variant auto needs --plan heuristic or autotune")
         cfg = tiny_config(nz=32, nx=32, n_f=8, n_c=16)
         if args.variant is not None:
             cfg = cfg.with_(variant=Variant(args.variant))
         deadline_s = (args.deadline_ms / 1e3
                       if args.deadline_ms is not None else None)
-        if args.devices is not None:
-            local = jax.local_devices()
-            if args.devices < 1:
-                ap.error(f"--devices must be >= 1 (got {args.devices})")
-            if args.devices > len(local):
-                ap.error(f"--devices {args.devices} > {len(local)} local "
-                         "devices (CPU hosts: set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count="
-                         f"{args.devices})")
+        devices = cli_devices()
+        if devices is not None:
             stats = serve_ultrasound_sharded(
                 cfg, batch_per_device=args.batch, n_batches=args.batches,
                 depth=args.depth, policy=args.plan,
-                devices=local[:args.devices], deadline_s=deadline_s)
+                devices=devices, deadline_s=deadline_s)
         else:
             stats = serve_ultrasound_stream(
                 cfg, batch=args.batch, n_batches=args.batches,

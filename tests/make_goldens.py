@@ -1,0 +1,79 @@
+"""Regenerate the golden regression fixtures in tests/goldens/.
+
+One small ``.npz`` per (modality, variant) cell — tiny B-mode and
+Color-Doppler geometry, all three implementation variants — each
+holding the served image plus enough metadata to detect *why* a future
+mismatch happened (geometry change vs numeric drift).
+
+Run ONLY when an intentional numerics change is being made, and say so
+in the commit that updates the files:
+
+  PYTHONPATH=src python tests/make_goldens.py
+
+The companion test (tests/test_golden.py) recomputes every cell through
+`UltrasoundPipeline` and asserts allclose against these files, so a JAX
+upgrade or kernel edit that silently shifts the numerics fails loudly
+instead of drifting.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
+
+from repro.core import (Modality, UltrasoundPipeline, Variant,  # noqa: E402
+                        tiny_config)
+from repro.data import synth_rf                                 # noqa: E402
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+RF_SEED = 123
+MODALITIES = (Modality.BMODE, Modality.DOPPLER)
+VARIANTS = (Variant.DYNAMIC, Variant.CNN, Variant.SPARSE)
+
+
+def golden_cfg(modality: Modality, variant: Variant):
+    """The fixture geometry: the tiny test config, nothing exotic."""
+    return tiny_config(modality=modality, variant=variant)
+
+
+def golden_path(modality: Modality, variant: Variant) -> str:
+    return os.path.join(GOLDEN_DIR,
+                        f"{modality.value}_{variant.value}.npz")
+
+
+def compute_image(cfg) -> np.ndarray:
+    rf = jnp.asarray(synth_rf(cfg, seed=RF_SEED))
+    return np.asarray(jax.block_until_ready(UltrasoundPipeline(cfg)(rf)))
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for modality in MODALITIES:
+        for variant in VARIANTS:
+            cfg = golden_cfg(modality, variant)
+            img = compute_image(cfg)
+            meta = {
+                "config_hash": cfg.canonical_hash(),
+                "modality": modality.value,
+                "variant": variant.value,
+                "rf_seed": RF_SEED,
+                "jax_version": jax.__version__,
+                "backend": jax.default_backend(),
+            }
+            path = golden_path(modality, variant)
+            np.savez_compressed(path, image=img,
+                                meta=np.asarray(json.dumps(meta)))
+            print(f"{path}: {img.shape} {img.dtype} "
+                  f"({os.path.getsize(path)} bytes) "
+                  f"cfg={meta['config_hash']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""One schema, every emitter: repro.bench.schema applied end to end.
+
+Every NDJSON-producing path — the bench harness's summary / sample /
+stage records (benchmarks/run.py), the streaming records
+(stream_throughput.py), the scaling rows (scaling.py), and the
+multi-tenant scheduler rows (multitenant.py) — is generated here
+in-process at tiny geometry and pushed through the SAME
+`validate_record` that CI runs against the artifact files, so the
+schema cannot fork between what tests check and what CI enforces
+(this replaces the former CI-only inline assert for scaling rows).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.bench import bench_callable, bench_stages, write_ndjson
+from repro.bench.schema import (SchemaError, validate_lines,
+                                validate_ndjson, validate_record)
+from repro.core import UltrasoundPipeline, Variant, tiny_config
+from repro.data import synth_rf
+
+
+def _tiny_cfg():
+    return tiny_config(variant=Variant.DYNAMIC)
+
+
+@pytest.fixture(scope="module")
+def bench_result():
+    """A full BenchResult exactly like a table1 row: plan stamp, latency
+    distribution, stage breakdown."""
+    cfg = _tiny_cfg()
+    pipe = UltrasoundPipeline(cfg)
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    res = bench_callable(
+        f"{cfg.name}:{cfg.variant.value}", None, (pipe.consts, rf),
+        input_bytes=cfg.input_bytes, warmup=1, runs=3, deadline_s=10.0,
+        jitted=pipe.jitted, plan=pipe.plan)
+    res.stage_breakdown = bench_stages(cfg, rf, runs=2)
+    return res
+
+
+def test_harness_records_validate(bench_result):
+    kinds = [validate_record(json.loads(line))
+             for line in bench_result.ndjson_lines()]
+    assert kinds[0] == "summary"
+    assert kinds.count("sample") == 3
+    assert kinds.count("stage") == 3          # demod, beamform, head
+
+
+def test_write_ndjson_file_validates(tmp_path, bench_result):
+    path = tmp_path / "bench.ndjson"
+    write_ndjson(str(path), [bench_result])
+    counts = validate_ndjson(str(path))
+    assert counts == {"summary": 1, "sample": 3, "stage": 3}
+
+
+def test_stream_emitter_validates():
+    from benchmarks import stream_throughput
+    _, records = stream_throughput.run(fast=True, cfg=_tiny_cfg())
+    assert records
+    for rec in records:
+        assert validate_record(rec) == "stream"
+        assert rec["plan"]["variant"] == "dynamic"
+        assert rec["resources"]["devices"] >= 1
+
+
+def test_scaling_emitter_validates():
+    from benchmarks import scaling
+    _, records = scaling.run(device_counts=[1], batch_sizes=(1,),
+                             fast=True, cfg=_tiny_cfg())
+    assert records
+    for rec in records:
+        assert validate_record(rec) == "scaling"
+        assert rec["devices"] == 1
+    # The multi-device cells run in CI's forced-2-device smoke row and
+    # are validated there with the same module (python -m
+    # repro.bench.schema SCALING_ci.ndjson --require-multidevice).
+
+
+def test_multitenant_emitter_validates():
+    from benchmarks import multitenant
+    cfg = _tiny_cfg()
+    _, records = multitenant.run(
+        client_counts=(2,), policies=((2, 1.0),), fast=True,
+        cfg_bmode=cfg)
+    assert len(records) == 1
+    rec = records[0]
+    assert validate_record(rec) == "multitenant"
+    assert rec["clients"] == 2
+    assert set(rec["per_stream"]) == {"probe0", "probe1"}
+    for g in rec["groups"].values():
+        assert g["plan"]["variant"] == "dynamic"
+
+
+def test_validator_rejects_bad_records():
+    good = {"kind": "sample", "name": "x", "run": 0, "t_s": 0.1}
+    validate_record(good)
+    with pytest.raises(SchemaError, match="unknown kind"):
+        validate_record({"kind": "nope"})
+    with pytest.raises(SchemaError, match="missing required key"):
+        validate_record({"kind": "sample", "name": "x", "run": 0})
+    with pytest.raises(SchemaError, match="expected real"):
+        validate_record({**good, "t_s": "fast"})
+    with pytest.raises(SchemaError, match="expected int"):
+        validate_record({**good, "run": 1.5})
+    with pytest.raises(SchemaError, match="null not allowed"):
+        validate_record({**good, "t_s": None})
+    # bool must not satisfy int/real (True is an int in Python)
+    with pytest.raises(SchemaError, match="expected int"):
+        validate_record({**good, "run": True})
+
+
+def test_validator_rejects_non_monotone_percentiles():
+    lat = {"n": 2, "mean_s": 0.1, "std_s": 0.0, "p50_s": 0.2,
+           "p95_s": 0.1, "p99_s": 0.3, "jitter_s": 0.0,
+           "budget_s": None, "miss_rate": 0.0}
+    rec = {"kind": "summary", "name": "x", "t_avg_s": 0.1, "fps": 10.0,
+           "mbps": 1.0, "joules_per_run_model": 0.0, "peak_mem_gb": 0.0,
+           "runs": 2, "latency": lat}
+    with pytest.raises(SchemaError, match="percentiles not monotone"):
+        validate_record(rec)
+
+
+def test_validator_rejects_bad_plan_stamp():
+    rec = {"kind": "sample", "name": "x", "run": 0, "t_s": 0.1,
+           "plan": {"policy": "fixed"}}          # truncated stamp
+    with pytest.raises(SchemaError, match=r"plan: missing required key"):
+        validate_record(rec)
+
+
+def test_validate_lines_counts_and_empty():
+    lines = [json.dumps({"kind": "sample", "name": "x", "run": i,
+                         "t_s": 0.1}) for i in range(3)]
+    assert validate_lines(lines) == {"sample": 3}
+    with pytest.raises(SchemaError, match="no NDJSON records"):
+        validate_lines([])
+    with pytest.raises(SchemaError, match="invalid JSON"):
+        validate_lines(["{not json"])
+
+
+def test_numpy_scalars_do_not_sneak_past_json():
+    """Emitters serialize through json.dumps — numpy scalars would raise
+    there, so the validator only ever sees plain JSON types. Assert the
+    round trip stays clean for a real multitenant record."""
+    from repro.launch.scheduler import (BatchPolicy, StreamSpec,
+                                        serve_multitenant)
+    cfg = _tiny_cfg()
+    stats = serve_multitenant(
+        [StreamSpec("s0", cfg, fps=1e9, n_frames=2)],
+        policy=BatchPolicy(max_batch=2, max_queue_delay_ms=1.0))
+    line = json.dumps({"kind": "multitenant", **stats})
+    assert validate_lines([line]) == {"multitenant": 1}
+    assert not isinstance(json.loads(line)["fps"], np.ndarray)

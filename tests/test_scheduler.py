@@ -1,0 +1,331 @@
+"""Multi-tenant dynamic-batching scheduler: determinism oracle + policy.
+
+The oracle is the PR's acceptance bar: every frame served through the
+coalescing scheduler — batched with strangers, zero-padded to the policy
+shape, dispatched in arrival order — must be BIT-IDENTICAL
+(`np.array_equal`, not allclose) to the same frame run alone through
+`monolithic_pipeline_fn`. Across all three variants and both
+modalities: batching composition is an execution decision, and
+execution decisions must never leak into pixels (paper §II-C).
+
+Policy unit tests pin the two scheduling invariants that no throughput
+number can prove: a lone frame flushes once its queue delay reaches the
+policy bound (it never waits forever for companions), and occupancy
+never exceeds ``max_batch``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Modality, Variant, tiny_config
+from repro.core.executor import BatchedExecutor
+from repro.core.pipeline import init_pipeline, monolithic_pipeline_fn
+from repro.data import synth_rf
+from repro.launch.scheduler import (BatchPolicy, StreamSpec,
+                                    make_mixed_streams, serve_multitenant)
+
+BURST = 1e9          # arrival rate that lands every frame at t ~ 0
+
+
+def _mono_oracle(cfg, rf):
+    """One frame, alone, through the pre-stage-graph reference."""
+    consts = jax.tree.map(jnp.asarray, init_pipeline(cfg))
+    return np.asarray(jax.jit(monolithic_pipeline_fn(cfg))(
+        consts, jnp.asarray(rf)))
+
+
+@pytest.mark.parametrize("variant", [Variant.DYNAMIC, Variant.CNN,
+                                     Variant.SPARSE])
+def test_scheduler_output_bit_identical_to_monolithic_oracle(variant):
+    """Coalesced multi-tenant serving changes no output bit.
+
+    Two tenants (B-mode + Color Doppler) burst-arrive so the scheduler
+    coalesces aggressively; max_batch=3 against 5/4 frames forces both
+    full and partial (zero-padded) dispatches. Every served image must
+    equal the per-frame monolithic reference exactly.
+    """
+    cfg_b = tiny_config(variant=variant)
+    cfg_d = tiny_config(modality=Modality.DOPPLER, variant=variant)
+    streams = [
+        StreamSpec("b", cfg_b, fps=BURST, n_frames=5, seed=3, pool=5),
+        StreamSpec("d", cfg_d, fps=BURST, n_frames=4, seed=11, pool=4),
+    ]
+    stats = serve_multitenant(
+        streams, policy=BatchPolicy(max_batch=3, max_queue_delay_ms=2.0),
+        collect_outputs=True)
+
+    # modalities never share a compiled program; same-config tenants do
+    assert len(stats["groups"]) == 2
+    occ = stats["occupancy"]
+    assert occ["frames"] == 9
+    assert occ["max_occupancy"] <= 3
+    assert occ["min_occupancy"] >= 1
+
+    for sid, spec in (("b", streams[0]), ("d", streams[1])):
+        outs = stats["outputs"][sid]
+        assert len(outs) == spec.n_frames
+        for k, out in enumerate(outs):
+            rf = synth_rf(spec.cfg, seed=spec.seed + (k % spec.pool))
+            want = _mono_oracle(spec.cfg, rf)
+            assert out.dtype == want.dtype and out.shape == want.shape
+            assert np.array_equal(out, want), (
+                f"{sid}[{k}] ({variant.value}) drifted from the "
+                f"monolithic oracle: max|d|="
+                f"{np.abs(out - want).max()}")
+
+
+def test_lone_frame_flushes_at_deadline_never_waits_forever():
+    """A batch that will never fill must flush at max_queue_delay."""
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    stats = serve_multitenant(
+        [StreamSpec("solo", cfg, fps=BURST, n_frames=1)],
+        policy=BatchPolicy(max_batch=8, max_queue_delay_ms=50.0))
+    qd = stats["queue_delay"]
+    # The flush trigger is the policy bound, not a full batch: the one
+    # frame waited at least 50 ms — and the window terminated, which is
+    # the "never waits forever" half of the invariant.
+    assert qd["n"] == 1
+    assert 0.05 <= qd["p50_s"] < 5.0
+    assert stats["occupancy"]["batches"] == 1
+    assert stats["occupancy"]["max_occupancy"] == 1
+    assert stats["acquisitions"] == 1
+
+
+def test_occupancy_never_exceeds_max_batch():
+    """A 10-frame burst under max_batch=4 dispatches as 4+4+2."""
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    stats = serve_multitenant(
+        [StreamSpec("burst", cfg, fps=BURST, n_frames=10)],
+        policy=BatchPolicy(max_batch=4, max_queue_delay_ms=0.0))
+    occ = stats["occupancy"]
+    assert occ["max_occupancy"] <= 4
+    assert occ["frames"] == 10
+    assert occ["batches"] == 3          # 4 + 4 + 2, FIFO
+    (group,) = stats["groups"].values()
+    assert group["batches"] == 3
+
+
+def test_auto_variant_groups_with_explicit_twin():
+    """An AUTO tenant resolves through the planner and shares the
+    compiled program of an explicitly-configured twin."""
+    cfg = tiny_config(variant=Variant.DYNAMIC)        # cpu heuristic pick
+    auto = tiny_config(variant=Variant.AUTO)
+    stats = serve_multitenant(
+        [StreamSpec("explicit", cfg, fps=BURST, n_frames=2),
+         StreamSpec("auto", auto, fps=BURST, n_frames=2)],
+        policy=BatchPolicy(max_batch=4, max_queue_delay_ms=1.0),
+        plan_policy="heuristic")
+    (group,) = stats["groups"].values()
+    assert sorted(group["streams"]) == ["auto", "explicit"]
+    assert group["plan"]["variant"] == "dynamic"
+
+
+def test_per_stream_deadlines_and_telemetry_shape():
+    """Per-stream budgets produce per-stream miss rates; the record
+    passes the shared NDJSON schema."""
+    from repro.bench.schema import validate_record
+
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    streams = make_mixed_streams(
+        2, cfg, cfg.with_(modality=Modality.DOPPLER),
+        base_fps=200.0, n_frames=4, deadline_ms=1e6)   # un-missable
+    stats = serve_multitenant(
+        streams, policy=BatchPolicy(max_batch=2, max_queue_delay_ms=2.0))
+    assert stats["deadline_miss_rate"] == 0.0
+    for s in stats["per_stream"].values():
+        assert s["deadline_miss_rate"] == 0.0
+        assert s["latency"]["n"] == 4
+    validate_record({"kind": "multitenant", **stats})
+
+
+def test_policy_and_spec_validation():
+    cfg = tiny_config()
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=4, max_queue_delay_ms=-1.0)
+    with pytest.raises(ValueError):
+        StreamSpec("s", cfg, fps=0.0)
+    with pytest.raises(ValueError):
+        StreamSpec("s", cfg, n_frames=0)
+    with pytest.raises(ValueError):
+        serve_multitenant([])
+    with pytest.raises(ValueError, match="duplicate"):
+        serve_multitenant([StreamSpec("x", cfg), StreamSpec("x", cfg)])
+
+
+def test_saturated_tenant_cannot_starve_sparse_tenants_frame():
+    """Oldest eligible head wins (pure flush-policy logic, no timing):
+    a tenant whose queue is ALWAYS full must not keep winning the flush
+    over another tenant's expired older frame — that would push the
+    sparse tenant's queue delay unboundedly past max_queue_delay_ms."""
+    from repro.launch.scheduler import _Frame, _Group, _pick_group
+
+    def frame(t):
+        return _Frame(stream=0, seq=0, rf=None, t_arrival=t)
+
+    policy = BatchPolicy(max_batch=4, max_queue_delay_ms=5.0)
+    hog = _Group("hog", None, None)
+    hog.queue.extend(frame(1.000 + i * 1e-4) for i in range(8))  # full
+    solo = _Group("solo", None, None)
+    solo.queue.append(frame(0.999))                  # older, not full
+
+    # solo's head not yet expired -> the full queue flushes
+    assert _pick_group([hog, solo], now=1.001, policy=policy) is hog
+    # solo's head expired and OLDER than the full queue's -> solo wins,
+    # no matter how full hog is (full-queue-first starved it here)
+    assert _pick_group([hog, solo], now=1.005, policy=policy) is solo
+    # once solo drained, hog flushes again; nothing pending -> None
+    solo.queue.clear()
+    assert _pick_group([hog, solo], now=1.005, policy=policy) is hog
+    hog.queue.clear()
+    assert _pick_group([hog, solo], now=1.005, policy=policy) is None
+
+
+def test_sharded_call_padded_degenerate_single_device_mesh():
+    """ShardedExecutor.call_padded on the 1-device mesh: same contract
+    as the batched path (the true multi-device run is the subprocess
+    test below, same pattern as test_sharded_executor.py)."""
+    from repro.core.executor import ShardedExecutor
+
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    eng = ShardedExecutor(cfg)        # all local devices (1 in-process)
+    if eng.n_devices != 1:            # pragma: no cover - env-dependent
+        pytest.skip("main process must see a single device")
+    rf = jnp.asarray(np.stack([synth_rf(cfg, seed=s) for s in range(2)]))
+    out = np.asarray(eng.call_padded(rf, 4))
+    assert out.shape[0] == 2
+    assert np.array_equal(out, np.asarray(eng(rf)))
+    with pytest.raises(ValueError, match="exceeds pad_to"):
+        eng.call_padded(rf, 1)
+
+
+def test_call_padded_fixed_shape_contract():
+    """The executor's heterogeneous-arrival entry point: any occupancy
+    1..pad_to returns exactly the valid rows, and over- or empty
+    batches are refused."""
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    eng = BatchedExecutor(cfg)
+    rf3 = jnp.asarray(np.stack([synth_rf(cfg, seed=s) for s in range(3)]))
+    full = np.asarray(eng(rf3))
+    padded = np.asarray(eng.call_padded(rf3, 4))
+    assert padded.shape == full.shape
+    assert np.array_equal(padded, full)
+    one = np.asarray(eng.call_padded(rf3[:1], 4))
+    assert np.array_equal(one[0], full[0])
+    with pytest.raises(ValueError, match="exceeds pad_to"):
+        eng.call_padded(rf3, 2)
+    with pytest.raises(ValueError, match="empty"):
+        eng.call_padded(rf3[:0], 4)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: sharded multi-tenant dispatch on a forced 2-device CPU mesh
+# (XLA locks the host device count at first jax init — same pattern as
+# tests/test_sharded_executor.py)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import BatchedExecutor, Modality, ShardedExecutor, \
+    Variant, tiny_config
+from repro.core.pipeline import init_pipeline, monolithic_pipeline_fn
+from repro.data import synth_rf
+from repro.launch.scheduler import BatchPolicy, StreamSpec, \
+    serve_multitenant
+
+out = {"device_count": jax.device_count()}
+cfg = tiny_config(variant=Variant.DYNAMIC)
+
+# call_padded: fixed SPMD shape, valid rows match the batched oracle
+eng = ShardedExecutor(cfg)
+oracle = BatchedExecutor(cfg)
+errs = {}
+for B in (1, 3, 4):
+    rf = jnp.stack([jnp.asarray(synth_rf(cfg, seed=i)) for i in range(B)])
+    got = np.asarray(eng.call_padded(rf, 4))
+    want = np.asarray(oracle(rf))
+    errs[str(B)] = [list(got.shape) == list(want.shape),
+                    float(np.abs(got - want).max())]
+out["errs"] = errs
+try:
+    eng.call_padded(jnp.stack([jnp.asarray(synth_rf(cfg, seed=0))]), 3)
+    out["pad_to_odd_raised"] = False
+except ValueError:
+    out["pad_to_odd_raised"] = True
+
+# sharded multi-tenant window: plan stamps carry the mesh, outputs
+# match the per-frame monolithic oracle
+cfg_d = tiny_config(modality=Modality.DOPPLER, variant=Variant.DYNAMIC)
+streams = [StreamSpec("b", cfg, fps=1e9, n_frames=3, pool=3),
+           StreamSpec("d", cfg_d, fps=1e9, n_frames=2, pool=2)]
+stats = serve_multitenant(
+    streams, policy=BatchPolicy(max_batch=2, max_queue_delay_ms=2.0),
+    devices=jax.local_devices(), collect_outputs=True)
+max_err = 0.0
+for sid, spec in (("b", streams[0]), ("d", streams[1])):
+    consts = jax.tree.map(jnp.asarray, init_pipeline(spec.cfg))
+    mono = jax.jit(monolithic_pipeline_fn(spec.cfg))
+    for k, img in enumerate(stats["outputs"][sid]):
+        want = np.asarray(mono(consts, jnp.asarray(
+            synth_rf(spec.cfg, seed=spec.seed + (k % spec.pool)))))
+        max_err = max(max_err, float(np.abs(img - want).max()))
+out["mt_max_err"] = max_err
+out["mt_plan_devices"] = [g["plan"]["devices"]
+                          for g in stats["groups"].values()]
+out["mt_occ_max"] = stats["occupancy"]["max_occupancy"]
+out["mt_acqs"] = stats["acquisitions"]
+try:
+    serve_multitenant(streams, policy=BatchPolicy(max_batch=3),
+                      devices=jax.local_devices())
+    out["odd_max_batch_raised"] = False
+except ValueError:
+    out["odd_max_batch_raised"] = True
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_results():
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_call_padded_matches_oracle(sharded_results):
+    assert sharded_results["device_count"] == 2
+    for b, (shape_ok, err) in sharded_results["errs"].items():
+        assert shape_ok, f"batch {b}: shape mismatch"
+        assert err < 1e-5, f"batch {b}: max abs err {err}"
+    # pad_to must split evenly across the mesh
+    assert sharded_results["pad_to_odd_raised"] is True
+
+
+def test_sharded_multitenant_window(sharded_results):
+    """The scheduler's sharded dispatch path: every served frame
+    allclose to the monolithic oracle, plan stamps name the mesh,
+    policy invariants hold, and an indivisible max_batch is refused."""
+    r = sharded_results
+    assert r["mt_max_err"] < 1e-5
+    assert r["mt_plan_devices"] == [2, 2]
+    assert r["mt_occ_max"] <= 2
+    assert r["mt_acqs"] == 5
+    assert r["odd_max_batch_raised"] is True
