@@ -16,8 +16,13 @@ budget used for the deadline-miss rate.
 ``--plan {fixed,heuristic,autotune}`` selects the variant-resolution
 policy and ``--variant auto`` hands the choice to the planner
 (repro.core.plan); the resolved plan is stamped into every telemetry
-record. ``--only`` restricts the run to one section (the CI autotune
-smoke uses ``--only table1 --variant auto --plan autotune``).
+record. ``--lowering {xla,pallas}`` pins the beamform stage's operator
+lowering (repro.core.lowering) for the table1/stream sections — pallas
+sweeps only the variants that register a Pallas kernel, so the
+variant x lowering matrix is benchmarkable end to end (interpret mode
+off-TPU). ``--only`` restricts the run to one section (the CI autotune
+smoke uses ``--only table1 --variant auto --plan autotune``; the CI
+lowering smoke uses ``--only table1 --lowering pallas``).
 
 ``python -m benchmarks.run [--paper] [--fast] [--json PATH] [--ndjson PATH]``
 """
@@ -82,6 +87,12 @@ def main() -> None:
                          "(auto = planner picks); default: sweep all "
                          "three. table2's dynamic-vs-cnn comparison is "
                          "fixed by construction")
+    ap.add_argument("--lowering", default=None,
+                    choices=["xla", "pallas"],
+                    help="pin the beamform stage's operator lowering for "
+                         "the table1/stream sections (pallas: only the "
+                         "variants registering a kernel run; interpret "
+                         "mode off-TPU); default: planner-resolved")
     ap.add_argument("--only", default="all",
                     choices=["all", "table1", "table2", "table3",
                              "stream", "lm"],
@@ -94,6 +105,9 @@ def main() -> None:
     variant = Variant(args.variant) if args.variant else None
     if variant == Variant.AUTO and args.plan == "fixed":
         ap.error("--variant auto needs --plan heuristic or autotune")
+    if args.lowering == "pallas" and args.variant == "cnn":
+        ap.error("no pallas lowering is registered for the cnn beamform "
+                 "(the dense matmul IS the MXU formulation)")
 
     def on(section):
         return args.only in ("all", section)
@@ -111,7 +125,8 @@ def main() -> None:
     if on("table1") or on("table3"):   # table3 derives from table1 rows
         t1 = table1_variants.run(paper_scale=args.paper, runs=runs,
                                  deadline_s=deadline_s, stage_breakdown=True,
-                                 policy=args.plan, variant=variant)
+                                 policy=args.plan, variant=variant,
+                                 lowering=args.lowering)
         if on("table1"):
             for r in t1:
                 print(r.csv())
@@ -129,7 +144,8 @@ def main() -> None:
         stream_lines, stream_records = stream_throughput.run(
             paper_scale=args.paper, fast=args.fast,
             deadline_ms=args.deadline_ms,
-            policy=args.plan, variant=variant)
+            policy=args.plan, variant=variant,
+            lowering=args.lowering)
         for line in stream_lines:
             print(line)
             sys.stdout.flush()

@@ -23,7 +23,8 @@ BATCH_SIZES = [1, 4]
 
 def run(paper_scale: bool = False, fast: bool = False,
         deadline_ms: float = 100.0, policy: Optional[str] = None,
-        variant: Optional[Variant] = None, cfg=None
+        variant: Optional[Variant] = None, cfg=None,
+        lowering: Optional[str] = None
         ) -> Tuple[List[str], List[dict]]:
     """Returns (csv lines, json-ready records), one per batch size.
 
@@ -38,6 +39,18 @@ def run(paper_scale: bool = False, fast: bool = False,
         cfg = stream_config(paper_scale).with_(variant=Variant.DYNAMIC)
     if variant is not None:
         cfg = cfg.with_(variant=variant)   # explicit ask beats cfg's own
+    if lowering is not None:
+        # Concrete variants without the lowering (registered AND
+        # available on this backend) stream the xla reference instead of
+        # crashing the sweep (table1 skips the same cells); AUTO pins
+        # directly — the planner restricts its variant search to
+        # pin-honoring candidates.
+        import jax
+        from repro.core import available_lowerings
+        if (not cfg.variant.concrete or
+                lowering in available_lowerings(cfg, "beamform",
+                                                jax.default_backend())):
+            cfg = cfg.with_(stage_lowerings={"beamform": lowering})
     n_batches = 8 if fast else 24
     deadline_s = deadline_ms / 1e3
 

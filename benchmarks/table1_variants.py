@@ -8,8 +8,11 @@ sparse in between with higher memory) is the validated claim.
 
 Every row is measured through an explicit `PipelinePlan` and the resolved
 plan is stamped into the BenchResult, so each number is attributable to an
-exact (backend, variant, exec_map, policy) decision. `variant="auto"` +
-a policy runs a single planner-resolved row instead of the full sweep.
+exact (backend, variant, exec_map, policy, stage_lowerings) decision.
+`variant="auto"` + a policy runs a single planner-resolved row instead of
+the full sweep; ``lowering="pallas"`` pins the beamform stage to its
+Pallas kernel, sweeping only the variants that register one (the
+variant x lowering matrix, end to end).
 """
 
 from __future__ import annotations
@@ -18,8 +21,11 @@ from typing import List, Optional
 
 import jax.numpy as jnp
 
+import jax
+
 from repro.bench import BenchResult, bench_callable, bench_stages
-from repro.core import (Modality, UltrasoundPipeline, Variant, plan_pipeline)
+from repro.core import (Modality, UltrasoundPipeline, Variant,
+                        available_lowerings, plan_pipeline)
 from repro.data import synth_rf
 
 from benchmarks.common import bench_config
@@ -33,7 +39,8 @@ def run(paper_scale: bool = False, runs: int = 5,
         deadline_s: float = None,
         stage_breakdown: bool = False,
         policy: str = "fixed",
-        variant: Optional[Variant] = None) -> List[BenchResult]:
+        variant: Optional[Variant] = None,
+        lowering: Optional[str] = None) -> List[BenchResult]:
     base = bench_config(paper_scale)
     rf = jnp.asarray(synth_rf(base, seed=0))
     variants = VARIANTS if variant is None else [variant]
@@ -41,11 +48,21 @@ def run(paper_scale: bool = False, runs: int = 5,
     for v in variants:
         for modality in MODALITIES:
             cfg = base.with_(variant=v, modality=modality)
+            if lowering is not None:
+                # Registered AND available (capability predicates can
+                # reject a backend/geometry): absent cells are skipped,
+                # never crashed into. AUTO pins directly — the planner
+                # restricts its variant search to pin-honoring candidates.
+                if (v.concrete and lowering not in available_lowerings(
+                        cfg, "beamform", jax.default_backend())):
+                    continue     # no such cell in the variant x lowering grid
+                cfg = cfg.with_(stage_lowerings={"beamform": lowering})
             plan = plan_pipeline(cfg, policy=policy)
             pipe = UltrasoundPipeline(cfg, plan=plan)
             cfg = pipe.cfg                 # plan-resolved (AUTO -> concrete)
+            low = dict(plan.stage_lowerings)["beamform"]
             res = bench_callable(
-                f"table1/{cfg.name}/{cfg.variant.value}",
+                f"table1/{cfg.name}/{cfg.variant.value}/{low}",
                 None, (pipe.consts, rf),
                 input_bytes=cfg.input_bytes, runs=runs,
                 deadline_s=deadline_s,

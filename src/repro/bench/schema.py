@@ -55,6 +55,7 @@ LATENCY_KEYS: Dict[str, str] = {
 PLAN_KEYS: Dict[str, str] = {
     "policy": "str", "backend": "str", "variant": "str",
     "exec_map": "str", "donate": "bool?", "jit_stages": "dict",
+    "stage_lowerings": "dict",
     "config_key": "str", "geometry_key": "str", "provenance": "str",
     "devices": "int", "mesh_shape": "list?",
 }
@@ -166,6 +167,12 @@ def validate_record(rec: dict, path: str = "record") -> str:
 
     if "plan" in rec and rec["plan"] is not None:
         _check(rec["plan"], PLAN_KEYS, f"{path}.plan")
+        for stage, name in rec["plan"]["stage_lowerings"].items():
+            if not isinstance(name, str):
+                raise SchemaError(
+                    f"{path}.plan.stage_lowerings[{stage}]: expected a "
+                    f"lowering name string, got {type(name).__name__} "
+                    f"({name!r})")
     if "resources" in rec and rec["resources"] is not None:
         _check(rec["resources"], RESOURCE_KEYS, f"{path}.resources")
     if kind == "stage":

@@ -12,13 +12,22 @@ batched single-/multi-device engines the serving loop drives.
 
 from repro.core.config import (  # noqa: F401
     EXEC_MAPS,
+    LOWERING_NAMES,
     Modality,
     PIPELINE_NAMES,
+    STAGE_NAMES,
     UltrasoundConfig,
     Variant,
     config_hash,
     paper_config,
     tiny_config,
+)
+from repro.core.lowering import (  # noqa: F401
+    Lowering,
+    apply_stage,
+    available_lowerings,
+    register_lowering,
+    registered_lowerings,
 )
 from repro.core.pipeline import (  # noqa: F401
     CONSTS_CACHE_STATS,
@@ -35,6 +44,7 @@ from repro.core.plan import (  # noqa: F401
     clear_autotune_memo,
     plan_pipeline,
     register_backend_preference,
+    register_lowering_preference,
 )
 from repro.core.stages import (  # noqa: F401
     Stage,
@@ -51,13 +61,21 @@ from repro.core.executor import (  # noqa: F401
 __all__ = [
     # config
     "EXEC_MAPS",
+    "LOWERING_NAMES",
     "Modality",
     "PIPELINE_NAMES",
+    "STAGE_NAMES",
     "UltrasoundConfig",
     "Variant",
     "config_hash",
     "paper_config",
     "tiny_config",
+    # operator lowerings
+    "Lowering",
+    "apply_stage",
+    "available_lowerings",
+    "register_lowering",
+    "registered_lowerings",
     # pipeline + consts cache
     "CONSTS_CACHE_STATS",
     "UltrasoundPipeline",
@@ -72,6 +90,7 @@ __all__ = [
     "clear_autotune_memo",
     "plan_pipeline",
     "register_backend_preference",
+    "register_lowering_preference",
     # stage graph
     "Stage",
     "build_graph",

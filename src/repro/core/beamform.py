@@ -40,10 +40,6 @@ def beamform_dynamic(cfg: UltrasoundConfig, consts: Dict[str, jnp.ndarray],
     idx, frac = consts["idx"], consts["frac"]            # (n_pix, n_c)
     apod, rot = consts["apod"], consts["rot"]            # (..., 2)
 
-    if cfg.use_das_kernel:
-        from repro.kernels.das_beamform import das_beamform
-        return das_beamform(idx, frac, apod, rot, iq)
-
     iq_c = iq.transpose(1, 0, 2, 3)                      # (n_c, n_s, n_f, 2)
 
     def one_channel(iq_1, idx_1, frac_1, apod_1, rot_1):
@@ -107,6 +103,10 @@ def beamform_sparse(cfg: UltrasoundConfig, consts: Dict[str, jnp.ndarray],
 # ---------------------------------------------------------------------------
 
 
+# The XLA formulations per variant — each is also registered as the
+# "xla" lowering of the beamform stage op (repro.core.lowering); the
+# Pallas lowerings of DYNAMIC (kernels/das_beamform) and SPARSE
+# (kernels/bsr_spmm) live in the registry, selected per plan.
 BEAMFORMERS = {
     Variant.DYNAMIC: beamform_dynamic,
     Variant.CNN: beamform_cnn,
@@ -116,4 +116,6 @@ BEAMFORMERS = {
 
 def beamform(cfg: UltrasoundConfig, consts: Dict[str, jnp.ndarray],
              iq: jnp.ndarray) -> jnp.ndarray:
+    """Pure-XLA beamform dispatch (the monolithic oracle's reference
+    path — lowering-aware execution goes through the stage graph)."""
     return BEAMFORMERS[cfg.variant](cfg, consts, iq)

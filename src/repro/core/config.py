@@ -16,7 +16,8 @@ import dataclasses
 import enum
 import hashlib
 import json
-from typing import Collection, Tuple
+import warnings
+from typing import Collection, Mapping, Tuple
 
 
 class Variant(str, enum.Enum):
@@ -50,6 +51,12 @@ class Modality(str, enum.Enum):
 
 # Batch-mapping strategies the executors accept (config.exec_map).
 EXEC_MAPS = ("vmap", "map")
+
+# Stage names of the pipeline graph (repro.core.stages builds it) and the
+# operator lowerings each stage op may register (repro.core.lowering).
+# Declared here — not in stages/lowering — so config stays import-root.
+STAGE_NAMES = ("demod", "beamform", "bmode", "doppler", "power_doppler")
+LOWERING_NAMES = ("xla", "pallas")
 
 # Paper table names, e.g. RF2IQ_DAS_BMODE.
 PIPELINE_NAMES = {
@@ -103,9 +110,20 @@ class UltrasoundConfig:
     # The CNN variant always uses approximations (portability contract).
     cnn_transcendentals: bool = True
 
-    # Beyond-paper: route the DYNAMIC variant's beamform through the fused
-    # Pallas kernel (one-hot interpolation built in VMEM, consumed by the
-    # MXU — V2's portability without its HBM operator). CPU: interpret.
+    # --- operator lowerings ------------------------------------------------
+    # Explicit per-stage lowering overrides: a mapping (or pair tuple) of
+    # stage name -> lowering name, e.g. {"beamform": "pallas"}. Stages left
+    # unspecified are resolved by the planner (repro.core.plan) through the
+    # per-stage lowering registry (repro.core.lowering) — preference table
+    # or per-stage autotune — and `plan.concretize(cfg)` writes the resolved
+    # mapping back here, so the executed config (and its canonical hash,
+    # which groups multi-tenant streams) always names its lowerings.
+    # Normalized to a sorted tuple of pairs at construction.
+    stage_lowerings: Tuple[Tuple[str, str], ...] = ()
+
+    # DEPRECATED alias for stage_lowerings={"beamform": "pallas"} (the fused
+    # DAS Pallas kernel). Normalized away at construction — the field is
+    # always False afterwards, so it never reaches the canonical hash.
     use_das_kernel: bool = False
 
     # --- batched execution (stage-graph engine) ---------------------------
@@ -121,6 +139,46 @@ class UltrasoundConfig:
             raise ValueError(
                 f"unknown exec_map: {self.exec_map!r} "
                 f"(expected one of {EXEC_MAPS})")
+        lowerings = self.stage_lowerings
+        if isinstance(lowerings, Mapping):
+            lowerings = tuple(lowerings.items())
+        lowerings = {stage: name for stage, name in lowerings}
+        if self.use_das_kernel:
+            # The legacy flag was read only by the dynamic beamformer, so
+            # the alias applies to DYNAMIC (and to AUTO, which the planner
+            # then restricts to pin-honoring variants); on CNN/SPARSE it
+            # was — and stays — a no-op, now a loud one. Normalized away
+            # in every case so the canonical hash matches the
+            # explicit-stage_lowerings config.
+            if self.variant in (Variant.DYNAMIC, Variant.AUTO):
+                warnings.warn(
+                    "UltrasoundConfig.use_das_kernel is deprecated; use "
+                    "stage_lowerings={'beamform': 'pallas'}",
+                    DeprecationWarning, stacklevel=3)
+                lowerings.setdefault("beamform", "pallas")
+            else:
+                warnings.warn(
+                    "UltrasoundConfig.use_das_kernel is deprecated and "
+                    f"ignored for variant={self.variant.value!r} (the "
+                    "fused DAS kernel lowers only the dynamic beamform); "
+                    "use stage_lowerings={'beamform': 'pallas'} on a "
+                    "dynamic config", DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "use_das_kernel", False)
+        for stage, name in lowerings.items():
+            if stage not in STAGE_NAMES:
+                raise ValueError(
+                    f"unknown stage in stage_lowerings: {stage!r} "
+                    f"(expected one of {STAGE_NAMES})")
+            if name not in LOWERING_NAMES:
+                raise ValueError(
+                    f"unknown lowering for stage {stage!r}: {name!r} "
+                    f"(expected one of {LOWERING_NAMES})")
+        object.__setattr__(self, "stage_lowerings",
+                           tuple(sorted(lowerings.items())))
+
+    def stage_lowering(self, stage: str, default: str = "xla") -> str:
+        """The lowering this config requests for ``stage`` (or default)."""
+        return dict(self.stage_lowerings).get(stage, default)
 
     # ---------------------------------------------------------------------
     @property
@@ -159,7 +217,8 @@ class UltrasoundConfig:
 
 # Bump when the meaning of a config field (and hence of any artifact keyed
 # on the hash — consts cache entries, autotune memos) changes incompatibly.
-CONFIG_HASH_SCHEMA = "ultrasound-cfg-v1"
+# v2: stage_lowerings joined the config (use_das_kernel normalized away).
+CONFIG_HASH_SCHEMA = "ultrasound-cfg-v2"
 
 
 def config_hash(cfg: UltrasoundConfig, *,

@@ -1,0 +1,245 @@
+"""Per-stage operator-lowering registry (xla / pallas, planned per stage).
+
+The paper's central claim is that *operator formulation* decides
+throughput per backend — and TINA/ConvBench show the win comes from
+choosing the right primitive lowering per operator, not per pipeline.
+The variant (dynamic / cnn / sparse) picks the *math formulation*; this
+module picks, per stage, the *lowering* that executes it:
+
+  * ``xla``    — the plain jax.numpy formulation (portable baseline;
+    every stage op registers one).
+  * ``pallas`` — a hand-tiled Pallas kernel (repro.kernels): the fused
+    ``das_beamform`` kernel lowers the dynamic beamform, the
+    scalar-prefetched ``bsr_spmm`` kernel lowers the sparse beamform.
+    Compiled on TPU, interpret-mode everywhere else (the shared
+    ``repro.kernels.pallas_compat.auto_interpret`` fallback).
+
+Each registration carries a capability predicate ``available(cfg,
+backend)`` (backend support, shape/tile constraints), so the planner
+(repro.core.plan) only ever considers lowerings that can actually run.
+`plan_pipeline` resolves one lowering per stage — preference table or
+per-stage autotune — and `PipelinePlan.concretize` writes the mapping
+into ``cfg.stage_lowerings``, from where `apply_stage` dispatches at
+trace time. The resolved mapping participates in the canonical config
+hash, so the multi-tenant scheduler never shares a compiled program
+across different lowerings, and it is stamped into every NDJSON record
+via the plan.
+
+Invariants: every (stage, variant) op has an ``xla`` lowering (the
+numeric reference — all lowerings of one op are allclose, asserted in
+tests/test_lowering.py); registration is idempotent per key; the
+registry is process-global and inspectable (tests extend it freely).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import beamform, bmode, demod, doppler
+from repro.core.config import (LOWERING_NAMES, STAGE_NAMES, UltrasoundConfig,
+                               Variant)
+
+__all__ = ["Lowering", "register_lowering", "registered_lowerings",
+           "available_lowerings", "resolve_apply", "apply_stage",
+           "supported_subset", "DEFAULT_LOWERING"]
+
+DEFAULT_LOWERING = "xla"
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """One way to execute a stage op.
+
+    ``apply(cfg, consts, x) -> y`` is the runtime transform (same
+    contract as `repro.core.stages.Stage.apply`); ``available(cfg,
+    backend)`` gates it on backend support and shape/tile constraints.
+    ``variant`` scopes the registration: None applies to every variant
+    (demod, the heads), a concrete Variant only to that formulation of
+    the stage (the three beamformers are three distinct ops).
+    """
+
+    stage: str
+    name: str
+    apply: Callable[[UltrasoundConfig, Dict, jnp.ndarray], jnp.ndarray]
+    available: Callable[[UltrasoundConfig, str], bool]
+    variant: Optional[Variant] = None
+
+
+# (stage, variant value or None) -> {lowering name -> Lowering}
+_REGISTRY: Dict[Tuple[str, Optional[str]], Dict[str, Lowering]] = {}
+
+
+def _always(cfg: UltrasoundConfig, backend: str) -> bool:
+    return True
+
+
+def register_lowering(stage: str, name: str, apply: Callable, *,
+                      variant: Optional[Variant] = None,
+                      available: Optional[Callable] = None) -> Lowering:
+    """Register (or replace) one lowering of a stage op."""
+    if stage not in STAGE_NAMES:
+        raise ValueError(f"unknown stage: {stage!r} "
+                         f"(expected one of {STAGE_NAMES})")
+    if name not in LOWERING_NAMES:
+        raise ValueError(f"unknown lowering name: {name!r} "
+                         f"(expected one of {LOWERING_NAMES})")
+    low = Lowering(stage=stage, name=name, apply=apply,
+                   available=available or _always, variant=variant)
+    key = (stage, variant.value if variant is not None else None)
+    _REGISTRY.setdefault(key, {})[name] = low
+    return low
+
+
+def _op_key(cfg: UltrasoundConfig, stage: str) -> Tuple[str, Optional[str]]:
+    """The registry key for ``stage`` under ``cfg``'s variant.
+
+    Variant-scoped registrations (the beamformers) win over
+    variant-independent ones; the beamform stage of an AUTO config has
+    no op until the planner resolves the variant.
+    """
+    if cfg.variant.concrete and (stage, cfg.variant.value) in _REGISTRY:
+        return (stage, cfg.variant.value)
+    return (stage, None)
+
+
+def registered_lowerings(cfg: UltrasoundConfig,
+                         stage: str) -> Dict[str, Lowering]:
+    """Every lowering registered for this (stage, cfg.variant) op."""
+    return dict(_REGISTRY.get(_op_key(cfg, stage), {}))
+
+
+def available_lowerings(cfg: UltrasoundConfig, stage: str,
+                        backend: str) -> Dict[str, Lowering]:
+    """The registered lowerings whose capability predicate passes."""
+    return {n: low for n, low in registered_lowerings(cfg, stage).items()
+            if low.available(cfg, backend)}
+
+
+def resolve_apply(cfg: UltrasoundConfig, stage: str) -> Callable:
+    """The apply callable for ``cfg``'s chosen lowering of ``stage``.
+
+    Stages left unspecified in ``cfg.stage_lowerings`` run the ``xla``
+    reference — plan-resolved configs always specify every stage, so
+    the default only serves raw (planner-less) graph construction.
+    """
+    name = cfg.stage_lowering(stage, DEFAULT_LOWERING)
+    lows = registered_lowerings(cfg, stage)
+    if name not in lows:
+        have = sorted(lows) or ["<none>"]
+        op = (f"{stage}/{cfg.variant.value}"
+              if _op_key(cfg, stage)[1] is not None else stage)
+        raise ValueError(
+            f"no {name!r} lowering registered for stage op {op!r} "
+            f"(registered: {have})")
+    return lows[name].apply
+
+
+def apply_stage(cfg: UltrasoundConfig, stage: str, consts: Dict,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch one stage through its configured lowering."""
+    return resolve_apply(cfg, stage)(cfg, consts, x)
+
+
+def supported_subset(cfg: UltrasoundConfig,
+                     backend: Optional[str] = None
+                     ) -> Tuple[Tuple[str, str], ...]:
+    """``cfg.stage_lowerings`` pruned to entries this variant registers
+    AND whose capability predicate passes on ``backend``.
+
+    Used when probing concrete variants on behalf of ``Variant.AUTO``:
+    an explicit {"beamform": "pallas"} must not crash the CNN probe
+    (which registers no pallas beamform) — the final plan still
+    validates explicit entries strictly against the resolved variant.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return tuple((stage, name) for stage, name in cfg.stage_lowerings
+                 if name in available_lowerings(cfg, stage, backend))
+
+
+def supports_explicit(cfg: UltrasoundConfig, backend: str) -> bool:
+    """True iff every explicit ``cfg.stage_lowerings`` entry is
+    registered for this variant and available on this backend — the
+    planner's variant-candidate filter (an AUTO config pinned to a
+    pallas beamform must never resolve to a variant that cannot honor
+    the pin)."""
+    return supported_subset(cfg, backend) == cfg.stage_lowerings
+
+
+# ---------------------------------------------------------------------------
+# Default registrations: the stage-op x lowering matrix
+# ---------------------------------------------------------------------------
+
+
+def _beamform_dynamic_pallas(cfg, consts, iq):
+    """Fused DAS gather+lerp+rotate+reduce in one Pallas kernel
+    (repro.kernels.das_beamform; docs/kernels.md has the tile contract)."""
+    from repro.kernels.das_beamform import das_beamform
+    return das_beamform(consts["idx"], consts["frac"], consts["apod"],
+                        consts["rot"], iq)
+
+
+def _beamform_sparse_pallas(cfg, consts, iq):
+    """Banded BSR SpMM via the scalar-prefetched Pallas kernel — the
+    paper's V3-on-TPU story (repro.kernels.bsr_spmm). The wrapper owns
+    the IQ sample-axis blocking; the kernel owns the block gather."""
+    from repro.kernels.bsr_spmm import bsr_beamform
+    blocks = consts["bsr_blocks"]                       # (n_c,n_pb,K,bp,bs,2)
+    cols = consts["bsr_col_idx"]                        # (n_c, n_pb, K)
+    bs = blocks.shape[4]
+    n_s = iq.shape[0]
+    n_sb = -(-n_s // bs)
+    pad = n_sb * bs - n_s
+    iq_p = jnp.pad(iq, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    iq_b = iq_p.reshape(n_sb, bs, iq.shape[1], iq.shape[2], 2)
+    return bsr_beamform(cols, blocks, iq_b)[: cfg.n_pix]
+
+
+def _das_pallas_available(cfg: UltrasoundConfig, backend: str) -> bool:
+    # The wrapper pads the pixel axis to the tile size and the kernel
+    # declares no other hard shape constraint, so the fused DAS kernel
+    # is available everywhere (interpret mode off-TPU).
+    return True
+
+
+def _bsr_pallas_available(cfg: UltrasoundConfig, backend: str) -> bool:
+    # Interpret mode accepts any block shape; the compiled TPU kernel
+    # feeds (bp x bs) blocks straight to the MXU, so sublane alignment
+    # (the config's documented "MXU-aligned multiples of 8" contract —
+    # the shipped defaults satisfy it) is a hard tile constraint.
+    if backend != "tpu":
+        return True
+    return cfg.sparse_block_p % 8 == 0 and cfg.sparse_block_s % 8 == 0
+
+
+def _register_defaults() -> None:
+    register_lowering(
+        "demod", "xla",
+        lambda cfg, consts, rf: demod.rf_to_iq(consts, rf, cfg.decim))
+    for variant, fn in beamform.BEAMFORMERS.items():
+        # each beamformer already has the Lowering.apply signature
+        register_lowering("beamform", "xla", fn, variant=variant)
+    register_lowering("beamform", "pallas", _beamform_dynamic_pallas,
+                      variant=Variant.DYNAMIC,
+                      available=_das_pallas_available)
+    register_lowering("beamform", "pallas", _beamform_sparse_pallas,
+                      variant=Variant.SPARSE,
+                      available=_bsr_pallas_available)
+    register_lowering(
+        "bmode", "xla",
+        lambda cfg, consts, bf: bmode.bmode_image(cfg, bf))
+    register_lowering(
+        "doppler", "xla",
+        lambda cfg, consts, bf:
+            doppler.color_doppler_image(cfg, consts, bf))
+    register_lowering(
+        "power_doppler", "xla",
+        lambda cfg, consts, bf:
+            doppler.power_doppler_image(cfg, consts, bf))
+
+
+_register_defaults()

@@ -191,8 +191,10 @@ def init_pipeline(cfg: UltrasoundConfig, *,
     Memory tier first, then disk, then recompute (populating both). The
     returned dict is a fresh shallow copy — add/remove keys freely — but
     the arrays themselves are the cached (read-only) buffers; copy one
-    before mutating it. ``exec_map`` is excluded from the cache key: it
-    changes how the graph is mapped, never its constants.
+    before mutating it. ``exec_map`` and ``stage_lowerings`` are
+    excluded from the cache key: they change how the graph is mapped /
+    which kernels execute it, never its constants (the Pallas lowerings
+    consume the same delay tables as their xla references).
     """
     if not cfg.variant.concrete:
         raise ValueError(
@@ -201,7 +203,8 @@ def init_pipeline(cfg: UltrasoundConfig, *,
     if not cache:
         return stages.init_graph_consts(cfg)
 
-    key = f"{CONSTS_SCHEMA}-{config_hash(cfg, exclude=('exec_map',))}"
+    key = (f"{CONSTS_SCHEMA}-"
+           f"{config_hash(cfg, exclude=('exec_map', 'stage_lowerings'))}")
     if key in _MEM_CACHE:
         CONSTS_CACHE_STATS.mem_hits += 1
         _MEM_CACHE.move_to_end(key)
@@ -274,6 +277,15 @@ def _resolve_plan(cfg: UltrasoundConfig, plan, policy: Optional[str],
                 f"the plan resolved {plan.variant.value!r} — an explicit "
                 "variant is always honored, so pass a matching plan (or an "
                 "AUTO config)")
+        planned = dict(plan.stage_lowerings)
+        for stage, name in cfg.stage_lowerings:
+            if planned.get(stage, name) != name:
+                raise ValueError(
+                    f"cfg explicitly requests lowering {name!r} for stage "
+                    f"{stage!r} but the plan resolved "
+                    f"{planned[stage]!r} — an explicit lowering is always "
+                    "honored, so pass a matching plan (or drop the "
+                    "override)")
         if plan.exec_map != cfg.exec_map:
             # The planner never decides exec_map (it copies the config's);
             # an explicit cfg.exec_map — e.g. "map" to bound peak memory —

@@ -27,7 +27,17 @@ Three policies:
     warm runs through the bench harness and pick the winner. Memoized per
     (config-hash-ignoring-variant, backend) so sweeps pay the search once.
 
-The registry and the autotune memo are process-global; both are plain
+Planning is two-level. The variant decides the *math formulation*; the
+planner then resolves one operator *lowering* per stage (``xla`` or a
+Pallas kernel — the per-stage registry in repro.core.lowering) into
+``PipelinePlan.stage_lowerings``. Explicit ``cfg.stage_lowerings``
+entries are always honored (and refused loudly when unregistered for
+the resolved variant); unspecified stages consult the per-backend
+lowering preference table under fixed/heuristic, or are measured per
+stage via the bench harness's stage breakdown under autotune — memoized
+alongside the variant memo so sweeps pay each search once.
+
+The registries and the autotune memos are process-global; all are plain
 dicts so tests (and future multi-backend sweeps) can inspect or reset
 them.
 
@@ -79,9 +89,28 @@ DEFAULT_PREFERENCE = Variant.CNN
 
 CONCRETE_VARIANTS = (Variant.DYNAMIC, Variant.CNN, Variant.SPARSE)
 
-# (geometry key, backend, runs, warmup) -> tuple of (variant value, t_avg_s)
-_AUTOTUNE_MEMO: Dict[Tuple[str, str, int, int],
-                     Tuple[Tuple[str, float], ...]] = {}
+# (geometry key, explicit stage_lowerings, backend, runs, warmup)
+#   -> tuple of (variant value, t_avg_s)
+_AUTOTUNE_MEMO: Dict[Tuple, Tuple[Tuple[str, float], ...]] = {}
+
+# Per-backend lowering preference, consulted for stages the config leaves
+# open under fixed/heuristic: backend -> {(stage, variant value or None)
+# -> lowering name}. Anything unlisted runs the "xla" reference. The TPU
+# rows encode the kernels' design intent — the fused DAS kernel keeps the
+# dynamic gather in VMEM, and the scalar-prefetched BSR SpMM is the
+# paper's V3-on-TPU story — gated by each lowering's capability
+# predicate, so an unsatisfiable tile constraint falls back to xla.
+BACKEND_LOWERING_PREFERENCE: Dict[str, Dict[Tuple[str, Optional[str]],
+                                            str]] = {
+    "tpu": {
+        ("beamform", Variant.DYNAMIC.value): "pallas",
+        ("beamform", Variant.SPARSE.value): "pallas",
+    },
+}
+
+# (resolved-config key sans lowerings, explicit stage_lowerings, backend,
+#  runs, warmup) -> tuple of ("stage:lowering", t_avg_s)
+_LOWERING_MEMO: Dict[Tuple, Tuple[Tuple[str, float], ...]] = {}
 
 
 def register_backend_preference(backend: str, variant: Variant) -> None:
@@ -91,8 +120,18 @@ def register_backend_preference(backend: str, variant: Variant) -> None:
     BACKEND_VARIANT_PREFERENCE[backend] = variant
 
 
+def register_lowering_preference(backend: str, stage: str,
+                                 variant: Optional[Variant],
+                                 lowering_name: str) -> None:
+    """Extend/override the per-backend lowering preference table."""
+    BACKEND_LOWERING_PREFERENCE.setdefault(backend, {})[
+        (stage, variant.value if variant is not None else None)] = \
+        lowering_name
+
+
 def clear_autotune_memo() -> None:
     _AUTOTUNE_MEMO.clear()
+    _LOWERING_MEMO.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,9 +150,17 @@ class PipelinePlan:
     backend: str                                   # jax.default_backend()
     policy: str                                    # member of POLICIES
     config_key: str                                # hash of the REQUESTED cfg
-    geometry_key: str                              # hash sans variant/exec_map
+    geometry_key: str                              # hash sans planned axes
     provenance: str                                # how the variant was chosen
+    # One resolved operator lowering per stage of the graph ("xla" or
+    # "pallas"; repro.core.lowering) — concretize() writes these into
+    # cfg.stage_lowerings so the executed config, its canonical hash
+    # (multi-tenant grouping), and every telemetry stamp agree.
+    stage_lowerings: Tuple[Tuple[str, str], ...] = ()
     autotune_t_s: Optional[Tuple[Tuple[str, float], ...]] = None
+    # Per-stage lowering timings when autotune had to measure (pairs of
+    # ("stage:lowering", t_avg_s)); None when the table decided.
+    lowering_t_s: Optional[Tuple[Tuple[str, float], ...]] = None
     # Device topology the plan executes on. 1/None = single-device (the
     # BatchedExecutor default); the ShardedExecutor stamps its mesh via
     # with_devices() so every telemetry record names its topology.
@@ -123,6 +170,11 @@ class PipelinePlan:
     def __post_init__(self):
         assert self.variant.concrete, "plan must carry a concrete variant"
         assert self.devices >= 1, "plan needs at least one device"
+        jitted = {name for name, _ in self.jit_stages}
+        lowered = {name for name, _ in self.stage_lowerings}
+        assert lowered == jitted, (
+            f"plan must resolve a lowering for every stage of the graph "
+            f"(got {sorted(lowered)}, graph has {sorted(jitted)})")
         if self.mesh_shape is not None:
             n = 1
             for _, extent in self.mesh_shape:
@@ -146,17 +198,18 @@ class PipelinePlan:
     def matches(self, cfg: UltrasoundConfig) -> bool:
         """True iff this plan was built for ``cfg``'s geometry.
 
-        Variant and exec_map are the axes the plan itself decides, so
-        they are excluded — a plan built on an AUTO config matches the
-        resolved config and vice versa. Everything else differing means
-        the plan's decision (and its telemetry stamp) belongs to some
-        other pipeline.
+        Variant, exec_map, and stage_lowerings are the axes the plan
+        itself decides, so they are excluded — a plan built on an AUTO
+        config matches the resolved config and vice versa. Everything
+        else differing means the plan's decision (and its telemetry
+        stamp) belongs to some other pipeline.
         """
         return self.geometry_key == _geometry_key(cfg)
 
     def concretize(self, cfg: UltrasoundConfig) -> UltrasoundConfig:
         """The requested config with every planned decision applied."""
-        return cfg.with_(variant=self.variant, exec_map=self.exec_map)
+        return cfg.with_(variant=self.variant, exec_map=self.exec_map,
+                         stage_lowerings=self.stage_lowerings)
 
     def stage_jit(self, stage_name: str) -> bool:
         return dict(self.jit_stages).get(stage_name, True)
@@ -169,6 +222,7 @@ class PipelinePlan:
             "exec_map": self.exec_map,
             "donate": self.donate,
             "jit_stages": {k: v for k, v in self.jit_stages},
+            "stage_lowerings": {k: v for k, v in self.stage_lowerings},
             "config_key": self.config_key,
             "geometry_key": self.geometry_key,
             "provenance": self.provenance,
@@ -179,11 +233,14 @@ class PipelinePlan:
         }
         if self.autotune_t_s is not None:
             d["autotune_t_s"] = {k: v for k, v in self.autotune_t_s}
+        if self.lowering_t_s is not None:
+            d["lowering_t_s"] = {k: v for k, v in self.lowering_t_s}
         return d
 
 
 def _geometry_key(cfg: UltrasoundConfig) -> str:
-    return config_hash(cfg, exclude=("variant", "exec_map"))
+    return config_hash(cfg,
+                       exclude=("variant", "exec_map", "stage_lowerings"))
 
 
 def _default_measure(cfg: UltrasoundConfig, variant: Variant, *,
@@ -192,10 +249,15 @@ def _default_measure(cfg: UltrasoundConfig, variant: Variant, *,
     import jax.numpy as jnp
 
     from repro.bench.harness import bench_callable
+    from repro.core import lowering as lowering_lib
     from repro.core.pipeline import UltrasoundPipeline
     from repro.data import synth_rf
 
     c = cfg.with_(variant=variant)
+    # Explicit lowering entries the probed variant does not register
+    # (e.g. a pallas beamform while probing CNN) must not crash the
+    # probe; the final plan still validates against the winner.
+    c = c.with_(stage_lowerings=lowering_lib.supported_subset(c))
     pipe = UltrasoundPipeline(c)                  # consts cached; untimed
     rf = jnp.asarray(synth_rf(c, seed=0))
     res = bench_callable(
@@ -205,7 +267,42 @@ def _default_measure(cfg: UltrasoundConfig, variant: Variant, *,
     return res.t_avg_s
 
 
+def _default_stage_measure(cfg: UltrasoundConfig, stage: str, *,
+                           runs: int, warmup: int) -> float:
+    """Mean per-stage time of ``stage`` under ``cfg``'s lowerings, via
+    the existing bench_stages breakdown (§II-E per-stage protocol)."""
+    import jax.numpy as jnp
+
+    from repro.bench.harness import bench_stages
+    from repro.data import synth_rf
+
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    breakdown = bench_stages(cfg, rf, warmup=warmup, runs=runs)
+    return breakdown[stage].mean_s
+
+
+def _variant_candidates(cfg: UltrasoundConfig,
+                        backend: str) -> Tuple[Variant, ...]:
+    """Concrete variants able to honor every explicit lowering entry.
+
+    With no explicit entries this is all three; a pinned pallas
+    beamform excludes CNN (nothing registered) so AUTO resolution can
+    never land on a variant that would refuse the pin.
+    """
+    from repro.core import lowering as lowering_lib
+    candidates = tuple(
+        v for v in CONCRETE_VARIANTS
+        if lowering_lib.supports_explicit(cfg.with_(variant=v), backend))
+    if not candidates:
+        raise ValueError(
+            f"no concrete variant supports the explicit stage_lowerings "
+            f"{dict(cfg.stage_lowerings)} on backend {backend!r} — drop "
+            "an override or register the missing lowering")
+    return candidates
+
+
 def _autotune_timings(cfg: UltrasoundConfig, backend: str, *,
+                      variants: Tuple[Variant, ...],
                       runs: int, warmup: int,
                       measure: Optional[Callable]
                       ) -> Tuple[Tuple[str, float], ...]:
@@ -213,13 +310,19 @@ def _autotune_timings(cfg: UltrasoundConfig, backend: str, *,
     # 50-run request); an injected `measure` is not — tests that swap
     # probes call clear_autotune_memo(). exec_map is excluded too: the
     # probe times single-acquisition pipelines, which never read it.
-    memo_key = (_geometry_key(cfg), backend, runs, warmup)
+    # Explicit stage_lowerings ARE part of the key: the probe runs under
+    # them, so timings measured with a pallas beamform must not answer
+    # for a plain config (telemetry stays attributable). So is the
+    # candidate set — registry extensions change it without changing
+    # the config.
+    memo_key = (_geometry_key(cfg), cfg.stage_lowerings,
+                tuple(v.value for v in variants), backend, runs, warmup)
     if memo_key in _AUTOTUNE_MEMO:
         return _AUTOTUNE_MEMO[memo_key]
     measure = measure or _default_measure
     timings = tuple(
         (v.value, float(measure(cfg, v, runs=runs, warmup=warmup)))
-        for v in CONCRETE_VARIANTS)
+        for v in variants)
     _AUTOTUNE_MEMO[memo_key] = timings
     return timings
 
@@ -232,16 +335,152 @@ def _stage_jit_defaults(cfg: UltrasoundConfig) -> Tuple[Tuple[str, bool],
     return tuple((s.name, True) for s in build_graph(cfg))
 
 
+def _preferred_lowering(cfg: UltrasoundConfig, stage: str,
+                        backend: str, candidates: Dict) -> str:
+    """Table pick among ``candidates`` (available lowerings), else xla."""
+    from repro.core import lowering as lowering_lib
+    table = BACKEND_LOWERING_PREFERENCE.get(backend, {})
+    for op_key in ((stage, cfg.variant.value), (stage, None)):
+        want = table.get(op_key)
+        if want is not None and want in candidates:
+            return want
+    return (lowering_lib.DEFAULT_LOWERING
+            if lowering_lib.DEFAULT_LOWERING in candidates
+            else sorted(candidates)[0])
+
+
+def _resolve_stage_lowerings(cfg: UltrasoundConfig, backend: str, *,
+                             policy: str, runs: int, warmup: int,
+                             measure_stage: Optional[Callable]
+                             ) -> Tuple[Tuple[Tuple[str, str], ...],
+                                        Optional[Tuple[Tuple[str, float],
+                                                       ...]]]:
+    """One lowering per stage of ``cfg``'s (variant-resolved) graph.
+
+    Explicit ``cfg.stage_lowerings`` entries are honored verbatim —
+    and refused loudly at plan time when the registry has no such
+    lowering for the resolved variant, or when its capability predicate
+    rejects this backend/geometry (an explicit ask must run or fail
+    here, never silently fall back or die deep inside kernel
+    compilation). Open stages consult the per-backend preference table
+    (fixed/heuristic) or measure every available candidate through the
+    per-stage bench breakdown (autotune, memoized). Returns the
+    resolved pairs plus the ("stage:lowering", t) timings when autotune
+    measured (None otherwise).
+    """
+    from repro.core import lowering as lowering_lib
+    from repro.core.stages import build_graph
+
+    explicit = dict(cfg.stage_lowerings)
+    graph_stages = {s.name for s in build_graph(cfg)}
+    stray = sorted(set(explicit) - graph_stages)
+    if stray:
+        # A pin for a stage this modality's graph never runs would be
+        # silently dropped by concretize() — a typo like pinning "bmode"
+        # on a doppler config must fail here, not run something else.
+        raise ValueError(
+            f"stage_lowerings pins stage(s) {stray} that are not in "
+            f"this pipeline's graph ({sorted(graph_stages)} for "
+            f"modality {cfg.modality.value!r})")
+    resolved = []
+    to_tune = []
+    for stage in build_graph(cfg):
+        if stage.name in explicit:
+            name = explicit[stage.name]
+            registered = lowering_lib.registered_lowerings(cfg, stage.name)
+            if name not in registered:
+                raise ValueError(
+                    f"config requests lowering {name!r} for stage "
+                    f"{stage.name!r}, but the registry has no such "
+                    f"lowering for variant {cfg.variant.value!r} — "
+                    "register one (repro.core.lowering) or drop the "
+                    "override")
+            if not registered[name].available(cfg, backend):
+                raise ValueError(
+                    f"lowering {name!r} for stage {stage.name!r} is "
+                    f"registered but not available on backend "
+                    f"{backend!r} for this geometry (capability "
+                    "predicate failed — see docs/kernels.md for the "
+                    "tile constraints)")
+            resolved.append((stage.name, name))
+            continue
+        candidates = lowering_lib.available_lowerings(cfg, stage.name,
+                                                      backend)
+        if not candidates:          # pragma: no cover — xla always registers
+            raise ValueError(f"no available lowering for {stage.name!r}")
+        if policy == "autotune" and len(candidates) > 1:
+            to_tune.append((stage.name, sorted(candidates)))
+            resolved.append((stage.name, None))      # filled below
+        else:
+            resolved.append((stage.name, _preferred_lowering(
+                cfg, stage.name, backend, candidates)))
+
+    timings: Optional[Tuple[Tuple[str, float], ...]] = None
+    if to_tune:
+        timings = _lowering_timings(
+            cfg, backend,
+            base=tuple((s, n) for s, n in resolved if n is not None),
+            to_tune=tuple((s, tuple(c)) for s, c in to_tune),
+            runs=runs, warmup=warmup, measure_stage=measure_stage)
+        winners = {}
+        for key, t in timings:
+            stage_name, low_name = key.split(":", 1)
+            if (stage_name not in winners
+                    or t < winners[stage_name][1]):
+                winners[stage_name] = (low_name, t)
+        resolved = [(s, n if n is not None else winners[s][0])
+                    for s, n in resolved]
+    return tuple(resolved), timings
+
+
+def _lowering_timings(cfg: UltrasoundConfig, backend: str, *,
+                      base: Tuple[Tuple[str, str], ...],
+                      to_tune: Tuple[Tuple[str, Tuple[str, ...]], ...],
+                      runs: int, warmup: int,
+                      measure_stage: Optional[Callable]
+                      ) -> Tuple[Tuple[str, float], ...]:
+    """Measured ("stage:lowering", t_avg_s) pairs, memoized like the
+    variant search. The memo keys on the explicit-entry set AND the
+    contested (stage, candidates) set itself — `register_lowering` can
+    grow the latter at any time without touching the config, and a
+    stale entry missing a newly contested stage must miss, not crash.
+    Injected probes are not part of the key (tests that swap them call
+    clear_autotune_memo())."""
+    memo_key = (config_hash(cfg, exclude=("exec_map", "stage_lowerings")),
+                cfg.stage_lowerings, to_tune, backend, runs, warmup)
+    if memo_key in _LOWERING_MEMO:
+        return _LOWERING_MEMO[memo_key]
+    measure_stage = measure_stage or _default_stage_measure
+    explicit = dict(cfg.stage_lowerings)
+    timings = []
+    for stage_name, candidates in to_tune:
+        for name in candidates:
+            assignment = dict(base)
+            assignment.update(explicit)
+            assignment[stage_name] = name
+            probe_cfg = cfg.with_(
+                stage_lowerings=tuple(sorted(assignment.items())))
+            t = float(measure_stage(probe_cfg, stage_name,
+                                    runs=runs, warmup=warmup))
+            timings.append((f"{stage_name}:{name}", t))
+    result = tuple(timings)
+    _LOWERING_MEMO[memo_key] = result
+    return result
+
+
 def plan_pipeline(cfg: UltrasoundConfig, policy: str = "fixed", *,
                   donate: Optional[bool] = None,
                   autotune_runs: int = 3, autotune_warmup: int = 1,
-                  measure: Optional[Callable] = None) -> PipelinePlan:
+                  measure: Optional[Callable] = None,
+                  measure_stage: Optional[Callable] = None) -> PipelinePlan:
     """Resolve a config (possibly ``Variant.AUTO``) into a PipelinePlan.
 
     ``measure(cfg, variant, runs=, warmup=)`` overrides the autotune
-    timing probe (tests inject deterministic timings through it).
-    An explicitly concrete ``cfg.variant`` is honored under every policy
-    — the planner only ever decides what the user left open.
+    variant probe and ``measure_stage(cfg, stage, runs=, warmup=)`` the
+    per-stage lowering probe (tests inject deterministic timings through
+    both). An explicitly concrete ``cfg.variant`` — and any explicit
+    ``cfg.stage_lowerings`` entry — is honored under every policy; the
+    planner only ever decides what the user left open.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown plan policy: {policy!r} "
@@ -258,13 +497,21 @@ def plan_pipeline(cfg: UltrasoundConfig, policy: str = "fixed", *,
             "policy 'fixed' cannot resolve Variant.AUTO — pass a concrete "
             "variant or use policy='heuristic' / 'autotune'")
     elif policy == "heuristic":
+        candidates = _variant_candidates(cfg, backend)
         variant = BACKEND_VARIANT_PREFERENCE.get(backend, DEFAULT_PREFERENCE)
         known = backend in BACKEND_VARIANT_PREFERENCE
         provenance = (f"heuristic:{backend}->{variant.value}"
                       f"{'' if known else ' (default: unknown backend)'}")
+        if variant not in candidates:
+            # The preferred variant cannot honor an explicit lowering
+            # pin — fall to the first candidate that can, and say so.
+            variant = candidates[0]
+            provenance += (f" -> {variant.value} (preference cannot honor "
+                           f"explicit stage_lowerings)")
     else:  # autotune
         autotune_t_s = _autotune_timings(
-            cfg, backend, runs=autotune_runs, warmup=autotune_warmup,
+            cfg, backend, variants=_variant_candidates(cfg, backend),
+            runs=autotune_runs, warmup=autotune_warmup,
             measure=measure)
         winner = min(autotune_t_s, key=lambda kv: kv[1])
         variant = Variant(winner[0])
@@ -272,11 +519,17 @@ def plan_pipeline(cfg: UltrasoundConfig, policy: str = "fixed", *,
                       f"(t_avg={winner[1]:.3e}s over "
                       f"{len(autotune_t_s)} variants)")
 
-    # The modality decides the head stage, so jit toggles come from the
-    # resolved graph. Default: jit every stage (today's behavior).
+    # The modality decides the head stage, so jit toggles (and the
+    # per-stage lowering resolution) come from the resolved graph.
+    # Default: jit every stage (today's behavior).
     resolved = cfg.with_(variant=variant)
+    stage_lowerings, lowering_t_s = _resolve_stage_lowerings(
+        resolved, backend, policy=policy,
+        runs=autotune_runs, warmup=autotune_warmup,
+        measure_stage=measure_stage)
     return PipelinePlan(
         variant=variant, exec_map=cfg.exec_map, donate=donate,
         jit_stages=_stage_jit_defaults(resolved), backend=backend,
         policy=policy, config_key=key, geometry_key=_geometry_key(cfg),
-        provenance=provenance, autotune_t_s=autotune_t_s)
+        provenance=provenance, stage_lowerings=stage_lowerings,
+        autotune_t_s=autotune_t_s, lowering_t_s=lowering_t_s)

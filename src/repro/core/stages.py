@@ -14,10 +14,16 @@ Each stage exposes two pure functions:
     the legacy monolithic function signature.
 
 `graph_fn(cfg)` composes the stages back into the monolithic
-(consts, rf) -> image function — same jaxpr as the legacy monolith, so
-jit/pjit callers are unchanged — while `stage_fns(cfg)` returns each
-stage as its own (consts, x) -> y callable so stages can be jitted and
-timed individually (per-stage telemetry, §II-E breakdown).
+(consts, rf) -> image function — same jaxpr as the legacy monolith when
+every stage runs its ``xla`` lowering, so jit/pjit callers are
+unchanged — while `stage_fns(cfg)` returns each stage as its own
+(consts, x) -> y callable so stages can be jitted and timed
+individually (per-stage telemetry, §II-E breakdown).
+
+Each stage's runtime transform dispatches through the per-stage
+operator-lowering registry (repro.core.lowering): the lowering named in
+``cfg.stage_lowerings`` (plan-resolved) executes; stages left
+unspecified run the ``xla`` reference formulation.
 """
 
 from __future__ import annotations
@@ -29,7 +35,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import beamform, bmode, delays, demod, doppler
+from repro.core import delays, demod, doppler, lowering
 from repro.core.config import Modality, UltrasoundConfig, Variant
 
 
@@ -47,8 +53,12 @@ class Stage:
 # ---------------------------------------------------------------------------
 
 
-def _demod_apply(cfg, consts, rf):
-    return demod.rf_to_iq(consts, rf, cfg.decim)         # (n_s, n_c, n_f, 2)
+def _dispatch(stage_name):
+    """Bind a stage's apply to the lowering registry at call time, so a
+    plan-resolved ``cfg.stage_lowerings`` decides which formulation
+    traces (xla reference or Pallas kernel)."""
+    return (lambda cfg, consts, x:
+            lowering.apply_stage(cfg, stage_name, consts, x))
 
 
 def _beamform_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
@@ -78,22 +88,16 @@ def _doppler_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
 
 
 DEMOD = Stage("demod", lambda cfg: dict(demod.demod_consts(cfg)),
-              _demod_apply)
+              _dispatch("demod"))
 
-BEAMFORM = Stage("beamform", _beamform_consts,
-                 lambda cfg, consts, iq: beamform.beamform(cfg, consts, iq))
+BEAMFORM = Stage("beamform", _beamform_consts, _dispatch("beamform"))
 
 HEADS: Dict[Modality, Stage] = {
-    Modality.BMODE: Stage(
-        "bmode", lambda cfg: {},
-        lambda cfg, consts, bf: bmode.bmode_image(cfg, bf)),
-    Modality.DOPPLER: Stage(
-        "doppler", _doppler_consts,
-        lambda cfg, consts, bf: doppler.color_doppler_image(cfg, consts, bf)),
-    Modality.POWER_DOPPLER: Stage(
-        "power_doppler", _doppler_consts,
-        lambda cfg, consts, bf:
-            doppler.power_doppler_image(cfg, consts, bf)),
+    Modality.BMODE: Stage("bmode", lambda cfg: {}, _dispatch("bmode")),
+    Modality.DOPPLER: Stage("doppler", _doppler_consts,
+                            _dispatch("doppler")),
+    Modality.POWER_DOPPLER: Stage("power_doppler", _doppler_consts,
+                                  _dispatch("power_doppler")),
 }
 
 

@@ -11,18 +11,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bsr_spmm import kernel as _k
-
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.pallas_compat import auto_interpret
 
 
 def bsr_spmm(cols, blocks, x, *, interpret=None):
     return _k.bsr_spmm_pallas(
         cols, blocks.astype(jnp.float32), x.astype(jnp.float32),
-        interpret=_auto_interpret(interpret))
+        interpret=auto_interpret(interpret))
 
 
 def bsr_beamform(cols, blocks, iq_b, *, interpret=None):
@@ -35,7 +30,7 @@ def bsr_beamform(cols, blocks, iq_b, *, interpret=None):
     Returns:
       (n_pb * bp, n_f, 2) f32 beamformed output, summed over channels.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = auto_interpret(interpret)
 
     def one_channel(cols_1, blocks_1, iq_1):
         # iq_1: (n_sb, bs, n_f, 2)

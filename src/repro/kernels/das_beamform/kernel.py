@@ -39,28 +39,41 @@ def _kernel(idx_ref, frac_ref, apod_ref, rot_ref, iq_ref, out_ref):
 
     iota = lax.broadcasted_iota(jnp.int32, (bp, n_s), 1)
 
-    def channel_body(c, acc):
-        acc_re, acc_im = acc
+    def channel_body(c, per_c):
+        per_re, per_im = per_c
         idx = idx_ref[:, c][:, None]                     # (bp, 1)
         frac = frac_ref[:, c][:, None]
         apod = apod_ref[:, c][:, None]
-        # one-hot interpolation weights, built in VMEM, consumed by the MXU
+        # One-hot interpolation weights, built in VMEM, consumed by the
+        # MXU. Apodization and rotation are applied AFTER the dot, in the
+        # same f32 expression order as the XLA dynamic beamformer
+        # (lerp -> cmul(rot) -> *apod) — the one-hot contraction's zero
+        # terms add exactly, so per-channel values match the gather path
+        # bit for bit.
         w = (jnp.where(iota == idx, 1.0 - frac, 0.0) +
-             jnp.where(iota == idx + 1, frac, 0.0)) * apod  # (bp, n_s)
+             jnp.where(iota == idx + 1, frac, 0.0))         # (bp, n_s)
         iq_re = iq_ref[:, c, :, 0]                       # (n_s, n_f)
         iq_im = iq_ref[:, c, :, 1]
         v_re = jnp.dot(w, iq_re, preferred_element_type=jnp.float32)
         v_im = jnp.dot(w, iq_im, preferred_element_type=jnp.float32)
         rot_re = rot_ref[:, c, 0][:, None]               # (bp, 1)
         rot_im = rot_ref[:, c, 1][:, None]
-        acc_re = acc_re + v_re * rot_re - v_im * rot_im
-        acc_im = acc_im + v_re * rot_im + v_im * rot_re
-        return acc_re, acc_im
+        per_re = lax.dynamic_update_index_in_dim(
+            per_re, (v_re * rot_re - v_im * rot_im) * apod, c, 0)
+        per_im = lax.dynamic_update_index_in_dim(
+            per_im, (v_re * rot_im + v_im * rot_re) * apod, c, 0)
+        return per_re, per_im
 
-    zero = jnp.zeros((bp, n_f), dtype=jnp.float32)
-    acc_re, acc_im = lax.fori_loop(0, n_c, channel_body, (zero, zero))
-    out_ref[:, :, 0] = acc_re
-    out_ref[:, :, 1] = acc_im
+    # Channel values are materialized (n_c, bp, n_f) and reduced with ONE
+    # sum — the same reduce the XLA gather path runs over its per-channel
+    # axis — instead of a sequential loop-carried accumulator, so the
+    # channel-sum rounding order matches the reference bit for bit (the
+    # determinism contract extends across lowerings). VMEM cost:
+    # n_c * bp * n_f f32 x2, ~2 MB at paper geometry with bp=128.
+    zero = jnp.zeros((n_c, bp, n_f), dtype=jnp.float32)
+    per_re, per_im = lax.fori_loop(0, n_c, channel_body, (zero, zero))
+    out_ref[:, :, 0] = per_re.sum(axis=0)
+    out_ref[:, :, 1] = per_im.sum(axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("bp", "interpret"))

@@ -2,16 +2,10 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.das_beamform import kernel as _k
-
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.pallas_compat import auto_interpret, next_multiple
 
 
 def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
@@ -27,10 +21,10 @@ def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
     Returns:
       (n_pix, n_f, 2) f32 beamformed IQ.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = auto_interpret(interpret)
     n_pix = idx.shape[0]
-    bp = min(bp, _next_multiple(n_pix, 8))
-    pad = _next_multiple(n_pix, bp) - n_pix
+    bp = min(bp, next_multiple(n_pix, 8))
+    pad = next_multiple(n_pix, bp) - n_pix
     if pad:
         idx = jnp.pad(idx, ((0, pad), (0, 0)))
         frac = jnp.pad(frac, ((0, pad), (0, 0)))
@@ -40,7 +34,3 @@ def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
         idx, frac, apod, rot, iq.astype(jnp.float32),
         bp=bp, interpret=interpret)
     return out[:n_pix]
-
-
-def _next_multiple(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m

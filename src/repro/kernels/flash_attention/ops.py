@@ -6,12 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import kernel as _k
-
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.pallas_compat import auto_interpret, next_multiple
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,
@@ -26,7 +21,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
     Returns:
       (batch, Lq, n_q_heads, d), dtype of q.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = auto_interpret(interpret)
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
@@ -35,10 +30,10 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
 
-    bq_eff = min(bq, _ceil_to(lq, 8))
-    bk_eff = min(bk, _ceil_to(lk, 8))
-    pq = _ceil_to(lq, bq_eff) - lq
-    pk = _ceil_to(lk, bk_eff) - lk
+    bq_eff = min(bq, next_multiple(lq, 8))
+    bk_eff = min(bk, next_multiple(lk, 8))
+    pq = next_multiple(lq, bq_eff) - lq
+    pk = next_multiple(lk, bk_eff) - lk
     qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).astype(jnp.float32)
     kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).astype(jnp.float32)
     vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).astype(jnp.float32)
@@ -62,7 +57,3 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
 
     out = jax.vmap(per_batch)(qf, kf, vf)
     return out[:, :lq].astype(q.dtype)
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m

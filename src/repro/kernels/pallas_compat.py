@@ -1,13 +1,37 @@
-"""Version-compat shims shared by the Pallas kernels.
+"""Compat + convenience shims shared by every Pallas kernel wrapper.
 
 jax<0.5 exposes TPU compiler params as ``pltpu.TPUCompilerParams``; 0.5+
 renamed it ``CompilerParams``. Resolve once here so the next rename is a
-one-line fix.
+one-line fix. `auto_interpret` is the shared interpret-mode fallback
+policy (compiled only where Mosaic runs, interpret everywhere else) and
+`next_multiple` the shared tile-padding helper — one definition each,
+so the kernels' portability contract cannot fork per package.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.experimental.pallas.tpu as pltpu
+
+
+def auto_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve the ``interpret=None`` default of every kernel wrapper.
+
+    None means "compiled where the Mosaic TPU backend exists, interpret
+    mode everywhere else" — the fallback that keeps one source tree
+    runnable on every backend (the repo's portability contract; the
+    registry's capability predicates assume it).
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def next_multiple(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``x`` (tile-padding contract)."""
+    return ((x + m - 1) // m) * m
 
 
 def _resolve_compiler_params():

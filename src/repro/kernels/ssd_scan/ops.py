@@ -6,12 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan import kernel as _k
-
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.pallas_compat import auto_interpret
 
 
 def ssd_scan(log_a, x, b, c, *, chunk: int = _k.DEFAULT_CHUNK,
@@ -25,7 +20,7 @@ def ssd_scan(log_a, x, b, c, *, chunk: int = _k.DEFAULT_CHUNK,
     Returns:
       y (batch, L, H, P), dtype of x.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = auto_interpret(interpret)
     bsz, l, h, p = x.shape
     chunk_eff = min(chunk, l)
     pad = (-l) % chunk_eff

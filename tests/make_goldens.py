@@ -1,9 +1,9 @@
 """Regenerate the golden regression fixtures in tests/goldens/.
 
-One small ``.npz`` per (modality, variant) cell — tiny B-mode and
-Color-Doppler geometry, all three implementation variants — each
-holding the served image plus enough metadata to detect *why* a future
-mismatch happened (geometry change vs numeric drift).
+One small ``.npz`` per (modality, variant) cell — tiny B-mode,
+Color-Doppler, and Power-Doppler geometry, all three implementation
+variants — each holding the served image plus enough metadata to detect
+*why* a future mismatch happened (geometry change vs numeric drift).
 
 Run ONLY when an intentional numerics change is being made, and say so
 in the commit that updates the files:
@@ -34,7 +34,7 @@ from repro.data import synth_rf                                 # noqa: E402
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
 RF_SEED = 123
-MODALITIES = (Modality.BMODE, Modality.DOPPLER)
+MODALITIES = (Modality.BMODE, Modality.DOPPLER, Modality.POWER_DOPPLER)
 VARIANTS = (Variant.DYNAMIC, Variant.CNN, Variant.SPARSE)
 
 

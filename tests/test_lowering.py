@@ -1,0 +1,359 @@
+"""Per-stage operator-lowering registry (repro.core.lowering + plan).
+
+Contracts under test:
+  * the registry exposes the variant x lowering matrix the kernels tree
+    implements (pallas beamform for dynamic/sparse, xla everywhere);
+  * every registered lowering of every stage matches the pure-XLA
+    monolithic oracle allclose (<= 1e-5) on CPU interpret mode — in
+    particular `beamform_sparse` via the `bsr_spmm` Pallas kernel;
+  * explicit ``stage_lowerings`` entries are honored under every policy
+    and refused loudly when unregistered for the resolved variant;
+  * autotune measures per-stage candidates through the bench breakdown,
+    picks the argmin, memoizes, and stamps `lowering_t_s`;
+  * `use_das_kernel` is a warning-emitting alias producing an
+    equivalent config hash and plan;
+  * resolved lowerings flow through the canonical config hash, so the
+    multi-tenant scheduler never groups different lowerings together.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Modality, UltrasoundPipeline, Variant, config_hash,
+                        monolithic_pipeline_fn, plan_pipeline,
+                        registered_lowerings, tiny_config)
+from repro.core import lowering as lowering_lib
+from repro.core import plan as plan_lib
+from repro.core.stages import build_graph
+from repro.data import synth_rf
+
+
+@pytest.fixture(autouse=True)
+def _fresh_planner_state():
+    plan_lib.clear_autotune_memo()
+    yield
+    plan_lib.clear_autotune_memo()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposes_the_variant_x_lowering_matrix():
+    cfg = tiny_config()
+    assert set(registered_lowerings(
+        cfg.with_(variant=Variant.DYNAMIC), "beamform")) == {"xla",
+                                                             "pallas"}
+    assert set(registered_lowerings(
+        cfg.with_(variant=Variant.SPARSE), "beamform")) == {"xla",
+                                                            "pallas"}
+    # the dense matmul IS the MXU formulation — no kernel to prefer
+    assert set(registered_lowerings(
+        cfg.with_(variant=Variant.CNN), "beamform")) == {"xla"}
+    for stage in ("demod", "bmode"):
+        assert set(registered_lowerings(cfg, stage)) == {"xla"}
+
+
+def test_every_stage_op_registers_an_xla_reference():
+    for variant in (Variant.DYNAMIC, Variant.CNN, Variant.SPARSE):
+        for modality in Modality:
+            cfg = tiny_config(variant=variant, modality=modality)
+            for stage in build_graph(cfg):
+                lows = registered_lowerings(cfg, stage.name)
+                assert "xla" in lows, (variant, stage.name)
+
+
+def test_unregistered_explicit_lowering_is_refused():
+    cfg = tiny_config(variant=Variant.CNN,
+                      stage_lowerings={"beamform": "pallas"})
+    with pytest.raises(ValueError, match="no such"):
+        plan_pipeline(cfg, policy="fixed")
+    with pytest.raises(ValueError, match="unknown stage"):
+        tiny_config(stage_lowerings={"warp": "xla"})
+    with pytest.raises(ValueError, match="unknown lowering"):
+        tiny_config(stage_lowerings={"beamform": "mosaic"})
+    # a known stage the modality's graph never runs is a refused typo,
+    # not a silently dropped pin
+    with pytest.raises(ValueError, match="not in\\s+this pipeline's graph"):
+        plan_pipeline(tiny_config(modality=Modality.BMODE,
+                                  stage_lowerings={"doppler": "xla"}),
+                      policy="fixed")
+
+
+# ---------------------------------------------------------------------------
+# plan resolution
+# ---------------------------------------------------------------------------
+
+
+def test_plan_resolves_a_lowering_for_every_stage():
+    for policy in ("fixed", "heuristic"):
+        cfg = tiny_config(variant=Variant.DYNAMIC if policy == "fixed"
+                          else Variant.AUTO)
+        plan = plan_pipeline(cfg, policy=policy)
+        stages = [s.name for s in build_graph(plan.concretize(cfg))]
+        assert [s for s, _ in plan.stage_lowerings] == stages
+        # CPU preference table: xla everywhere (interpret pallas is slow)
+        assert all(n == "xla" for _, n in plan.stage_lowerings)
+        assert plan.json_dict()["stage_lowerings"] == {
+            s: "xla" for s in stages}
+
+
+def test_explicit_lowering_is_honored_and_stamped():
+    cfg = tiny_config(variant=Variant.DYNAMIC,
+                      stage_lowerings={"beamform": "pallas"})
+    plan = plan_pipeline(cfg, policy="fixed")
+    assert dict(plan.stage_lowerings)["beamform"] == "pallas"
+    pipe = UltrasoundPipeline(cfg, plan=plan)
+    assert pipe.cfg.stage_lowering("beamform") == "pallas"
+    # the concretized config matches the plan's geometry (round trip)
+    assert plan.matches(pipe.cfg)
+
+
+def test_pipeline_rejects_plan_conflicting_with_explicit_lowering():
+    base = tiny_config(variant=Variant.DYNAMIC)
+    plan = plan_pipeline(base, policy="fixed")      # resolves beamform=xla
+    with pytest.raises(ValueError, match="explicit lowering"):
+        UltrasoundPipeline(
+            base.with_(stage_lowerings={"beamform": "pallas"}), plan=plan)
+
+
+def test_lowering_preference_table_is_extensible():
+    backend = jax.default_backend()
+    prev = plan_lib.BACKEND_LOWERING_PREFERENCE.get(backend)
+    try:
+        plan_lib.register_lowering_preference(
+            backend, "beamform", Variant.DYNAMIC, "pallas")
+        plan = plan_pipeline(tiny_config(variant=Variant.DYNAMIC),
+                             policy="fixed")
+        assert dict(plan.stage_lowerings)["beamform"] == "pallas"
+    finally:
+        if prev is None:
+            plan_lib.BACKEND_LOWERING_PREFERENCE.pop(backend, None)
+        else:
+            plan_lib.BACKEND_LOWERING_PREFERENCE[backend] = prev
+
+
+def test_autotune_picks_argmin_lowering_and_memoizes():
+    calls = []
+
+    def fake_stage_measure(cfg, stage, *, runs, warmup):
+        name = cfg.stage_lowering(stage)
+        calls.append((stage, name))
+        return {"xla": 2.0, "pallas": 1.0}[name]
+
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    plan = plan_pipeline(cfg, policy="autotune",
+                         measure_stage=fake_stage_measure)
+    assert dict(plan.stage_lowerings)["beamform"] == "pallas"
+    # only the contested stage is measured, once per candidate
+    assert sorted(calls) == [("beamform", "pallas"), ("beamform", "xla")]
+    assert dict(plan.lowering_t_s) == {"beamform:pallas": 1.0,
+                                       "beamform:xla": 2.0}
+    assert plan.json_dict()["lowering_t_s"] == dict(plan.lowering_t_s)
+
+    # memoized: same resolved config, same backend -> no re-timing
+    plan2 = plan_pipeline(cfg, policy="autotune",
+                          measure_stage=fake_stage_measure)
+    assert plan2.stage_lowerings == plan.stage_lowerings
+    assert len(calls) == 2
+    # a geometry change invalidates the memo
+    plan_pipeline(cfg.with_(nx=8), policy="autotune",
+                  measure_stage=fake_stage_measure)
+    assert len(calls) == 4
+
+
+def test_auto_variant_search_is_restricted_to_pin_honoring_candidates():
+    """An AUTO config pinned to a pallas beamform must never resolve to
+    CNN (which registers none) — even when CNN would measure fastest."""
+    cfg = tiny_config(variant=Variant.AUTO,
+                      stage_lowerings={"beamform": "pallas"})
+    measure = (lambda c, v, *, runs, warmup:
+               {Variant.DYNAMIC: 3.0, Variant.CNN: 0.1,
+                Variant.SPARSE: 2.0}[v])
+    plan = plan_pipeline(cfg, policy="autotune", measure=measure,
+                         measure_stage=lambda c, s, **kw: 1.0)
+    assert set(dict(plan.autotune_t_s)) == {"dynamic", "sparse"}  # no cnn
+    assert plan.variant == Variant.SPARSE
+    assert dict(plan.stage_lowerings)["beamform"] == "pallas"
+
+    # heuristic: cpu prefers dynamic, which honors the pin
+    p2 = plan_pipeline(cfg, policy="heuristic")
+    assert p2.variant.concrete
+    assert dict(p2.stage_lowerings)["beamform"] == "pallas"
+
+    # over-constrained: no variant can honor an impossible pin set
+    plan_lib.clear_autotune_memo()
+    only_cnn = lowering_lib._REGISTRY.pop(("beamform", "sparse"))
+    only_dyn = lowering_lib._REGISTRY.pop(("beamform", "dynamic"))
+    try:
+        with pytest.raises(ValueError, match="no concrete variant"):
+            plan_pipeline(cfg, policy="heuristic")
+    finally:
+        lowering_lib._REGISTRY[("beamform", "sparse")] = only_cnn
+        lowering_lib._REGISTRY[("beamform", "dynamic")] = only_dyn
+
+
+def test_lowering_memo_misses_after_registry_extension():
+    """register_lowering can grow the contested-stage set at any time;
+    a memo entry from before the extension must miss, not crash."""
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    stage_measure = lambda c, s, **kw: {"xla": 1.0, "pallas": 2.0}[
+        c.stage_lowering(s)]
+    plan = plan_pipeline(cfg, policy="autotune",
+                         measure_stage=stage_measure)
+    assert set(dict(plan.lowering_t_s)) == {"beamform:xla",
+                                            "beamform:pallas"}
+    added = lowering_lib.register_lowering(
+        "demod", "pallas",
+        lowering_lib.registered_lowerings(cfg, "demod")["xla"].apply)
+    try:
+        plan2 = plan_pipeline(cfg, policy="autotune",
+                              measure_stage=stage_measure)
+        assert set(dict(plan2.lowering_t_s)) == {
+            "beamform:xla", "beamform:pallas",
+            "demod:xla", "demod:pallas"}
+    finally:
+        del lowering_lib._REGISTRY[("demod", None)]["pallas"]
+
+
+def test_autotune_real_lowering_timings_pick_the_measured_winner():
+    """Acceptance: real per-stage probes resolve, memoize, and the pick
+    is the argmin of the stamped timings."""
+    cfg = tiny_config(variant=Variant.SPARSE)
+    plan = plan_pipeline(cfg, policy="autotune",
+                         autotune_runs=2, autotune_warmup=1)
+    timings = dict(plan.lowering_t_s)
+    assert set(timings) == {"beamform:xla", "beamform:pallas"}
+    assert all(t > 0 for t in timings.values())
+    want = min(timings, key=timings.get).split(":", 1)[1]
+    assert dict(plan.stage_lowerings)["beamform"] == want
+
+
+# ---------------------------------------------------------------------------
+# numerics: every lowering against the monolithic XLA oracle
+# ---------------------------------------------------------------------------
+
+
+LOWERING_CELLS = [
+    (variant, modality, stage.name, name)
+    for variant in (Variant.DYNAMIC, Variant.CNN, Variant.SPARSE)
+    for modality in (Modality.BMODE, Modality.DOPPLER)
+    for stage in build_graph(tiny_config(variant=variant,
+                                         modality=modality))
+    for name in registered_lowerings(
+        tiny_config(variant=variant, modality=modality), stage.name)
+]
+
+
+@pytest.mark.parametrize(
+    "variant,modality,stage,name", LOWERING_CELLS,
+    ids=[f"{v.value}-{m.value}-{s}-{n}" for v, m, s, n in LOWERING_CELLS])
+def test_every_lowering_matches_monolithic_oracle(variant, modality,
+                                                  stage, name):
+    """Acceptance: for every (variant, lowering) registered on
+    CPU-interpret, the pipeline output is allclose (<= 1e-5) to
+    `monolithic_pipeline_fn` — the sparse/pallas cell exercises the
+    bsr_spmm kernel as the hot path, not dead code."""
+    cfg = tiny_config(n_f=8, variant=variant, modality=modality,
+                      stage_lowerings={stage: name})
+    pipe = UltrasoundPipeline(cfg)
+    rf = jnp.asarray(synth_rf(cfg, seed=5))
+    got = np.asarray(pipe(rf))
+    mono = jax.jit(monolithic_pipeline_fn(pipe.cfg))
+    want = np.asarray(mono(pipe.consts, rf))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_pallas_lowering_runs_the_bsr_kernel(monkeypatch):
+    """The wiring claim itself: the sparse pipeline's pallas lowering
+    calls into repro.kernels.bsr_spmm (not a re-implementation)."""
+    from repro.kernels import bsr_spmm as bsr_pkg
+    calls = []
+    real = bsr_pkg.bsr_beamform
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(bsr_pkg, "bsr_beamform", spy)
+    cfg = tiny_config(variant=Variant.SPARSE,
+                      stage_lowerings={"beamform": "pallas"})
+    UltrasoundPipeline(cfg)(jnp.asarray(synth_rf(cfg, seed=0)))
+    assert calls, "pallas lowering did not reach kernels/bsr_spmm"
+
+
+# ---------------------------------------------------------------------------
+# use_das_kernel deprecation alias
+# ---------------------------------------------------------------------------
+
+
+def test_use_das_kernel_warns_and_maps_to_pallas_lowering():
+    with pytest.warns(DeprecationWarning, match="use_das_kernel"):
+        cfg = tiny_config(variant=Variant.DYNAMIC, use_das_kernel=True)
+    assert cfg.use_das_kernel is False          # normalized away
+    assert cfg.stage_lowerings == (("beamform", "pallas"),)
+
+    explicit = tiny_config(variant=Variant.DYNAMIC,
+                           stage_lowerings={"beamform": "pallas"})
+    assert config_hash(cfg) == config_hash(explicit)
+    assert (plan_pipeline(cfg, policy="fixed")
+            == plan_pipeline(explicit, policy="fixed"))
+
+
+def test_use_das_kernel_stays_a_noop_off_the_dynamic_variant():
+    """The legacy flag was read only by the dynamic beamformer —
+    CNN/SPARSE configs carrying it must keep planning (and hashing)
+    exactly as without it, just loudly now."""
+    for variant in (Variant.CNN, Variant.SPARSE):
+        with pytest.warns(DeprecationWarning, match="ignored"):
+            cfg = tiny_config(variant=variant, use_das_kernel=True)
+        assert cfg.stage_lowerings == ()
+        assert config_hash(cfg) == config_hash(tiny_config(variant=variant))
+        plan = plan_pipeline(cfg, policy="fixed")    # must not raise
+        assert dict(plan.stage_lowerings)["beamform"] == "xla"
+
+
+def test_explicit_lowering_failing_capability_predicate_is_refused():
+    """An explicit ask whose predicate rejects this backend/geometry
+    fails at plan time, not deep inside kernel compilation."""
+    never = lowering_lib.register_lowering(
+        "beamform", "pallas",
+        lowering_lib._beamform_dynamic_pallas, variant=Variant.DYNAMIC,
+        available=lambda cfg, backend: False)
+    try:
+        cfg = tiny_config(variant=Variant.DYNAMIC,
+                          stage_lowerings={"beamform": "pallas"})
+        with pytest.raises(ValueError, match="capability predicate"):
+            plan_pipeline(cfg, policy="fixed")
+    finally:
+        lowering_lib.register_lowering(      # restore the real lowering
+            "beamform", "pallas", never.apply, variant=Variant.DYNAMIC,
+            available=lowering_lib._das_pallas_available)
+
+
+# ---------------------------------------------------------------------------
+# scheduler grouping: lowerings are part of the compiled-program identity
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_groups_split_on_lowering():
+    from repro.launch.scheduler import (BatchPolicy, StreamSpec,
+                                        serve_multitenant)
+    base = tiny_config(variant=Variant.DYNAMIC, n_f=2)
+    stats = serve_multitenant(
+        [StreamSpec("xla0", base, fps=1e9, n_frames=2),
+         StreamSpec("pal0", base.with_(
+             stage_lowerings={"beamform": "pallas"}), fps=1e9, n_frames=2),
+         StreamSpec("xla1", base, fps=1e9, n_frames=2)],
+        policy=BatchPolicy(max_batch=2, max_queue_delay_ms=1.0))
+    groups = stats["groups"]
+    assert len(groups) == 2          # one compiled program per lowering
+    members = {frozenset(g["streams"]) for g in groups.values()}
+    assert members == {frozenset({"xla0", "xla1"}), frozenset({"pal0"})}
+    lowerings = {g["plan"]["stage_lowerings"]["beamform"]
+                 for g in groups.values()}
+    assert lowerings == {"xla", "pallas"}

@@ -132,6 +132,28 @@ def test_validator_rejects_bad_plan_stamp():
         validate_record(rec)
 
 
+def test_validator_rejects_bad_stage_lowerings_stamp():
+    """repro-bench-v1 stays valid (the stamp is additive), but a plan
+    stamp without — or with a malformed — stage_lowerings field fails."""
+    plan = UltrasoundPipeline(_tiny_cfg()).plan.json_dict()
+    rec = {"kind": "sample", "name": "x", "run": 0, "t_s": 0.1,
+           "plan": plan}
+    validate_record(rec)                         # the real stamp passes
+    assert plan["stage_lowerings"] == {"demod": "xla", "beamform": "xla",
+                                       "bmode": "xla"}
+    truncated = {**plan}
+    del truncated["stage_lowerings"]
+    with pytest.raises(SchemaError,
+                       match=r"missing required key 'stage_lowerings'"):
+        validate_record({**rec, "plan": truncated})
+    with pytest.raises(SchemaError, match=r"stage_lowerings: expected dict"):
+        validate_record({**rec, "plan": {**plan,
+                                         "stage_lowerings": "pallas"}})
+    with pytest.raises(SchemaError, match=r"expected a\s+lowering name"):
+        validate_record({**rec, "plan": {**plan,
+                                         "stage_lowerings": {"demod": 3}}})
+
+
 def test_validate_lines_counts_and_empty():
     lines = [json.dumps({"kind": "sample", "name": "x", "run": i,
                          "t_s": 0.1}) for i in range(3)]
