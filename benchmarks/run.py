@@ -20,9 +20,16 @@ record. ``--lowering {xla,pallas}`` pins the beamform stage's operator
 lowering (repro.core.lowering) for the table1/stream sections — pallas
 sweeps only the variants that register a Pallas kernel, so the
 variant x lowering matrix is benchmarkable end to end (interpret mode
-off-TPU). ``--only`` restricts the run to one section (the CI autotune
-smoke uses ``--only table1 --variant auto --plan autotune``; the CI
-lowering smoke uses ``--only table1 --lowering pallas``).
+off-TPU). ``--fusion {none,fused,both}`` routes the demod+beamform+head
+span through the fused Pallas megakernel and ``--precision
+{f32,bf16,f16}`` selects the mixed-precision contract tier; cells a
+requested sweep cannot run (no fused registration, f32-only xla under
+reduced precision, missing lowering) emit explicit
+``<cell>,skipped,reason=...`` lines so coverage is auditable. ``--only``
+restricts the run to one section (the CI autotune smoke uses
+``--only table1 --variant auto --plan autotune``; the CI lowering smoke
+uses ``--only table1 --lowering pallas``; the CI fused smoke uses
+``--only table1 --fusion both --precision bf16``).
 
 ``python -m benchmarks.run [--paper] [--fast] [--json PATH] [--ndjson PATH]``
 """
@@ -93,6 +100,19 @@ def main() -> None:
                          "the table1/stream sections (pallas: only the "
                          "variants registering a kernel run; interpret "
                          "mode off-TPU); default: planner-resolved")
+    ap.add_argument("--fusion", default="none",
+                    choices=["none", "fused", "both"],
+                    help="route the demod+beamform+head span through the "
+                         "fused Pallas megakernel for the table1/stream "
+                         "sections ('both' sweeps unfused and fused per "
+                         "cell; cells with no fused registration emit "
+                         "explicit skipped lines)")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "f16"],
+                    help="kernel compute-precision tier (matmul operands; "
+                         "accumulation stays f32). Reduced precision "
+                         "needs --fusion fused/both — the xla references "
+                         "are f32-only and their cells are skipped")
     ap.add_argument("--only", default="all",
                     choices=["all", "table1", "table2", "table3",
                              "stream", "lm"],
@@ -108,6 +128,15 @@ def main() -> None:
     if args.lowering == "pallas" and args.variant == "cnn":
         ap.error("no pallas lowering is registered for the cnn beamform "
                  "(the dense matmul IS the MXU formulation)")
+    if args.lowering == "xla" and args.fusion in ("fused", "both"):
+        ap.error("--lowering xla contradicts --fusion fused: the fused "
+                 "span claims the beamform stage with its pallas "
+                 "megakernel")
+    if args.fusion in ("fused", "both") and args.variant in ("cnn",
+                                                             "sparse"):
+        ap.error("fused lowerings are registered for the dynamic variant "
+                 "only (the megakernel's DAS gather IS the dynamic "
+                 "formulation)")
 
     def on(section):
         return args.only in ("all", section)
@@ -123,13 +152,20 @@ def main() -> None:
     print("name,us_per_call,derived")
     t1 = []
     if on("table1") or on("table3"):   # table3 derives from table1 rows
-        t1 = table1_variants.run(paper_scale=args.paper, runs=runs,
-                                 deadline_s=deadline_s, stage_breakdown=True,
-                                 policy=args.plan, variant=variant,
-                                 lowering=args.lowering)
+        t1, t1_skipped = table1_variants.run(
+            paper_scale=args.paper, runs=runs,
+            deadline_s=deadline_s, stage_breakdown=True,
+            policy=args.plan, variant=variant,
+            lowering=args.lowering, fusion=args.fusion,
+            precision=args.precision)
         if on("table1"):
             for r in t1:
                 print(r.csv())
+                sys.stdout.flush()
+            # Sweep coverage is auditable from the output alone: every
+            # requested cell that did not run says so, with the reason.
+            for cell, reason in t1_skipped:
+                print(f"{cell},skipped,reason={reason}")
                 sys.stdout.flush()
     if on("table2"):
         for line in table2_portability.run(paper_scale=args.paper,
@@ -145,7 +181,11 @@ def main() -> None:
             paper_scale=args.paper, fast=args.fast,
             deadline_ms=args.deadline_ms,
             policy=args.plan, variant=variant,
-            lowering=args.lowering)
+            lowering=args.lowering,
+            # "both" streams the fused program — the new cell; the
+            # unfused stream is the long-standing default row.
+            fusion="fused" if args.fusion != "none" else "none",
+            precision=args.precision)
         for line in stream_lines:
             print(line)
             sys.stdout.flush()

@@ -24,12 +24,17 @@ BATCH_SIZES = [1, 4]
 def run(paper_scale: bool = False, fast: bool = False,
         deadline_ms: float = 100.0, policy: Optional[str] = None,
         variant: Optional[Variant] = None, cfg=None,
-        lowering: Optional[str] = None
+        lowering: Optional[str] = None,
+        fusion: str = "none", precision: str = "f32"
         ) -> Tuple[List[str], List[dict]]:
     """Returns (csv lines, json-ready records), one per batch size.
 
     ``cfg`` overrides the streaming geometry (tests pass tiny configs
     to exercise the emitter cheaply); default is `stream_config`.
+    ``fusion``/``precision`` ride the config straight into the planner
+    — a fused or reduced-precision stream that cannot plan fails
+    loudly here (the scheduler must never silently fall back to a
+    different program than the one requested).
     """
     # Default: DYNAMIC, the fast variant on the gather-friendly CPU
     # stand-in (paper GPU rows) — stream the heaviest realistic path,
@@ -39,6 +44,7 @@ def run(paper_scale: bool = False, fast: bool = False,
         cfg = stream_config(paper_scale).with_(variant=Variant.DYNAMIC)
     if variant is not None:
         cfg = cfg.with_(variant=variant)   # explicit ask beats cfg's own
+    cfg = cfg.with_(fusion=fusion, precision=precision)
     if lowering is not None:
         # Concrete variants without the lowering (registered AND
         # available on this backend) stream the xla reference instead of

@@ -8,16 +8,23 @@ sparse in between with higher memory) is the validated claim.
 
 Every row is measured through an explicit `PipelinePlan` and the resolved
 plan is stamped into the BenchResult, so each number is attributable to an
-exact (backend, variant, exec_map, policy, stage_lowerings) decision.
-`variant="auto"` + a policy runs a single planner-resolved row instead of
-the full sweep; ``lowering="pallas"`` pins the beamform stage to its
-Pallas kernel, sweeping only the variants that register one (the
-variant x lowering matrix, end to end).
+exact (backend, variant, exec_map, policy, stage_lowerings, fusion,
+precision) decision. `variant="auto"` + a policy runs a single
+planner-resolved row instead of the full sweep; ``lowering="pallas"``
+pins the beamform stage to its Pallas kernel; ``fusion="fused"`` routes
+the demod+beamform+head span through the fused megakernel (``"both"``
+sweeps unfused and fused per cell); ``precision`` selects the
+mixed-precision contract tier.
+
+``run`` returns ``(results, skipped)``: every requested
+(variant, modality, lowering, fusion) cell is either measured or
+accounted for as a ``(cell_name, reason)`` pair — a sweep's coverage is
+auditable from its output alone, never silently narrowed.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -26,6 +33,7 @@ import jax
 from repro.bench import BenchResult, bench_callable, bench_stages
 from repro.core import (Modality, UltrasoundPipeline, Variant,
                         available_lowerings, plan_pipeline)
+from repro.core import lowering as lowering_lib
 from repro.data import synth_rf
 
 from benchmarks.common import bench_config
@@ -40,40 +48,78 @@ def run(paper_scale: bool = False, runs: int = 5,
         stage_breakdown: bool = False,
         policy: str = "fixed",
         variant: Optional[Variant] = None,
-        lowering: Optional[str] = None) -> List[BenchResult]:
+        lowering: Optional[str] = None,
+        fusion: str = "none",
+        precision: str = "f32") -> Tuple[List[BenchResult],
+                                         List[Tuple[str, str]]]:
     base = bench_config(paper_scale)
     rf = jnp.asarray(synth_rf(base, seed=0))
+    backend = jax.default_backend()
     variants = VARIANTS if variant is None else [variant]
-    results = []
+    fusions = ["none", "fused"] if fusion == "both" else [fusion]
+    results: List[BenchResult] = []
+    skipped: List[Tuple[str, str]] = []
     for v in variants:
         for modality in MODALITIES:
-            cfg = base.with_(variant=v, modality=modality)
-            if lowering is not None:
-                # Registered AND available (capability predicates can
-                # reject a backend/geometry): absent cells are skipped,
-                # never crashed into. AUTO pins directly — the planner
-                # restricts its variant search to pin-honoring candidates.
-                if (v.concrete and lowering not in available_lowerings(
-                        cfg, "beamform", jax.default_backend())):
-                    continue     # no such cell in the variant x lowering grid
-                cfg = cfg.with_(stage_lowerings={"beamform": lowering})
-            plan = plan_pipeline(cfg, policy=policy)
-            pipe = UltrasoundPipeline(cfg, plan=plan)
-            cfg = pipe.cfg                 # plan-resolved (AUTO -> concrete)
-            low = dict(plan.stage_lowerings)["beamform"]
-            res = bench_callable(
-                f"table1/{cfg.name}/{cfg.variant.value}/{low}",
-                None, (pipe.consts, rf),
-                input_bytes=cfg.input_bytes, runs=runs,
-                deadline_s=deadline_s,
-                jitted=pipe.jitted, plan=plan)
-            if stage_breakdown:
-                res.stage_breakdown = bench_stages(
-                    cfg, rf, runs=min(runs, 3))
-            results.append(res)
-    return results
+            for fus in fusions:
+                cfg = base.with_(variant=v, modality=modality,
+                                 fusion=fus, precision=precision)
+                cell = (f"table1/{cfg.name}/{v.value}/"
+                        f"{lowering or 'auto'}/{fus}@{precision}")
+                if lowering is not None and v.concrete and \
+                        lowering not in available_lowerings(
+                            cfg.with_(fusion="none", precision="f32"),
+                            "beamform", backend):
+                    # Registered AND available (capability predicates can
+                    # reject a backend/geometry): absent cells are
+                    # accounted for, never crashed into. AUTO pins
+                    # directly — the planner restricts its variant search
+                    # to pin-honoring candidates.
+                    skipped.append((cell, (
+                        f"no {lowering!r} beamform lowering for variant "
+                        f"{v.value!r} on backend {backend!r}")))
+                    continue
+                if fus == "fused":
+                    try:
+                        lowering_lib.resolve_fused(
+                            cfg if v.concrete
+                            else cfg.with_(variant=Variant.DYNAMIC),
+                            backend)
+                    except ValueError as e:
+                        skipped.append((cell, str(e)))
+                        continue
+                elif precision != "f32":
+                    # The xla references are f32-only, so an unfused
+                    # reduced-precision plan cannot cover every stage.
+                    skipped.append((cell, (
+                        f"unfused precision={precision!r} has no lowering "
+                        "for every stage (the xla references compute in "
+                        "f32 only; use fusion='fused')")))
+                    continue
+                if lowering is not None:
+                    cfg = cfg.with_(stage_lowerings={"beamform": lowering})
+                plan = plan_pipeline(cfg, policy=policy)
+                pipe = UltrasoundPipeline(cfg, plan=plan)
+                cfg = pipe.cfg             # plan-resolved (AUTO -> concrete)
+                low = dict(plan.stage_lowerings)["beamform"]
+                name = f"table1/{cfg.name}/{cfg.variant.value}/{low}"
+                if fus != "none" or precision != "f32":
+                    name += f"/{fus}@{precision}"
+                res = bench_callable(
+                    name, None, (pipe.consts, rf),
+                    input_bytes=cfg.input_bytes, runs=runs,
+                    deadline_s=deadline_s,
+                    jitted=pipe.jitted, plan=plan)
+                if stage_breakdown:
+                    res.stage_breakdown = bench_stages(
+                        cfg, rf, runs=min(runs, 3))
+                results.append(res)
+    return results, skipped
 
 
 if __name__ == "__main__":
-    for r in run():
+    rows, skipped_cells = run()
+    for r in rows:
         print(r.csv())
+    for cell, reason in skipped_cells:
+        print(f"{cell},skipped,reason={reason}")

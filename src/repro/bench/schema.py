@@ -56,6 +56,11 @@ PLAN_KEYS: Dict[str, str] = {
     "policy": "str", "backend": "str", "variant": "str",
     "exec_map": "str", "donate": "bool?", "jit_stages": "dict",
     "stage_lowerings": "dict",
+    # Fusion/precision contract stamp: both are required (never absent)
+    # so a fused/bf16 row can never masquerade as an unfused/f32 one;
+    # group/block are null exactly when fusion == "none".
+    "fusion": "str", "precision": "str",
+    "fusion_group": "str?", "fusion_block": "int?",
     "config_key": "str", "geometry_key": "str", "provenance": "str",
     "devices": "int", "mesh_shape": "list?",
 }

@@ -14,9 +14,25 @@ from repro.core import cnn_ops
 from repro.core.config import UltrasoundConfig
 
 
-def bmode_image(cfg: UltrasoundConfig, bf: jnp.ndarray) -> jnp.ndarray:
-    """(n_pix, n_f, 2) beamformed IQ -> (nz, nx, n_f) image in [0, 1]."""
-    env = cnn_ops.magnitude(bf[..., 0], bf[..., 1])      # (n_pix, n_f)
+def envelope(bf: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix, n_f, 2) beamformed IQ -> (n_pix, n_f) envelope.
+
+    The tile-local half of the head: pure pointwise magnitude, so the
+    fused megakernel (repro.kernels.fused_pipeline) computes it per
+    pixel tile without leaving VMEM.
+    """
+    return cnn_ops.magnitude(bf[..., 0], bf[..., 1])
+
+
+def compress_envelope(cfg: UltrasoundConfig, env: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix, n_f) envelope -> (nz, nx, n_f) image in [0, 1].
+
+    The global half of the head: normalize_by_max reduces over ALL
+    pixels, so it cannot be tile-local — this is the fused lowering's
+    documented fusion boundary (docs/kernels.md). Shared verbatim by the
+    monolithic reference and the fused epilogue so the two paths cannot
+    drift numerically.
+    """
     env = cnn_ops.normalize_by_max(env, axis=0)
     if cfg.cnn_transcendentals:
         db = cnn_ops.db20_approx(env)
@@ -25,3 +41,8 @@ def bmode_image(cfg: UltrasoundConfig, bf: jnp.ndarray) -> jnp.ndarray:
     dr = cfg.dynamic_range_db
     img = (cnn_ops.clip(db, -dr, 0.0) + dr) / dr
     return img.reshape(cfg.nz, cfg.nx, -1)
+
+
+def bmode_image(cfg: UltrasoundConfig, bf: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix, n_f, 2) beamformed IQ -> (nz, nx, n_f) image in [0, 1]."""
+    return compress_envelope(cfg, envelope(bf))

@@ -17,7 +17,7 @@ import enum
 import hashlib
 import json
 import warnings
-from typing import Collection, Mapping, Tuple
+from typing import Collection, Mapping, Optional, Tuple
 
 
 class Variant(str, enum.Enum):
@@ -57,6 +57,50 @@ EXEC_MAPS = ("vmap", "map")
 # Declared here — not in stages/lowering — so config stays import-root.
 STAGE_NAMES = ("demod", "beamform", "bmode", "doppler", "power_doppler")
 LOWERING_NAMES = ("xla", "pallas")
+
+# Fusion modes: "none" dispatches per stage through the lowering registry;
+# "fused" asks the planner for a registered fused lowering spanning a
+# contiguous stage group (repro.core.lowering.FusedLowering) and refuses
+# loudly when no span covers this (variant, modality, precision).
+FUSION_NAMES = ("none", "fused")
+
+# Compute precisions for kernel lowerings. "f32" is the determinism
+# contract's reference: every lowering of one op is bit-compatible at the
+# per-stage contraction level and tracks the xla reference to <=1e-5 at
+# image level (bit-exact for bmode/power_doppler at test geometry).
+# "bf16"/"f16" request reduced-precision *matmul operands* with f32
+# accumulation (preferred_element_type=f32) inside kernels that implement
+# them; pointwise math stays f32. The xla reference formulations compute
+# in f32 only, so reduced precision is satisfiable only where a Pallas
+# (fused) kernel registers it — the planner enforces this.
+PRECISION_NAMES = ("f32", "bf16", "f16")
+
+# The documented determinism/tolerance contract, per (precision, modality):
+# (rtol, atol) bounds on the final image vs. the f32 monolithic oracle,
+# enforced against the golden fixtures by tests/test_fused_pipeline.py.
+# f32 is exact (allclose at 0 tolerance == array_equal). The reduced
+# precision bounds are calibrated empirically at test geometry and carry
+# ~4x headroom; images are normalized to O(1) ranges so atol and rtol act
+# on comparable scales. bf16 (8-bit mantissa) is looser than f16 (11-bit)
+# — the dots accumulate in f32 either way, so the error is operand
+# rounding, not accumulation drift.
+PRECISION_TOLERANCES = {
+    ("f32", Modality.BMODE): (0.0, 0.0),
+    ("f32", Modality.POWER_DOPPLER): (0.0, 0.0),
+    ("bf16", Modality.BMODE): (7.5e-2, 7.5e-2),
+    ("bf16", Modality.POWER_DOPPLER): (1.5e-1, 1.5e-1),
+    ("f16", Modality.BMODE): (5e-3, 5e-3),
+    ("f16", Modality.POWER_DOPPLER): (2.5e-2, 2.5e-2),
+}
+
+
+def precision_tolerance(precision: str, modality: "Modality"):
+    """(rtol, atol) image-level bound for a (precision, modality) cell.
+
+    Raises KeyError for cells outside the documented contract (e.g. no
+    fused lowering registers the color-doppler head yet).
+    """
+    return PRECISION_TOLERANCES[(precision, modality)]
 
 # Paper table names, e.g. RF2IQ_DAS_BMODE.
 PIPELINE_NAMES = {
@@ -121,6 +165,22 @@ class UltrasoundConfig:
     # Normalized to a sorted tuple of pairs at construction.
     stage_lowerings: Tuple[Tuple[str, str], ...] = ()
 
+    # --- fusion + precision (megakernel axes) ------------------------------
+    # fusion="fused" replaces the per-stage dispatch of a registered stage
+    # span (demod→beamform→head) with one tile-resident Pallas megakernel
+    # (repro.kernels.fused_pipeline); the planner resolves WHICH fused
+    # lowering and stamps its group. Both axes participate in the canonical
+    # hash, so the multi-tenant scheduler never batches fused and unfused
+    # (or mixed-precision) streams into one compiled program.
+    fusion: str = "none"
+    precision: str = "f32"
+    # Pixel-tile rows of the fused kernel's grid. None lets the planner
+    # decide (autotune over the fusion-group candidates, or the kernel
+    # default under fixed/heuristic); plan.concretize() writes the
+    # resolved value back. Planner-decided, so it is excluded from the
+    # plan's geometry key (like stage_lowerings).
+    fusion_block: Optional[int] = None
+
     # DEPRECATED alias for stage_lowerings={"beamform": "pallas"} (the fused
     # DAS Pallas kernel). Normalized away at construction — the field is
     # always False afterwards, so it never reaches the canonical hash.
@@ -139,6 +199,24 @@ class UltrasoundConfig:
             raise ValueError(
                 f"unknown exec_map: {self.exec_map!r} "
                 f"(expected one of {EXEC_MAPS})")
+        if self.fusion not in FUSION_NAMES:
+            raise ValueError(
+                f"unknown fusion: {self.fusion!r} "
+                f"(expected one of {FUSION_NAMES})")
+        if self.precision not in PRECISION_NAMES:
+            raise ValueError(
+                f"unknown precision: {self.precision!r} "
+                f"(expected one of {PRECISION_NAMES})")
+        if self.fusion_block is not None:
+            if self.fusion == "none":
+                raise ValueError(
+                    "fusion_block is a fused-kernel tile size — set "
+                    "fusion='fused' or leave fusion_block=None")
+            if not (isinstance(self.fusion_block, int)
+                    and self.fusion_block > 0):
+                raise ValueError(
+                    f"fusion_block must be a positive int, got "
+                    f"{self.fusion_block!r}")
         lowerings = self.stage_lowerings
         if isinstance(lowerings, Mapping):
             lowerings = tuple(lowerings.items())
@@ -218,7 +296,9 @@ class UltrasoundConfig:
 # Bump when the meaning of a config field (and hence of any artifact keyed
 # on the hash — consts cache entries, autotune memos) changes incompatibly.
 # v2: stage_lowerings joined the config (use_das_kernel normalized away).
-CONFIG_HASH_SCHEMA = "ultrasound-cfg-v2"
+# v3: fusion / precision / fusion_block joined the config (the fused
+#     megakernel axes) — every hash-keyed artifact re-keys.
+CONFIG_HASH_SCHEMA = "ultrasound-cfg-v3"
 
 
 def config_hash(cfg: UltrasoundConfig, *,

@@ -2,7 +2,8 @@
 
 Stages (all static, deterministic):
   1. pointwise mix with the precomputed carrier (cos / -sin at f0),
-  2. FIR low-pass as a strided 1-D convolution (stride = decimation factor).
+  2. FIR low-pass + decimation as an explicitly ordered shift-and-add
+     (a strided 1-D conv with the tap accumulation order pinned).
 
 The carrier vectors and FIR taps are init-time constants (paper §II-C).
 Complex IQ is carried as a trailing (re, im) axis — no complex dtypes.
@@ -47,23 +48,29 @@ def rf_to_iq(consts: Dict[str, jnp.ndarray], rf: jnp.ndarray,
              decim: int) -> jnp.ndarray:
     """(n_l, n_c, n_f) RF -> (n_s, n_c, n_f, 2) IQ.
 
-    The mix is pointwise; the low-pass + decimation is one strided conv over
-    the axial axis with 'SAME' padding (output length n_l // decim).
+    The mix is pointwise; the low-pass + decimation is a strided FIR over
+    the axial axis with 'SAME' padding (output length ceil(n_l / decim)),
+    written as an explicitly ordered shift-and-add over the taps rather
+    than lax.conv: XLA:CPU emits differently-rounded (1-ulp) conv code for
+    this strided shape inside loop bodies (fori_loop / pallas grids), so a
+    conv-based reference could never be matched bitwise by a fused kernel.
+    Pinning the tap accumulation order makes the demod bit-identical in
+    every execution context at identical cost (k FMAs per output sample).
     """
     n_l, n_c, n_f = rf.shape
     x = rf.astype(jnp.float32)
     mixed = x[..., None] * consts["carrier"][:, None, None, :]  # (n_l,c,f,2)
 
-    # Batch the (channel, frame, re/im) axes; convolve the axial axis.
-    feat = mixed.transpose(1, 2, 3, 0).reshape(n_c * n_f * 2, 1, n_l)
-    taps = consts["lpf"][None, None, :]                        # (1, 1, k)
-    k = taps.shape[-1]
-    pad = _same_pad(n_l, k, decim)
-    out = lax.conv_general_dilated(
-        feat, taps, window_strides=(decim,), padding=[pad],
-        dimension_numbers=("NCH", "OIH", "NCH"))
-    n_s = out.shape[-1]
-    return out.reshape(n_c, n_f, 2, n_s).transpose(3, 0, 1, 2)
+    lpf = consts["lpf"]                                        # (k,)
+    k = lpf.shape[0]
+    pad_lo, pad_hi = _same_pad(n_l, k, decim)
+    m = jnp.pad(mixed, ((pad_lo, pad_hi), (0, 0), (0, 0), (0, 0)))
+    n_s = -(-n_l // decim)
+    acc = jnp.zeros((n_s, n_c, n_f, 2), jnp.float32)
+    for t in range(k):  # static unroll; ascending tap order is the contract
+        acc = acc + lpf[t] * lax.slice_in_dim(
+            m, t, t + (n_s - 1) * decim + 1, stride=decim, axis=0)
+    return acc
 
 
 def _same_pad(length: int, k: int, stride: int):

@@ -43,15 +43,23 @@ def smoothing_kernel(cfg: UltrasoundConfig) -> np.ndarray:
 
 
 def apply_wall_filter(consts, bf: jnp.ndarray) -> jnp.ndarray:
-    """(n_pix, n_f, 2) -> (n_pix, n_f', 2) FIR high-pass along frames."""
+    """(n_pix, n_f, 2) -> (n_pix, n_f', 2) FIR high-pass along frames.
+
+    Explicitly ordered shift-and-add rather than lax.conv, for the same
+    reason as demod.rf_to_iq: XLA:CPU conv codegen is context-dependent
+    (1-ulp drift inside loop bodies / pallas grids), and the wall filter
+    is the pipeline's most cancellation-amplified stage — the high-pass
+    residual is orders of magnitude below the partial sums, so a 1-ulp
+    upstream difference is visible in the final image. Pinning the tap
+    order keeps it bit-identical in every execution context.
+    """
     taps = consts["wall_taps"]                        # (k,)
-    n_pix, n_f, _ = bf.shape
-    x = bf.transpose(0, 2, 1).reshape(n_pix * 2, 1, n_f)
-    out = lax.conv_general_dilated(
-        x, taps[None, None, :], window_strides=(1,), padding="VALID",
-        dimension_numbers=("NCH", "OIH", "NCH"))
-    n_fp = out.shape[-1]
-    return out.reshape(n_pix, 2, n_fp).transpose(0, 2, 1)
+    k = taps.shape[0]
+    n_fp = bf.shape[1] - k + 1                        # VALID along frames
+    acc = jnp.zeros(bf.shape[:1] + (n_fp, 2), jnp.float32)
+    for t in range(k):  # static unroll; ascending tap order is the contract
+        acc = acc + taps[t] * bf[:, t:t + n_fp, :]
+    return acc
 
 
 def _smooth(cfg: UltrasoundConfig, consts, img: jnp.ndarray) -> jnp.ndarray:
@@ -80,11 +88,26 @@ def color_doppler_image(cfg: UltrasoundConfig, consts,
     return _smooth(cfg, consts, v.reshape(cfg.nz, cfg.nx))
 
 
-def power_doppler_image(cfg: UltrasoundConfig, consts,
-                        bf: jnp.ndarray) -> jnp.ndarray:
-    """(n_pix, n_f, 2) -> (nz, nx) power map in [0, 1]."""
+def power_from_ensemble(consts, bf: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix, n_f, 2) -> (n_pix,) wall-filtered power R0.
+
+    The tile-local half of the power-doppler head (per-pixel FIR along
+    frames + per-pixel frame reduction) — the part the fused megakernel
+    computes on tile-resident beamformed IQ.
+    """
     z = apply_wall_filter(consts, bf)
-    r0 = cnn_ops.cabs2(z).sum(axis=1)                 # (n_pix,)
+    return cnn_ops.cabs2(z).sum(axis=1)               # (n_pix,)
+
+
+def power_compress(cfg: UltrasoundConfig, consts,
+                   r0: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix,) R0 -> (nz, nx) power map in [0, 1].
+
+    The global half: normalize_by_max over all pixels plus the SAME-conv
+    spatial smooth — the fused lowering's fusion boundary, shared
+    verbatim with the monolithic reference (see bmode.compress_envelope
+    for the contract rationale).
+    """
     r0 = cnn_ops.normalize_by_max(r0)
     if cfg.cnn_transcendentals:
         db = 10.0 * cnn_ops.log10_approx(r0)
@@ -93,3 +116,9 @@ def power_doppler_image(cfg: UltrasoundConfig, consts,
     dr = cfg.dynamic_range_db
     img = (cnn_ops.clip(db, -dr, 0.0) + dr) / dr
     return _smooth(cfg, consts, img.reshape(cfg.nz, cfg.nx))
+
+
+def power_doppler_image(cfg: UltrasoundConfig, consts,
+                        bf: jnp.ndarray) -> jnp.ndarray:
+    """(n_pix, n_f, 2) -> (nz, nx) power map in [0, 1]."""
+    return power_compress(cfg, consts, power_from_ensemble(consts, bf))

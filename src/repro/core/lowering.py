@@ -39,12 +39,14 @@ from typing import Callable, Dict, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import beamform, bmode, demod, doppler
-from repro.core.config import (LOWERING_NAMES, STAGE_NAMES, UltrasoundConfig,
-                               Variant)
+from repro.core.config import (LOWERING_NAMES, Modality, PRECISION_NAMES,
+                               STAGE_NAMES, UltrasoundConfig, Variant)
 
 __all__ = ["Lowering", "register_lowering", "registered_lowerings",
            "available_lowerings", "resolve_apply", "apply_stage",
-           "supported_subset", "DEFAULT_LOWERING"]
+           "supported_subset", "DEFAULT_LOWERING", "FusedLowering",
+           "register_fused_lowering", "registered_fused_lowerings",
+           "resolve_fused"]
 
 DEFAULT_LOWERING = "xla"
 
@@ -59,6 +61,10 @@ class Lowering:
     ``variant`` scopes the registration: None applies to every variant
     (demod, the heads), a concrete Variant only to that formulation of
     the stage (the three beamformers are three distinct ops).
+    ``precisions`` names the compute precisions the lowering implements
+    (config.PRECISION_NAMES); the xla references compute in f32 only,
+    so a reduced-precision config resolves only onto kernels that
+    declare it — the planner refuses anything else loudly.
     """
 
     stage: str
@@ -66,6 +72,7 @@ class Lowering:
     apply: Callable[[UltrasoundConfig, Dict, jnp.ndarray], jnp.ndarray]
     available: Callable[[UltrasoundConfig, str], bool]
     variant: Optional[Variant] = None
+    precisions: Tuple[str, ...] = ("f32",)
 
 
 # (stage, variant value or None) -> {lowering name -> Lowering}
@@ -78,7 +85,8 @@ def _always(cfg: UltrasoundConfig, backend: str) -> bool:
 
 def register_lowering(stage: str, name: str, apply: Callable, *,
                       variant: Optional[Variant] = None,
-                      available: Optional[Callable] = None) -> Lowering:
+                      available: Optional[Callable] = None,
+                      precisions: Tuple[str, ...] = ("f32",)) -> Lowering:
     """Register (or replace) one lowering of a stage op."""
     if stage not in STAGE_NAMES:
         raise ValueError(f"unknown stage: {stage!r} "
@@ -86,11 +94,21 @@ def register_lowering(stage: str, name: str, apply: Callable, *,
     if name not in LOWERING_NAMES:
         raise ValueError(f"unknown lowering name: {name!r} "
                          f"(expected one of {LOWERING_NAMES})")
+    _check_precisions(precisions)
     low = Lowering(stage=stage, name=name, apply=apply,
-                   available=available or _always, variant=variant)
+                   available=available or _always, variant=variant,
+                   precisions=tuple(precisions))
     key = (stage, variant.value if variant is not None else None)
     _REGISTRY.setdefault(key, {})[name] = low
     return low
+
+
+def _check_precisions(precisions) -> None:
+    bad = sorted(set(precisions) - set(PRECISION_NAMES))
+    if bad or not precisions:
+        raise ValueError(f"invalid precisions {tuple(precisions)!r} "
+                         f"(expected a non-empty subset of "
+                         f"{PRECISION_NAMES})")
 
 
 def _op_key(cfg: UltrasoundConfig, stage: str) -> Tuple[str, Optional[str]]:
@@ -113,9 +131,13 @@ def registered_lowerings(cfg: UltrasoundConfig,
 
 def available_lowerings(cfg: UltrasoundConfig, stage: str,
                         backend: str) -> Dict[str, Lowering]:
-    """The registered lowerings whose capability predicate passes."""
+    """The registered lowerings whose capability predicate passes AND
+    that implement ``cfg.precision`` — under reduced precision the xla
+    references (f32-only) drop out, so resolution fails loudly for any
+    stage no kernel covers rather than silently computing in f32."""
     return {n: low for n, low in registered_lowerings(cfg, stage).items()
-            if low.available(cfg, backend)}
+            if cfg.precision in low.precisions
+            and low.available(cfg, backend)}
 
 
 def resolve_apply(cfg: UltrasoundConfig, stage: str) -> Callable:
@@ -134,6 +156,13 @@ def resolve_apply(cfg: UltrasoundConfig, stage: str) -> Callable:
         raise ValueError(
             f"no {name!r} lowering registered for stage op {op!r} "
             f"(registered: {have})")
+    if cfg.precision not in lows[name].precisions:
+        raise ValueError(
+            f"lowering {name!r} for stage {stage!r} computes in "
+            f"{lows[name].precisions} only, but the config requests "
+            f"precision={cfg.precision!r} — reduced precision needs a "
+            "kernel that declares it (set fusion='fused' for the "
+            "megakernel, or precision='f32')")
     return lows[name].apply
 
 
@@ -171,6 +200,131 @@ def supports_explicit(cfg: UltrasoundConfig, backend: str) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Fused (stage-span) lowerings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedLowering:
+    """One lowering claiming a contiguous SPAN of stages.
+
+    ``apply(cfg, consts, x) -> y`` maps the first spanned stage's input
+    straight to the last spanned stage's output (for the full-pipeline
+    span: RF -> image) — the per-stage dispatch never runs inside the
+    span. A fused lowering is scoped to one (variant, modality) cell:
+    the span's math is the composition of that variant's stage ops, so
+    a single registration cannot honestly serve two formulations.
+
+    ``stages`` must be a contiguous run of the modality's graph order
+    ``(demod, beamform, <head>)``, length >= 2 — a 1-stage "span" is a
+    per-stage lowering and belongs in the flat registry.
+    """
+
+    stages: Tuple[str, ...]
+    name: str
+    variant: Variant
+    modality: Modality
+    apply: Callable[[UltrasoundConfig, Dict, jnp.ndarray], jnp.ndarray]
+    available: Callable[[UltrasoundConfig, str], bool]
+    precisions: Tuple[str, ...] = ("f32",)
+
+    @property
+    def group(self) -> str:
+        """Canonical fusion-group label, e.g. ``demod+beamform+bmode`` —
+        the plan stamp, NDJSON field, and stage_fns key for the span."""
+        return "+".join(self.stages)
+
+
+# (variant value, modality value) -> {lowering name -> FusedLowering}
+_FUSED_REGISTRY: Dict[Tuple[str, str], Dict[str, FusedLowering]] = {}
+
+
+def _graph_order(modality: Modality) -> Tuple[str, ...]:
+    # Mirrors stages.build_graph without importing it (stages imports us).
+    return ("demod", "beamform", modality.value)
+
+
+def register_fused_lowering(stages: Tuple[str, ...], name: str,
+                            apply: Callable, *, variant: Variant,
+                            modality: Modality,
+                            available: Optional[Callable] = None,
+                            precisions: Tuple[str, ...] = ("f32",)
+                            ) -> FusedLowering:
+    """Register (or replace) a fused lowering for one (variant, modality)."""
+    if name not in LOWERING_NAMES:
+        raise ValueError(f"unknown lowering name: {name!r} "
+                         f"(expected one of {LOWERING_NAMES})")
+    if not variant.concrete:
+        raise ValueError("fused lowerings are scoped to concrete variants")
+    _check_precisions(precisions)
+    order = _graph_order(modality)
+    stages = tuple(stages)
+    runs = [tuple(order[i:i + len(stages)])
+            for i in range(len(order) - len(stages) + 1)]
+    if len(stages) < 2 or stages not in runs:
+        raise ValueError(
+            f"fused span {stages!r} is not a contiguous run (length >= 2) "
+            f"of the {modality.value!r} graph {order!r}")
+    fused = FusedLowering(stages=stages, name=name, apply=apply,
+                          variant=variant, modality=modality,
+                          available=available or _always,
+                          precisions=tuple(precisions))
+    key = (variant.value, modality.value)
+    _FUSED_REGISTRY.setdefault(key, {})[name] = fused
+    return fused
+
+
+def registered_fused_lowerings(cfg: UltrasoundConfig
+                               ) -> Dict[str, FusedLowering]:
+    """Every fused lowering registered for (cfg.variant, cfg.modality)."""
+    if not cfg.variant.concrete:
+        return {}
+    return dict(_FUSED_REGISTRY.get(
+        (cfg.variant.value, cfg.modality.value), {}))
+
+
+def resolve_fused(cfg: UltrasoundConfig, backend: str) -> FusedLowering:
+    """THE fused lowering a ``fusion='fused'`` config executes, or a
+    loud error naming exactly which gate failed (registration,
+    precision, capability) — a fused request must run or fail at plan
+    time, never silently fall back to per-stage dispatch."""
+    cell = f"({cfg.variant.value}, {cfg.modality.value})"
+    registered = registered_fused_lowerings(cfg)
+    if not registered:
+        raise ValueError(
+            f"fusion='fused' but no fused lowering is registered for "
+            f"{cell} — set fusion='none' or register one "
+            "(repro.core.lowering.register_fused_lowering)")
+    usable = {n: f for n, f in registered.items()
+              if cfg.precision in f.precisions}
+    if not usable:
+        raise ValueError(
+            f"no fused lowering for {cell} implements "
+            f"precision={cfg.precision!r} "
+            f"(registered: { {n: f.precisions for n, f in registered.items()} })")
+    live = {n: f for n, f in usable.items() if f.available(cfg, backend)}
+    if not live:
+        raise ValueError(
+            f"fused lowering(s) {sorted(usable)} for {cell} are "
+            f"registered but not available on backend {backend!r} for "
+            "this geometry (capability predicate failed — see "
+            "docs/kernels.md for the tile constraints)")
+    # One fused lowering per cell today; deterministic pick if extended.
+    return live[sorted(live)[0]]
+
+
+def fused_supported(cfg: UltrasoundConfig, backend: str) -> bool:
+    """True iff ``resolve_fused`` would succeed (planner candidate
+    filter — AUTO resolution must never land on a variant whose fused
+    cell cannot run)."""
+    try:
+        resolve_fused(cfg, backend)
+        return True
+    except ValueError:
+        return False
+
+
+# ---------------------------------------------------------------------------
 # Default registrations: the stage-op x lowering matrix
 # ---------------------------------------------------------------------------
 
@@ -180,7 +334,7 @@ def _beamform_dynamic_pallas(cfg, consts, iq):
     (repro.kernels.das_beamform; docs/kernels.md has the tile contract)."""
     from repro.kernels.das_beamform import das_beamform
     return das_beamform(consts["idx"], consts["frac"], consts["apod"],
-                        consts["rot"], iq)
+                        consts["rot"], iq, precision=cfg.precision)
 
 
 def _beamform_sparse_pallas(cfg, consts, iq):
@@ -188,15 +342,35 @@ def _beamform_sparse_pallas(cfg, consts, iq):
     paper's V3-on-TPU story (repro.kernels.bsr_spmm). The wrapper owns
     the IQ sample-axis blocking; the kernel owns the block gather."""
     from repro.kernels.bsr_spmm import bsr_beamform
+    from repro.kernels.pallas_compat import block_sample_axis
     blocks = consts["bsr_blocks"]                       # (n_c,n_pb,K,bp,bs,2)
     cols = consts["bsr_col_idx"]                        # (n_c, n_pb, K)
-    bs = blocks.shape[4]
-    n_s = iq.shape[0]
-    n_sb = -(-n_s // bs)
-    pad = n_sb * bs - n_s
-    iq_p = jnp.pad(iq, ((0, pad), (0, 0), (0, 0), (0, 0)))
-    iq_b = iq_p.reshape(n_sb, bs, iq.shape[1], iq.shape[2], 2)
-    return bsr_beamform(cols, blocks, iq_b)[: cfg.n_pix]
+    iq_b = block_sample_axis(iq, blocks.shape[4])
+    return bsr_beamform(cols, blocks, iq_b,
+                        precision=cfg.precision)[: cfg.n_pix]
+
+
+def _fused_dynamic_bmode_pallas(cfg, consts, rf):
+    """demod→DAS beamform→envelope in ONE Pallas megakernel, then the
+    reference global epilogue (normalize + dB compression) — the fusion
+    boundary documented in repro.kernels.fused_pipeline.kernel."""
+    from repro.kernels.fused_pipeline import fused_rf_to_envelope
+    env = fused_rf_to_envelope(
+        consts["carrier"], consts["lpf"], consts["idx"], consts["frac"],
+        consts["apod"], consts["rot"], rf, decim=cfg.decim,
+        bp=cfg.fusion_block, precision=cfg.precision)
+    return bmode.compress_envelope(cfg, env)
+
+
+def _fused_dynamic_power_pallas(cfg, consts, rf):
+    """demod→DAS beamform→wall filter→R0 in ONE Pallas megakernel, then
+    the reference global epilogue (normalize + dB + spatial smooth)."""
+    from repro.kernels.fused_pipeline import fused_rf_to_power
+    r0 = fused_rf_to_power(
+        consts["carrier"], consts["lpf"], consts["idx"], consts["frac"],
+        consts["apod"], consts["rot"], consts["wall_taps"], rf,
+        decim=cfg.decim, bp=cfg.fusion_block, precision=cfg.precision)
+    return doppler.power_compress(cfg, consts, r0)
 
 
 def _das_pallas_available(cfg: UltrasoundConfig, backend: str) -> bool:
@@ -225,10 +399,12 @@ def _register_defaults() -> None:
         register_lowering("beamform", "xla", fn, variant=variant)
     register_lowering("beamform", "pallas", _beamform_dynamic_pallas,
                       variant=Variant.DYNAMIC,
-                      available=_das_pallas_available)
+                      available=_das_pallas_available,
+                      precisions=("f32", "bf16", "f16"))
     register_lowering("beamform", "pallas", _beamform_sparse_pallas,
                       variant=Variant.SPARSE,
-                      available=_bsr_pallas_available)
+                      available=_bsr_pallas_available,
+                      precisions=("f32", "bf16", "f16"))
     register_lowering(
         "bmode", "xla",
         lambda cfg, consts, bf: bmode.bmode_image(cfg, bf))
@@ -240,6 +416,18 @@ def _register_defaults() -> None:
         "power_doppler", "xla",
         lambda cfg, consts, bf:
             doppler.power_doppler_image(cfg, consts, bf))
+    register_fused_lowering(
+        ("demod", "beamform", "bmode"), "pallas",
+        _fused_dynamic_bmode_pallas,
+        variant=Variant.DYNAMIC, modality=Modality.BMODE,
+        available=_das_pallas_available,
+        precisions=("f32", "bf16", "f16"))
+    register_fused_lowering(
+        ("demod", "beamform", "power_doppler"), "pallas",
+        _fused_dynamic_power_pallas,
+        variant=Variant.DYNAMIC, modality=Modality.POWER_DOPPLER,
+        available=_das_pallas_available,
+        precisions=("f32", "bf16", "f16"))
 
 
 _register_defaults()

@@ -191,10 +191,12 @@ def init_pipeline(cfg: UltrasoundConfig, *,
     Memory tier first, then disk, then recompute (populating both). The
     returned dict is a fresh shallow copy — add/remove keys freely — but
     the arrays themselves are the cached (read-only) buffers; copy one
-    before mutating it. ``exec_map`` and ``stage_lowerings`` are
-    excluded from the cache key: they change how the graph is mapped /
-    which kernels execute it, never its constants (the Pallas lowerings
-    consume the same delay tables as their xla references).
+    before mutating it. ``exec_map``, ``stage_lowerings``, ``fusion``,
+    ``precision``, and ``fusion_block`` are excluded from the cache key:
+    they change how the graph is mapped / which kernels execute it /
+    what the matmul operands are cast to, never its constants (the
+    Pallas lowerings — fused included — consume the same delay tables
+    as their xla references).
     """
     if not cfg.variant.concrete:
         raise ValueError(
@@ -203,8 +205,9 @@ def init_pipeline(cfg: UltrasoundConfig, *,
     if not cache:
         return stages.init_graph_consts(cfg)
 
-    key = (f"{CONSTS_SCHEMA}-"
-           f"{config_hash(cfg, exclude=('exec_map', 'stage_lowerings'))}")
+    excl = ("exec_map", "stage_lowerings", "fusion", "precision",
+            "fusion_block")
+    key = f"{CONSTS_SCHEMA}-{config_hash(cfg, exclude=excl)}"
     if key in _MEM_CACHE:
         CONSTS_CACHE_STATS.mem_hits += 1
         _MEM_CACHE.move_to_end(key)
@@ -286,6 +289,13 @@ def _resolve_plan(cfg: UltrasoundConfig, plan, policy: Optional[str],
                     f"{planned[stage]!r} — an explicit lowering is always "
                     "honored, so pass a matching plan (or drop the "
                     "override)")
+        if (cfg.fusion_block is not None
+                and cfg.fusion_block != plan.fusion_block):
+            raise ValueError(
+                f"cfg explicitly requests fusion_block="
+                f"{cfg.fusion_block} but the plan resolved "
+                f"{plan.fusion_block} — an explicit block size is always "
+                "honored, so pass a matching plan (or drop the override)")
         if plan.exec_map != cfg.exec_map:
             # The planner never decides exec_map (it copies the config's);
             # an explicit cfg.exec_map — e.g. "map" to bound peak memory —

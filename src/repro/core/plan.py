@@ -112,6 +112,13 @@ BACKEND_LOWERING_PREFERENCE: Dict[str, Dict[Tuple[str, Optional[str]],
 #  runs, warmup) -> tuple of ("stage:lowering", t_avg_s)
 _LOWERING_MEMO: Dict[Tuple, Tuple[Tuple[str, float], ...]] = {}
 
+# Pixel-tile candidates the autotune policy probes for the fused
+# megakernel's block size (cfg.fusion_block left open). The per-stage
+# autotune memo generalizes to fusion groups: probes key into
+# _LOWERING_MEMO as "<group>:<name>@bp<bp>" so sweeps pay the search
+# once per geometry.
+FUSION_BLOCK_CANDIDATES = (64, 128, 256)
+
 
 def register_backend_preference(backend: str, variant: Variant) -> None:
     """Extend/override the heuristic registry (measured, not assumed)."""
@@ -157,6 +164,17 @@ class PipelinePlan:
     # cfg.stage_lowerings so the executed config, its canonical hash
     # (multi-tenant grouping), and every telemetry stamp agree.
     stage_lowerings: Tuple[Tuple[str, str], ...] = ()
+    # Fusion/precision contract stamp. ``fusion``/``precision`` echo the
+    # config's request (both are geometry-key axes — a fused plan can
+    # never be consumed by an unfused pipeline or vice versa);
+    # ``fusion_group`` names the claimed span ("demod+beamform+bmode");
+    # ``fusion_block`` is the planner-DECIDED pixel-tile size (None =
+    # kernel default), excluded from the geometry key like the other
+    # planned axes.
+    fusion: str = "none"
+    precision: str = "f32"
+    fusion_group: Optional[str] = None
+    fusion_block: Optional[int] = None
     autotune_t_s: Optional[Tuple[Tuple[str, float], ...]] = None
     # Per-stage lowering timings when autotune had to measure (pairs of
     # ("stage:lowering", t_avg_s)); None when the table decided.
@@ -170,6 +188,12 @@ class PipelinePlan:
     def __post_init__(self):
         assert self.variant.concrete, "plan must carry a concrete variant"
         assert self.devices >= 1, "plan needs at least one device"
+        if self.fusion == "fused":
+            assert self.fusion_group, \
+                "a fused plan must name its fusion group"
+        else:
+            assert self.fusion_group is None and self.fusion_block is None, \
+                "an unfused plan cannot carry fusion_group/fusion_block"
         jitted = {name for name, _ in self.jit_stages}
         lowered = {name for name, _ in self.stage_lowerings}
         assert lowered == jitted, (
@@ -209,7 +233,8 @@ class PipelinePlan:
     def concretize(self, cfg: UltrasoundConfig) -> UltrasoundConfig:
         """The requested config with every planned decision applied."""
         return cfg.with_(variant=self.variant, exec_map=self.exec_map,
-                         stage_lowerings=self.stage_lowerings)
+                         stage_lowerings=self.stage_lowerings,
+                         fusion_block=self.fusion_block)
 
     def stage_jit(self, stage_name: str) -> bool:
         return dict(self.jit_stages).get(stage_name, True)
@@ -223,6 +248,10 @@ class PipelinePlan:
             "donate": self.donate,
             "jit_stages": {k: v for k, v in self.jit_stages},
             "stage_lowerings": {k: v for k, v in self.stage_lowerings},
+            "fusion": self.fusion,
+            "precision": self.precision,
+            "fusion_group": self.fusion_group,
+            "fusion_block": self.fusion_block,
             "config_key": self.config_key,
             "geometry_key": self.geometry_key,
             "provenance": self.provenance,
@@ -239,8 +268,13 @@ class PipelinePlan:
 
 
 def _geometry_key(cfg: UltrasoundConfig) -> str:
+    # fusion/precision stay IN the key (user-requested program axes: the
+    # scheduler must never batch fused and unfused — or f32 and bf16 —
+    # acquisitions into one program); fusion_block joins the excluded
+    # planner-decided axes.
     return config_hash(cfg,
-                       exclude=("variant", "exec_map", "stage_lowerings"))
+                       exclude=("variant", "exec_map", "stage_lowerings",
+                                "fusion_block"))
 
 
 def _default_measure(cfg: UltrasoundConfig, variant: Variant, *,
@@ -287,16 +321,23 @@ def _variant_candidates(cfg: UltrasoundConfig,
 
     With no explicit entries this is all three; a pinned pallas
     beamform excludes CNN (nothing registered) so AUTO resolution can
-    never land on a variant that would refuse the pin.
+    never land on a variant that would refuse the pin. A
+    ``fusion='fused'`` config additionally filters to variants whose
+    (variant, modality) cell has a runnable fused registration.
     """
     from repro.core import lowering as lowering_lib
     candidates = tuple(
         v for v in CONCRETE_VARIANTS
-        if lowering_lib.supports_explicit(cfg.with_(variant=v), backend))
+        if lowering_lib.supports_explicit(cfg.with_(variant=v), backend)
+        and (cfg.fusion != "fused"
+             or lowering_lib.fused_supported(cfg.with_(variant=v),
+                                             backend)))
     if not candidates:
         raise ValueError(
             f"no concrete variant supports the explicit stage_lowerings "
-            f"{dict(cfg.stage_lowerings)} on backend {backend!r} — drop "
+            f"{dict(cfg.stage_lowerings)}"
+            + (" with fusion='fused'" if cfg.fusion == "fused" else "")
+            + f" on backend {backend!r} — drop "
             "an override or register the missing lowering")
     return candidates
 
@@ -367,10 +408,18 @@ def _resolve_stage_lowerings(cfg: UltrasoundConfig, backend: str, *,
     per-stage bench breakdown (autotune, memoized). Returns the
     resolved pairs plus the ("stage:lowering", t) timings when autotune
     measured (None otherwise).
+
+    Under ``fusion='fused'`` the resolved fused lowering CLAIMS its
+    span: every spanned stage is stamped with the fused lowering's name
+    (an explicit pin naming anything else is a contradiction and fails
+    here), and only the stages outside the span go through per-stage
+    resolution.
     """
     from repro.core import lowering as lowering_lib
     from repro.core.stages import build_graph
 
+    fused = (lowering_lib.resolve_fused(cfg, backend)
+             if cfg.fusion == "fused" else None)
     explicit = dict(cfg.stage_lowerings)
     graph_stages = {s.name for s in build_graph(cfg)}
     stray = sorted(set(explicit) - graph_stages)
@@ -385,6 +434,16 @@ def _resolve_stage_lowerings(cfg: UltrasoundConfig, backend: str, *,
     resolved = []
     to_tune = []
     for stage in build_graph(cfg):
+        if fused is not None and stage.name in fused.stages:
+            pin = explicit.get(stage.name)
+            if pin is not None and pin != fused.name:
+                raise ValueError(
+                    f"stage_lowerings pins {stage.name!r} to {pin!r}, "
+                    f"but fusion='fused' claims the "
+                    f"{fused.group!r} span with the {fused.name!r} "
+                    "lowering — drop the pin or set fusion='none'")
+            resolved.append((stage.name, fused.name))
+            continue
         if stage.name in explicit:
             name = explicit[stage.name]
             registered = lowering_lib.registered_lowerings(cfg, stage.name)
@@ -406,8 +465,16 @@ def _resolve_stage_lowerings(cfg: UltrasoundConfig, backend: str, *,
             continue
         candidates = lowering_lib.available_lowerings(cfg, stage.name,
                                                       backend)
-        if not candidates:          # pragma: no cover — xla always registers
-            raise ValueError(f"no available lowering for {stage.name!r}")
+        if not candidates:
+            # Reachable under reduced precision: the f32-only xla
+            # reference drops out of the candidate set, so any stage
+            # without a reduced-precision kernel fails here loudly.
+            raise ValueError(
+                f"no available lowering for stage {stage.name!r} on "
+                f"backend {backend!r} at precision {cfg.precision!r} — "
+                "reduced precision needs a kernel that declares it "
+                "(set fusion='fused' for the megakernel, or "
+                "precision='f32')")
         if policy == "autotune" and len(candidates) > 1:
             to_tune.append((stage.name, sorted(candidates)))
             resolved.append((stage.name, None))      # filled below
@@ -463,6 +530,40 @@ def _lowering_timings(cfg: UltrasoundConfig, backend: str, *,
             t = float(measure_stage(probe_cfg, stage_name,
                                     runs=runs, warmup=warmup))
             timings.append((f"{stage_name}:{name}", t))
+    result = tuple(timings)
+    _LOWERING_MEMO[memo_key] = result
+    return result
+
+
+def _fusion_block_timings(cfg: UltrasoundConfig, backend: str, fused, *,
+                          stage_lowerings: Tuple[Tuple[str, str], ...],
+                          runs: int, warmup: int,
+                          measure_stage: Optional[Callable]
+                          ) -> Tuple[Tuple[str, float], ...]:
+    """Measured ("<group>:<name>@bp<bp>", t_avg_s) pairs for the fused
+    megakernel's pixel-tile candidates — the per-stage autotune memo
+    generalized to a fusion group. The probe times the group entry of
+    the bench_stages breakdown (stage_fns exposes the span under its
+    group key), memoized per geometry like the per-stage search."""
+    from repro.kernels.pallas_compat import next_multiple
+
+    n_pix = cfg.nz * cfg.nx
+    cap = next_multiple(n_pix, 8)
+    bps = tuple(sorted({min(bp, cap) for bp in FUSION_BLOCK_CANDIDATES}))
+    memo_key = (config_hash(cfg, exclude=("exec_map", "stage_lowerings",
+                                          "fusion_block")),
+                cfg.stage_lowerings, fused.group, bps, backend, runs,
+                warmup)
+    if memo_key in _LOWERING_MEMO:
+        return _LOWERING_MEMO[memo_key]
+    measure_stage = measure_stage or _default_stage_measure
+    timings = []
+    for bp in bps:
+        probe_cfg = cfg.with_(stage_lowerings=stage_lowerings,
+                              fusion_block=bp)
+        t = float(measure_stage(probe_cfg, fused.group,
+                                runs=runs, warmup=warmup))
+        timings.append((f"{fused.group}:{fused.name}@bp{bp}", t))
     result = tuple(timings)
     _LOWERING_MEMO[memo_key] = result
     return result
@@ -527,9 +628,32 @@ def plan_pipeline(cfg: UltrasoundConfig, policy: str = "fixed", *,
         resolved, backend, policy=policy,
         runs=autotune_runs, warmup=autotune_warmup,
         measure_stage=measure_stage)
+
+    # Fusion-group resolution: the fused lowering was validated inside
+    # _resolve_stage_lowerings; here the planner decides the block size
+    # (explicit cfg.fusion_block honored, autotune measures the
+    # candidates, fixed/heuristic defer to the kernel default).
+    fusion_group = None
+    fusion_block = None
+    if cfg.fusion == "fused":
+        from repro.core import lowering as lowering_lib
+        fused = lowering_lib.resolve_fused(resolved, backend)
+        fusion_group = fused.group
+        fusion_block = cfg.fusion_block
+        if fusion_block is None and policy == "autotune":
+            bp_t = _fusion_block_timings(
+                resolved, backend, fused, stage_lowerings=stage_lowerings,
+                runs=autotune_runs, warmup=autotune_warmup,
+                measure_stage=measure_stage)
+            best = min(bp_t, key=lambda kv: kv[1])
+            fusion_block = int(best[0].rsplit("@bp", 1)[1])
+            lowering_t_s = (lowering_t_s or ()) + bp_t
+
     return PipelinePlan(
         variant=variant, exec_map=cfg.exec_map, donate=donate,
         jit_stages=_stage_jit_defaults(resolved), backend=backend,
         policy=policy, config_key=key, geometry_key=_geometry_key(cfg),
         provenance=provenance, stage_lowerings=stage_lowerings,
+        fusion=cfg.fusion, precision=cfg.precision,
+        fusion_group=fusion_group, fusion_block=fusion_block,
         autotune_t_s=autotune_t_s, lowering_t_s=lowering_t_s)

@@ -24,6 +24,13 @@ Each stage's runtime transform dispatches through the per-stage
 operator-lowering registry (repro.core.lowering): the lowering named in
 ``cfg.stage_lowerings`` (plan-resolved) executes; stages left
 unspecified run the ``xla`` reference formulation.
+
+When ``cfg.fusion == "fused"`` the composition routes the registered
+fused lowering's stage SPAN through its single apply (the megakernel)
+and composes the remaining stages around it; ``stage_fns`` then exposes
+the span under its fusion-group key (e.g. ``demod+beamform+bmode``) so
+the per-stage telemetry and the bench breakdown never pretend the fused
+stages were timed individually.
 """
 
 from __future__ import annotations
@@ -124,21 +131,70 @@ def init_graph_consts(cfg: UltrasoundConfig) -> Dict[str, np.ndarray]:
     return consts
 
 
+def _fused_span(cfg: UltrasoundConfig):
+    """The FusedLowering a ``fusion='fused'`` config routes through
+    (None for ``fusion='none'``). Resolution is loud: a fused request
+    with no runnable registration raises here rather than silently
+    composing per-stage."""
+    if cfg.fusion != "fused":
+        return None
+    import jax
+    return lowering.resolve_fused(cfg, jax.default_backend())
+
+
+def _split_span(stages: Tuple[Stage, ...], fused):
+    """(prefix stages, suffix stages) around the fused lowering's span."""
+    names = [stage.name for stage in stages]
+    i0 = names.index(fused.stages[0])
+    assert tuple(names[i0:i0 + len(fused.stages)]) == fused.stages, (
+        names, fused.stages)  # registration validated contiguity
+    return stages[:i0], stages[i0 + len(fused.stages):]
+
+
 def graph_fn(cfg: UltrasoundConfig) -> Callable:
     """Pure (consts, rf) -> image composition of the stage graph."""
     stages = build_graph(cfg)
+    fused = _fused_span(cfg)
+    if fused is None:
+        def run(consts, rf):
+            x = rf
+            for stage in stages:
+                x = stage.apply(cfg, consts, x)
+            return x
+        return run
 
-    def run(consts, rf):
+    prefix, suffix = _split_span(stages, fused)
+
+    def run_fused(consts, rf):
         x = rf
-        for stage in stages:
+        for stage in prefix:
+            x = stage.apply(cfg, consts, x)
+        x = fused.apply(cfg, consts, x)
+        for stage in suffix:
             x = stage.apply(cfg, consts, x)
         return x
 
-    return run
+    return run_fused
 
 
 def stage_fns(cfg: UltrasoundConfig) -> Dict[str, Callable]:
-    """Each stage as an individually jittable (consts, x) -> y callable."""
+    """Each schedulable unit as its own jittable (consts, x) -> y callable.
+
+    Insertion order is execution order (bench_stages chains the dict).
+    Under ``fusion='fused'`` the spanned stages collapse into ONE entry
+    keyed by the fusion group (``'+'.join(span)``) — the megakernel is
+    the timeable unit; its interior stages have no individual timings.
+    """
     def bind(stage):
         return lambda consts, x: stage.apply(cfg, consts, x)
-    return {stage.name: bind(stage) for stage in build_graph(cfg)}
+
+    stages = build_graph(cfg)
+    fused = _fused_span(cfg)
+    if fused is None:
+        return {stage.name: bind(stage) for stage in stages}
+
+    prefix, suffix = _split_span(stages, fused)
+    fns: Dict[str, Callable] = {stage.name: bind(stage) for stage in prefix}
+    fns[fused.group] = lambda consts, x: fused.apply(cfg, consts, x)
+    fns.update({stage.name: bind(stage) for stage in suffix})
+    return fns

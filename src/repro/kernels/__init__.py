@@ -9,4 +9,24 @@ All kernels are validated on CPU with interpret=True; on TPU the same code
 lowers through Mosaic. Kernels are opt-in (config flag) - the XLA paths in
 repro.core / repro.models remain the portable default, per the paper's
 single-source portability contract.
+
+The public entry points are re-exported here so callers (and the lowering
+registry) do not need to know the subpackage layout. The raw ``bsr_spmm``
+primitive is deliberately NOT re-exported: the name would shadow the
+``repro.kernels.bsr_spmm`` subpackage attribute that tests patch; reach it
+via ``repro.kernels.bsr_spmm.bsr_spmm``.
 """
+
+from repro.kernels.das_beamform.ops import das_beamform
+from repro.kernels.bsr_spmm.ops import bsr_beamform
+from repro.kernels.fused_pipeline.ops import (
+    fused_rf_to_envelope,
+    fused_rf_to_power,
+)
+
+__all__ = [
+    "das_beamform",
+    "bsr_beamform",
+    "fused_rf_to_envelope",
+    "fused_rf_to_power",
+]

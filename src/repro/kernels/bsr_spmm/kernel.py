@@ -25,7 +25,17 @@ import jax.experimental.pallas.tpu as pltpu
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 
-def _kernel(cols_ref, block_ref, x_ref, y_ref):
+# Matmul-operand compute dtypes (accumulation stays f32 via
+# preferred_element_type; "f32" is the identity cast / bit-exact path).
+COMPUTE_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "f16": jnp.float16,
+}
+
+
+def _kernel(cols_ref, block_ref, x_ref, y_ref, *, precision):
+    cdt = COMPUTE_DTYPES[precision]
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -33,18 +43,21 @@ def _kernel(cols_ref, block_ref, x_ref, y_ref):
         y_ref[...] = jnp.zeros_like(y_ref)
 
     y_ref[...] += jnp.dot(
-        block_ref[0, 0], x_ref[0],
+        block_ref[0, 0].astype(cdt), x_ref[0].astype(cdt),
         preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def bsr_spmm_pallas(cols, blocks, x, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("precision", "interpret"))
+def bsr_spmm_pallas(cols, blocks, x, *, precision: str = "f32",
+                    interpret: bool = True):
     """y[i] = sum_k blocks[i,k] @ x[cols[i,k]].
 
     Args:
       cols:   (n_pb, K) int32 block-column indices.
       blocks: (n_pb, K, bp, bs) f32 dense blocks.
       x:      (n_sb, bs, nf) f32 blocked dense operand.
+      precision: matmul-operand dtype, "f32" | "bf16" | "f16"
+        (accumulation is always f32).
     Returns:
       (n_pb, bp, nf) f32.
     """
@@ -61,7 +74,7 @@ def bsr_spmm_pallas(cols, blocks, x, *, interpret: bool = True):
         out_specs=pl.BlockSpec((1, bp, nf), lambda i, k, cols: (i, 0, 0)),
     )
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, precision=precision),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_pb, bp, nf), jnp.float32),
         interpret=interpret,

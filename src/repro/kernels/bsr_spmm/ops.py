@@ -14,19 +14,21 @@ from repro.kernels.bsr_spmm import kernel as _k
 from repro.kernels.pallas_compat import auto_interpret
 
 
-def bsr_spmm(cols, blocks, x, *, interpret=None):
+def bsr_spmm(cols, blocks, x, *, precision="f32", interpret=None):
     return _k.bsr_spmm_pallas(
         cols, blocks.astype(jnp.float32), x.astype(jnp.float32),
-        interpret=auto_interpret(interpret))
+        precision=precision, interpret=auto_interpret(interpret))
 
 
-def bsr_beamform(cols, blocks, iq_b, *, interpret=None):
+def bsr_beamform(cols, blocks, iq_b, *, precision="f32", interpret=None):
     """Complex multi-channel beamform via block-sparse matmuls.
 
     Args:
       cols:   (n_c, n_pb, K) int32.
       blocks: (n_c, n_pb, K, bp, bs, 2) f32 (complex as trailing re/im).
       iq_b:   (n_sb, bs, n_c, n_f, 2) f32 blocked IQ.
+      precision: SpMM-operand dtype, "f32" | "bf16" | "f16"
+        (accumulation is always f32).
     Returns:
       (n_pb * bp, n_f, 2) f32 beamformed output, summed over channels.
     """
@@ -35,13 +37,13 @@ def bsr_beamform(cols, blocks, iq_b, *, interpret=None):
     def one_channel(cols_1, blocks_1, iq_1):
         # iq_1: (n_sb, bs, n_f, 2)
         a = bsr_spmm(cols_1, blocks_1[..., 0], iq_1[..., 0],
-                     interpret=interpret)       # re*re
+                     precision=precision, interpret=interpret)   # re*re
         b = bsr_spmm(cols_1, blocks_1[..., 1], iq_1[..., 1],
-                     interpret=interpret)       # im*im
+                     precision=precision, interpret=interpret)   # im*im
         c = bsr_spmm(cols_1, blocks_1[..., 0], iq_1[..., 1],
-                     interpret=interpret)       # re*im
+                     precision=precision, interpret=interpret)   # re*im
         d = bsr_spmm(cols_1, blocks_1[..., 1], iq_1[..., 0],
-                     interpret=interpret)       # im*re
+                     precision=precision, interpret=interpret)   # im*re
         return jnp.stack([a - b, c + d], axis=-1)   # (n_pb, bp, n_f, 2)
 
     per_c = jax.vmap(one_channel, in_axes=(0, 0, 2))(cols, blocks, iq_b)

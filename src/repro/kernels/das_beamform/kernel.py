@@ -31,8 +31,20 @@ import jax.experimental.pallas as pl
 
 DEFAULT_BP = 128  # pixel-tile rows (MXU-aligned)
 
+# Matmul-operand compute dtypes for the mixed-precision contract: only the
+# one-hot weight tile and the IQ operand are cast; accumulation stays f32
+# (preferred_element_type) and everything pointwise stays f32. "f32" is the
+# identity cast, so the bit-exact path is untouched.
+COMPUTE_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "f16": jnp.float16,
+}
 
-def _kernel(idx_ref, frac_ref, apod_ref, rot_ref, iq_ref, out_ref):
+
+def _kernel(idx_ref, frac_ref, apod_ref, rot_ref, iq_ref, out_ref, *,
+            precision):
+    cdt = COMPUTE_DTYPES[precision]
     bp, n_c = idx_ref.shape
     n_s = iq_ref.shape[0]
     n_f = iq_ref.shape[2]
@@ -51,9 +63,9 @@ def _kernel(idx_ref, frac_ref, apod_ref, rot_ref, iq_ref, out_ref):
         # terms add exactly, so per-channel values match the gather path
         # bit for bit.
         w = (jnp.where(iota == idx, 1.0 - frac, 0.0) +
-             jnp.where(iota == idx + 1, frac, 0.0))         # (bp, n_s)
-        iq_re = iq_ref[:, c, :, 0]                       # (n_s, n_f)
-        iq_im = iq_ref[:, c, :, 1]
+             jnp.where(iota == idx + 1, frac, 0.0)).astype(cdt)  # (bp, n_s)
+        iq_re = iq_ref[:, c, :, 0].astype(cdt)           # (n_s, n_f)
+        iq_im = iq_ref[:, c, :, 1].astype(cdt)
         v_re = jnp.dot(w, iq_re, preferred_element_type=jnp.float32)
         v_im = jnp.dot(w, iq_im, preferred_element_type=jnp.float32)
         rot_re = rot_ref[:, c, 0][:, None]               # (bp, 1)
@@ -76,12 +88,14 @@ def _kernel(idx_ref, frac_ref, apod_ref, rot_ref, iq_ref, out_ref):
     out_ref[:, :, 1] = per_im.sum(axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bp", "precision", "interpret"))
 def das_beamform_pallas(idx, frac, apod, rot, iq, *, bp: int = DEFAULT_BP,
-                        interpret: bool = True):
+                        precision: str = "f32", interpret: bool = True):
     """(n_pix, n_c) tables + (n_s, n_c, n_f, 2) IQ -> (n_pix, n_f, 2).
 
-    n_pix must be a multiple of bp (ops.py pads).
+    n_pix must be a multiple of bp (ops.py pads). `precision` selects the
+    matmul-operand dtype (f32 | bf16 | f16); accumulation is always f32.
     """
     n_pix, n_c = idx.shape
     n_s, _, n_f, _ = iq.shape
@@ -89,7 +103,7 @@ def das_beamform_pallas(idx, frac, apod, rot, iq, *, bp: int = DEFAULT_BP,
     grid = (n_pix // bp,)
 
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bp, n_c), lambda i: (i, 0)),

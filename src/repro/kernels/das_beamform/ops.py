@@ -9,7 +9,7 @@ from repro.kernels.pallas_compat import auto_interpret, next_multiple
 
 
 def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
-                 interpret=None):
+                 precision: str = "f32", interpret=None):
     """Fused delay-and-sum beamform.
 
     Args:
@@ -18,6 +18,8 @@ def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
       apod: (n_pix, n_c) f32 apodization (0 disables a (pixel, channel)).
       rot:  (n_pix, n_c, 2) f32 unit phasors.
       iq:   (n_s, n_c, n_f, 2) f32.
+      precision: matmul-operand dtype, "f32" | "bf16" | "f16"
+        (accumulation is always f32; "f32" is bit-exact).
     Returns:
       (n_pix, n_f, 2) f32 beamformed IQ.
     """
@@ -32,5 +34,5 @@ def das_beamform(idx, frac, apod, rot, iq, *, bp: int = _k.DEFAULT_BP,
         rot = jnp.pad(rot, ((0, pad), (0, 0), (0, 0)))
     out = _k.das_beamform_pallas(
         idx, frac, apod, rot, iq.astype(jnp.float32),
-        bp=bp, interpret=interpret)
+        bp=bp, precision=precision, interpret=interpret)
     return out[:n_pix]

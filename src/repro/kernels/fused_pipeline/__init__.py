@@ -1,0 +1,5 @@
+from repro.kernels.fused_pipeline.ops import (  # noqa: F401
+    DEFAULT_BP,
+    fused_rf_to_envelope,
+    fused_rf_to_power,
+)

@@ -1,0 +1,81 @@
+"""Public wrappers for the fused demod→beamform→head megakernel.
+
+`fused_rf_to_envelope` / `fused_rf_to_power` own the padding, dtype, and
+interpret policy; the head's global epilogue (normalize + compress +
+smooth) stays OUTSIDE — the fused lowering in repro.core.lowering runs
+it via the reference head's own compress functions on the sliced
+(pad-free) kernel output, so the global max never sees pad rows.
+
+Padding contract (same as das_beamform): the pixel axis is padded to a
+``bp`` multiple with zero apodization, so pad rows beamform to exactly
+zero (envelope 0 / power 0) and are sliced off before returning.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fused_pipeline import kernel as _k
+from repro.kernels.pallas_compat import auto_interpret, next_multiple
+
+DEFAULT_BP = _k.DEFAULT_BP
+
+
+def _pad_tables(idx, frac, apod, rot, bp):
+    n_pix = idx.shape[0]
+    bp = min(bp, next_multiple(n_pix, 8))
+    pad = next_multiple(n_pix, bp) - n_pix
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        frac = jnp.pad(frac, ((0, pad), (0, 0)))
+        apod = jnp.pad(apod, ((0, pad), (0, 0)))  # zero apod => zero output
+        rot = jnp.pad(rot, ((0, pad), (0, 0), (0, 0)))
+    return idx, frac, apod, rot, bp
+
+
+def fused_rf_to_envelope(carrier, lpf, idx, frac, apod, rot, rf, *,
+                         decim: int, bp=None, precision: str = "f32",
+                         interpret=None):
+    """Fused RF -> B-mode envelope (demod + DAS beamform + |z|).
+
+    Args:
+      carrier: (n_l, 2) f32 demod carrier (cos / -sin).
+      lpf:  (taps,) f32 decimating FIR.
+      idx:  (n_pix, n_c) int32 floor sample indices.
+      frac / apod: (n_pix, n_c) f32.
+      rot:  (n_pix, n_c, 2) f32 unit phasors.
+      rf:   (n_l, n_c, n_f) RF (any real dtype; cast to f32).
+      bp:   pixel-tile rows (None -> DEFAULT_BP), clamped + padded.
+      precision: "f32" | "bf16" | "f16" matmul-operand precision
+        (f32 accumulate); see repro.core.config.PRECISION_TOLERANCES.
+    Returns:
+      (n_pix, n_f) f32 envelope — feed repro.core.bmode.compress_envelope.
+    """
+    n_pix = idx.shape[0]
+    idx, frac, apod, rot, bp = _pad_tables(idx, frac, apod, rot,
+                                           bp or DEFAULT_BP)
+    env = _k.fused_pipeline_pallas(
+        carrier, jnp.reshape(lpf, (1, -1)), idx, frac, apod, rot,
+        rf.astype(jnp.float32), head="bmode", decim=decim, bp=bp,
+        precision=precision, interpret=auto_interpret(interpret))
+    return env[:n_pix]
+
+
+def fused_rf_to_power(carrier, lpf, idx, frac, apod, rot, wall, rf, *,
+                      decim: int, bp=None, precision: str = "f32",
+                      interpret=None):
+    """Fused RF -> power-doppler R0 (demod + DAS + wall filter + power).
+
+    Same table arguments as `fused_rf_to_envelope`, plus ``wall``: the
+    (kw,) f32 wall-filter taps. Returns (n_pix,) f32 R0 — feed
+    repro.core.doppler.power_compress.
+    """
+    n_pix = idx.shape[0]
+    idx, frac, apod, rot, bp = _pad_tables(idx, frac, apod, rot,
+                                           bp or DEFAULT_BP)
+    r0 = _k.fused_pipeline_pallas(
+        carrier, jnp.reshape(lpf, (1, -1)), idx, frac, apod, rot,
+        rf.astype(jnp.float32), jnp.reshape(wall, (1, -1)),
+        head="power_doppler", decim=decim, bp=bp,
+        precision=precision, interpret=auto_interpret(interpret))
+    return r0[:n_pix, 0]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the fused megakernel (kernel-level allclose).
+
+Standalone re-statement of demod (strided SAME conv) + dynamic DAS
+(gather + lerp + rotate + apodize + channel sum) + the head's tile-local
+half, with no repro.core config dependency — mirrors the other kernel
+packages' ref.py convention. The pipeline-level bit-exactness contract
+is asserted separately against `monolithic_pipeline_fn` in
+tests/test_fused_pipeline.py; this oracle exists so a kernel regression
+localizes to the kernel, not the whole pipeline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _demod_ref(carrier, lpf, rf, decim):
+    n_l, n_c, n_f = rf.shape
+    x = rf.astype(jnp.float32)
+    mixed = x[..., None] * carrier[:, None, None, :]
+    k = lpf.shape[0]
+    n_s = -(-n_l // decim)
+    total = max((n_s - 1) * decim + k - n_l, 0)
+    lo = total // 2
+    m = jnp.pad(mixed, ((lo, total - lo), (0, 0), (0, 0), (0, 0)))
+    acc = jnp.zeros((n_s, n_c, n_f, 2), jnp.float32)
+    for t in range(k):  # ascending tap order — the demod contract
+        acc = acc + lpf[t] * lax.slice_in_dim(
+            m, t, t + (n_s - 1) * decim + 1, stride=decim, axis=0)
+    return acc
+
+
+def _beamform_ref(idx, frac, apod, rot, iq):
+    import jax
+    iq_c = iq.transpose(1, 0, 2, 3)                  # (n_c, n_s, n_f, 2)
+
+    def one_channel(iq_1, idx_1, frac_1, apod_1, rot_1):
+        s0 = jnp.take(iq_1, idx_1, axis=0)           # (n_pix, n_f, 2)
+        s1 = jnp.take(iq_1, idx_1 + 1, axis=0)
+        f = frac_1[:, None, None]
+        v = s0 * (1.0 - f) + s1 * f
+        r = rot_1[:, None, :]
+        v = jnp.stack([v[..., 0] * r[..., 0] - v[..., 1] * r[..., 1],
+                       v[..., 0] * r[..., 1] + v[..., 1] * r[..., 0]],
+                      axis=-1)
+        return v * apod_1[:, None, None]
+
+    per_c = jax.vmap(one_channel, in_axes=(0, 1, 1, 1, 1))(
+        iq_c, idx, frac, apod, rot)                  # (n_c, n_pix, n_f, 2)
+    return per_c.sum(axis=0)
+
+
+def fused_ref(carrier, lpf, idx, frac, apod, rot, rf, *, decim,
+              head="bmode", wall=None):
+    """RF -> (n_pix, n_f) envelope or (n_pix,) R0, pure jnp."""
+    iq = _demod_ref(carrier, lpf, rf, decim)
+    bf = _beamform_ref(idx, frac, apod, rot, iq)     # (n_pix, n_f, 2)
+    if head == "bmode":
+        return jnp.sqrt(bf[..., 0] ** 2 + bf[..., 1] ** 2)
+    k = wall.shape[0]
+    n_fp = bf.shape[1] - k + 1                       # VALID along frames
+    z = jnp.zeros(bf.shape[:1] + (n_fp, 2), jnp.float32)
+    for t in range(k):  # ascending tap order — the wall-filter contract
+        z = z + wall[t] * bf[:, t:t + n_fp, :]
+    return (z[..., 0] ** 2 + z[..., 1] ** 2).sum(axis=1)

@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import jax.experimental.pallas.tpu as pltpu
 
 
@@ -32,6 +33,22 @@ def auto_interpret(interpret: Optional[bool]) -> bool:
 def next_multiple(x: int, m: int) -> int:
     """Smallest multiple of ``m`` >= ``x`` (tile-padding contract)."""
     return ((x + m - 1) // m) * m
+
+
+def block_sample_axis(iq: jnp.ndarray, bs: int) -> jnp.ndarray:
+    """(n_s, n_c, n_f, 2) -> (n_sb, bs, n_c, n_f, 2) sample-axis blocking.
+
+    Zero-pads the sample axis to a multiple of ``bs`` and reshapes it into
+    blocks — the shared contract between the BSR delay-table builder (which
+    indexes sample *blocks*) and the kernel wrappers that consume blocked
+    IQ. Zero padding is exact: padded samples are only ever multiplied by
+    structurally-zero BSR blocks.
+    """
+    n_s = iq.shape[0]
+    pad = next_multiple(n_s, bs) - n_s
+    if pad:
+        iq = jnp.pad(iq, ((0, pad),) + ((0, 0),) * (iq.ndim - 1))
+    return iq.reshape((-1, bs) + iq.shape[1:])
 
 
 def _resolve_compiler_params():

@@ -1,0 +1,162 @@
+"""The fused megakernel's determinism / mixed-precision contract.
+
+Three layers, matching the documented contract
+(docs/kernels.md, repro.core.config.PRECISION_TOLERANCES):
+
+  1. f32 + interpret is BIT-EXACT against the monolithic oracle for
+     both fused heads (bmode, power_doppler) — the fused kernel reuses
+     the reference stage expressions verbatim on tile-resident
+     intermediates, so equality is by construction, not by tolerance.
+     The comparison traces fused span + epilogue under ONE jit, exactly
+     as `UltrasoundPipeline` runs it (a split jit boundary reintroduces
+     1-ulp context drift on XLA:CPU and would test the wrong program).
+  2. bf16/f16 stay inside the per-(precision, modality) rtol/atol
+     bounds of the golden fixtures — the same checked-in images
+     tests/test_golden.py pins, so reduced precision is anchored to
+     yesterday's numerics, not to a freshly computed (possibly
+     co-drifted) oracle.
+  3. The check has teeth: a kernel perturbed past its stated bound
+     FAILS the golden check (negative test via monkeypatched kernel
+     entry point).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from make_goldens import RF_SEED, golden_path  # noqa: E402 (tests/ on path)
+from repro.core import lowering
+from repro.core.config import (Modality, Variant, precision_tolerance,
+                               tiny_config)
+from repro.core.pipeline import (UltrasoundPipeline, init_pipeline,
+                                 monolithic_pipeline_fn)
+from repro.data import synth_rf
+
+FUSED_MODALITIES = (Modality.BMODE, Modality.POWER_DOPPLER)
+MODALITY_IDS = [m.value for m in FUSED_MODALITIES]
+
+
+def _cfg(modality, **kw):
+    return tiny_config(modality=modality, variant=Variant.DYNAMIC,
+                       fusion="fused", **kw)
+
+
+def _fused_image(cfg, rf):
+    """Fused span + global epilogue under one jit (the executed program)."""
+    consts = init_pipeline(cfg)
+    fl = lowering.resolve_fused(cfg, jax.default_backend())
+    return np.asarray(jax.jit(lambda r: fl.apply(cfg, consts, r))(rf))
+
+
+def _oracle_image(cfg, rf):
+    """The f32 monolithic reference for this geometry."""
+    f32 = cfg.with_(fusion="none", precision="f32", fusion_block=None)
+    consts = init_pipeline(f32)
+    fn = monolithic_pipeline_fn(f32)
+    return np.asarray(jax.jit(lambda r: fn(consts, r))(rf))
+
+
+def _golden_image(modality):
+    with np.load(golden_path(modality, Variant.DYNAMIC)) as z:
+        return z["image"], json.loads(str(z["meta"]))
+
+
+def check_against_golden(got, want, precision, modality):
+    """THE golden check: assert `got` within the documented
+    (precision, modality) tolerance of the pinned image `want`."""
+    rtol, atol = precision_tolerance(precision, modality)
+    if rtol == atol == 0.0:
+        ok = np.array_equal(got, np.asarray(want))
+    else:
+        ok = np.allclose(got, want, rtol=rtol, atol=atol)
+    if not ok:
+        d = np.abs(np.asarray(got, np.float64) - np.asarray(want, np.float64))
+        raise AssertionError(
+            f"fused {modality.value}@{precision} violates its contract "
+            f"(rtol={rtol}, atol={atol}): max|d|={d.max():.3e}")
+
+
+@pytest.mark.parametrize("modality", FUSED_MODALITIES, ids=MODALITY_IDS)
+def test_f32_fused_bitexact_vs_monolith(modality):
+    cfg = _cfg(modality)
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    fused = _fused_image(cfg, rf)
+    oracle = _oracle_image(cfg, rf)
+    np.testing.assert_array_equal(fused, oracle, err_msg=(
+        f"f32 fused {modality.value} is not bit-exact against "
+        "monolithic_pipeline_fn — the fused kernel must reuse the "
+        "reference stage expressions verbatim (see docs/kernels.md)"))
+
+
+@pytest.mark.parametrize("bp", [80, 128])
+def test_f32_fused_bitexact_any_block_size(bp):
+    """Tiling must not change the math: the per-tile channel reduce and
+    FIR orders are pinned, so every block size gives the same bits."""
+    cfg = _cfg(Modality.POWER_DOPPLER, fusion_block=bp)
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    np.testing.assert_array_equal(_fused_image(cfg, rf),
+                                  _oracle_image(cfg, rf))
+
+
+@pytest.mark.parametrize("modality", FUSED_MODALITIES, ids=MODALITY_IDS)
+def test_f32_fused_matches_golden(modality):
+    """End-to-end pipeline (plan -> fused lowering) against the pinned
+    fixture — same seed and geometry as tests/test_golden.py."""
+    want, meta = _golden_image(modality)
+    cfg = _cfg(modality)
+    assert meta["config_hash"] == cfg.with_(
+        fusion="none").canonical_hash(), (
+        "golden fixture geometry drifted from the fused test config — "
+        "regenerate tests/goldens/ (tests/make_goldens.py)")
+    rf = jnp.asarray(synth_rf(cfg, seed=RF_SEED))
+    got = np.asarray(jax.block_until_ready(UltrasoundPipeline(cfg)(rf)))
+    check_against_golden(got, want, "f32", modality)
+
+
+@pytest.mark.parametrize("modality", FUSED_MODALITIES, ids=MODALITY_IDS)
+@pytest.mark.parametrize("precision", ["bf16", "f16"])
+def test_reduced_precision_within_contract(precision, modality):
+    want, _ = _golden_image(modality)
+    cfg = _cfg(modality, precision=precision)
+    rf = jnp.asarray(synth_rf(cfg, seed=RF_SEED))
+    got = _fused_image(cfg, rf)
+    check_against_golden(got, want, precision, modality)
+
+
+def test_out_of_tolerance_kernel_fails_golden_check(monkeypatch):
+    """The contract is falsifiable: a kernel drifting past its stated
+    bound must FAIL, not pass on slack tolerances."""
+    from repro.kernels import fused_pipeline as fp
+    modality = Modality.BMODE
+    real = fp.fused_rf_to_envelope
+
+    def drifted(*args, **kw):
+        # Non-uniform drift (a uniform scale would wash out through the
+        # epilogue's normalize_by_max): 4x on alternating pixels is a
+        # ~12 dB structured error, far past every stated bound.
+        env = real(*args, **kw)
+        return env.at[::2].multiply(4.0)
+
+    monkeypatch.setattr(fp, "fused_rf_to_envelope", drifted)
+    want, _ = _golden_image(modality)
+    cfg = _cfg(modality, precision="bf16")
+    rf = jnp.asarray(synth_rf(cfg, seed=RF_SEED))
+    got = _fused_image(cfg, rf)
+    with pytest.raises(AssertionError, match="violates its contract"):
+        check_against_golden(got, want, "bf16", modality)
+
+
+def test_xla_lowerings_refuse_reduced_precision():
+    """Unfused reduced precision must fail loudly at plan time — the
+    f32-only xla references must never silently answer a bf16 ask."""
+    from repro.core.plan import plan_pipeline
+    cfg = tiny_config(modality=Modality.BMODE, variant=Variant.DYNAMIC,
+                      precision="bf16")        # fusion="none"
+    with pytest.raises(ValueError, match="precision"):
+        plan = plan_pipeline(cfg)
+        rf = jnp.asarray(synth_rf(cfg, seed=0))
+        UltrasoundPipeline(cfg, plan=plan)(rf)

@@ -154,6 +154,44 @@ def test_validator_rejects_bad_stage_lowerings_stamp():
                                          "stage_lowerings": {"demod": 3}}})
 
 
+def test_validator_requires_fusion_precision_stamp():
+    """repro-bench-v1 requires the fusion/precision contract columns in
+    every plan stamp — a fused/bf16 row must never be mistakable for an
+    unfused/f32 one because a producer dropped the field."""
+    plan = UltrasoundPipeline(_tiny_cfg()).plan.json_dict()
+    rec = {"kind": "sample", "name": "x", "run": 0, "t_s": 0.1,
+           "plan": plan}
+    validate_record(rec)                         # the real stamp passes
+    assert plan["fusion"] == "none" and plan["precision"] == "f32"
+    assert plan["fusion_group"] is None and plan["fusion_block"] is None
+    for key in ("fusion", "precision"):
+        truncated = {k: v for k, v in plan.items() if k != key}
+        with pytest.raises(SchemaError,
+                           match=f"missing required key '{key}'"):
+            validate_record({**rec, "plan": truncated})
+        with pytest.raises(SchemaError, match=f"{key}: null not allowed"):
+            validate_record({**rec, "plan": {**plan, key: None}})
+    with pytest.raises(SchemaError, match="fusion_block: expected int"):
+        validate_record({**rec, "plan": {**plan, "fusion_block": "128"}})
+    # A fused stamp (group + block set) is valid as-is.
+    fused = {**plan, "fusion": "fused", "precision": "bf16",
+             "fusion_group": "demod+beamform+bmode", "fusion_block": 128}
+    validate_record({**rec, "plan": fused})
+
+
+def test_fused_plan_stamp_validates():
+    """A real fused plan's json_dict passes the schema with the group
+    stamped — wired end to end, not just the hand-built dict above."""
+    from repro.core.plan import plan_pipeline
+    cfg = tiny_config(variant=Variant.DYNAMIC, fusion="fused")
+    plan = plan_pipeline(cfg).json_dict()
+    validate_record({"kind": "sample", "name": "x", "run": 0, "t_s": 0.1,
+                     "plan": plan})
+    assert plan["fusion"] == "fused"
+    assert plan["fusion_group"] == "demod+beamform+bmode"
+    assert set(plan["stage_lowerings"].values()) == {"pallas"}
+
+
 def test_validate_lines_counts_and_empty():
     lines = [json.dumps({"kind": "sample", "name": "x", "run": i,
                          "t_s": 0.1}) for i in range(3)]
