@@ -1,0 +1,140 @@
+"""Throughput regression gate: CI smoke rows vs the checked-in baseline.
+
+`BENCH_cpu.json` is the committed CPU reference (regenerated with the
+commands in its provenance note). CI re-runs the same smoke commands on
+whatever runner it lands on and this gate compares the two, with a
+deliberately loose factor (default 2x) that absorbs runner-to-runner
+variance but still catches the failure mode benchmarks exist to catch:
+a change that silently halves throughput while every correctness test
+stays green.
+
+Two row families are gated:
+
+  * table1 summary rows (``benchmarks.run --fast --json``): matched by
+    ``name``; FAIL when current ``t_avg_s`` exceeds ``factor`` x the
+    baseline's.
+  * multitenant rows (``benchmarks.multitenant`` NDJSON): matched by
+    the sweep cell key (clients, max_batch, max_queue_delay_ms,
+    in_flight); FAIL when current ``acq_per_s`` falls below the
+    baseline's / ``factor``. Gating acq/s per in-flight depth keeps
+    the async scheduler's overlap win (depth 2 > depth 1 in the
+    baseline) from regressing back to synchronous throughput
+    unnoticed.
+
+A baseline row with no current counterpart fails loudly (a renamed or
+dropped row is a silent gate hole); extra current rows are ignored so
+new benchmarks can land before the baseline is regenerated.
+
+  PYTHONPATH=src python -m benchmarks.gate \
+      --baseline BENCH_cpu.json --current BENCH_ci.json \
+      --multitenant MULTITENANT_ci.ndjson
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+MtKey = Tuple[int, int, float, int]
+
+
+def mt_key(rec: dict) -> MtKey:
+    """A multitenant record's sweep-cell identity."""
+    return (rec["clients"], rec["policy"]["max_batch"],
+            rec["policy"]["max_queue_delay_ms"], rec["in_flight"])
+
+
+def gate_table1(baseline: List[dict], current: List[dict], *,
+                factor: float) -> List[str]:
+    """Failures: current table1 rows slower than factor x baseline."""
+    cur = {r["name"]: r for r in current}
+    failures = []
+    for base in baseline:
+        name = base["name"]
+        row = cur.get(name)
+        if row is None:
+            failures.append(f"table1 row {name!r}: missing from current")
+            continue
+        if row["t_avg_s"] > factor * base["t_avg_s"]:
+            failures.append(
+                f"table1 row {name!r}: t_avg_s {row['t_avg_s']:.4f}s > "
+                f"{factor:g}x baseline {base['t_avg_s']:.4f}s")
+    return failures
+
+
+def gate_multitenant(baseline: List[dict], current: List[dict], *,
+                     factor: float) -> List[str]:
+    """Failures: current multitenant cells below baseline / factor."""
+    cur: Dict[MtKey, dict] = {mt_key(r): r for r in current}
+    failures = []
+    for base in baseline:
+        key = mt_key(base)
+        row = cur.get(key)
+        cell = (f"clients={key[0]} max_batch={key[1]} "
+                f"delay_ms={key[2]:g} in_flight={key[3]}")
+        if row is None:
+            failures.append(f"multitenant cell [{cell}]: missing from "
+                            f"current")
+            continue
+        if row["acq_per_s"] < base["acq_per_s"] / factor:
+            failures.append(
+                f"multitenant cell [{cell}]: acq_per_s "
+                f"{row['acq_per_s']:.1f} < baseline "
+                f"{base['acq_per_s']:.1f} / {factor:g}")
+    return failures
+
+
+def run_gate(baseline_path: str, *, current_path: Optional[str] = None,
+             multitenant_path: Optional[str] = None,
+             factor: float = 2.0) -> List[str]:
+    """All gate failures for the given artifact files (empty = pass)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = []
+    if current_path is not None:
+        with open(current_path) as f:
+            current = json.load(f)
+        failures += gate_table1(baseline["results"], current["results"],
+                                factor=factor)
+    mt_base = baseline.get("multitenant", [])
+    if multitenant_path is not None and mt_base:
+        with open(multitenant_path) as f:
+            mt_cur = [json.loads(line) for line in f if line.strip()]
+        mt_cur = [r for r in mt_cur if r.get("kind") == "multitenant"]
+        failures += gate_multitenant(mt_base, mt_cur, factor=factor)
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Compare CI smoke benchmark rows against the "
+                    "checked-in baseline (loose-factor regression gate).")
+    ap.add_argument("--baseline", default="BENCH_cpu.json",
+                    help="committed reference JSON (table1 results + "
+                         "multitenant rows)")
+    ap.add_argument("--current", default=None,
+                    help="benchmarks.run --json artifact to gate")
+    ap.add_argument("--multitenant", default=None,
+                    help="benchmarks.multitenant --ndjson artifact to "
+                         "gate")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="allowed slowdown factor (default 2.0)")
+    args = ap.parse_args()
+    if args.current is None and args.multitenant is None:
+        ap.error("nothing to gate: pass --current and/or --multitenant")
+
+    failures = run_gate(args.baseline, current_path=args.current,
+                        multitenant_path=args.multitenant,
+                        factor=args.factor)
+    for msg in failures:
+        print(f"gate failure: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"gate ok (factor {args.factor:g}, "
+              f"baseline {args.baseline})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,9 +12,18 @@ per-stream deadline-miss rate.
 The policy axis is the Jouppi trade: ``max_batch=1`` is
 dispatch-on-arrival (best latency, no amortization), larger
 ``max_batch`` with a ``max_queue_delay_ms`` bound buys occupancy with
-bounded waiting. Determinism is not on the axis at all — the scheduler
-oracle test pins every cell's outputs to the per-frame monolithic
-reference bit-for-bit.
+bounded waiting. ``--in-flight`` adds the pipelining axis: depth 1 is
+the synchronous launch-block-retire loop, depth >= 2 overlaps host
+coalescing with device execution (the record's ``device_busy_frac`` /
+``overlap_frac`` columns show where the win comes from). Determinism
+is not on any axis — the scheduler oracle test pins every cell's
+outputs to the per-frame monolithic reference bit-for-bit at every
+depth.
+
+All cells share one `repro.core.aot.WarmPool`: each distinct
+(config-group, max_batch) program AOT-compiles once for the whole
+sweep, warm cost lands in the first cell that needs it (``warmup_s``)
+and later cells stamp ``warm_source="pool"``.
 
 NDJSON rows are ``{"kind": "multitenant", ...}`` — schema enforced by
 `repro.bench.schema` (CI validates the smoke artifact with exactly that
@@ -41,7 +50,8 @@ DEFAULT_CLIENTS = (1, 2, 4)
 
 def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
         policies: Sequence[Tuple[int, float]] = DEFAULT_POLICIES, *,
-        fast: bool = False, deadline_ms: Optional[float] = 100.0,
+        in_flights: Sequence[int] = (2,), fast: bool = False,
+        deadline_ms: Optional[float] = 100.0, base_fps: float = 120.0,
         plan_policy: Optional[str] = None, cfg_bmode=None,
         cfg_doppler=None, variant=None) -> Tuple[List[str], List[dict]]:
     """Returns (csv lines, NDJSON-ready records), one per sweep cell.
@@ -49,10 +59,15 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
     ``cfg_bmode`` / ``cfg_doppler`` override the tenant geometries
     (tests and the CI smoke pass tiny configs); the default is the
     streaming benchmark geometry with the Doppler head swapped in for
-    odd tenants.
+    odd tenants. ``in_flights`` sweeps the dispatch-pipelining depth.
+    ``base_fps`` sets the fastest tenant's open-loop arrival rate —
+    raise it far above the service rate to measure the device-bound
+    throughput ceiling (where the in-flight overlap win is visible in
+    ``acq_per_s`` rather than only in ``device_busy_frac``).
     """
     from benchmarks.common import stream_config
     from repro.core import Modality, Variant
+    from repro.core.aot import WarmPool
     from repro.launch.scheduler import (BatchPolicy, make_mixed_streams,
                                         serve_multitenant)
 
@@ -63,30 +78,36 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
         cfg_doppler = cfg_bmode.with_(modality=Modality.DOPPLER)
     n_frames = 8 if fast else 24
 
+    pool = WarmPool()
     lines, records = [], []
     for n in client_counts:
         streams = make_mixed_streams(n, cfg_bmode, cfg_doppler,
+                                     base_fps=base_fps,
                                      n_frames=n_frames,
                                      deadline_ms=deadline_ms)
         for max_batch, delay_ms in policies:
-            stats = serve_multitenant(
-                streams, policy=BatchPolicy(max_batch, delay_ms),
-                plan_policy=plan_policy)
-            rec = {"kind": "multitenant", **stats}
-            records.append(rec)
-            lat, occ = stats["latency"], stats["occupancy"]
-            worst_p95 = max(s["latency"]["p95_s"]
-                            for s in stats["per_stream"].values())
-            lines.append(
-                f"{stats['name']},{1e6 / stats['acq_per_s']:.1f},"
-                f"clients={n};max_batch={max_batch};"
-                f"delay_ms={delay_ms:g};"
-                f"mbps={stats['sustained_mbps']:.2f};"
-                f"fps={stats['fps']:.2f};"
-                f"p50_ms={lat['p50_s'] * 1e3:.2f};"
-                f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
-                f"fill={occ['mean_fill']:.2f};"
-                f"miss_rate={stats['deadline_miss_rate']:.3f}")
+            for in_flight in in_flights:
+                stats = serve_multitenant(
+                    streams, policy=BatchPolicy(max_batch, delay_ms),
+                    in_flight=in_flight, plan_policy=plan_policy,
+                    pool=pool)
+                rec = {"kind": "multitenant", **stats}
+                records.append(rec)
+                lat, occ = stats["latency"], stats["occupancy"]
+                worst_p95 = max(s["latency"]["p95_s"]
+                                for s in stats["per_stream"].values())
+                lines.append(
+                    f"{stats['name']},{1e6 / stats['acq_per_s']:.1f},"
+                    f"clients={n};max_batch={max_batch};"
+                    f"delay_ms={delay_ms:g};in_flight={in_flight};"
+                    f"mbps={stats['sustained_mbps']:.2f};"
+                    f"fps={stats['fps']:.2f};"
+                    f"p50_ms={lat['p50_s'] * 1e3:.2f};"
+                    f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
+                    f"fill={occ['mean_fill']:.2f};"
+                    f"busy={stats['device_busy_frac']:.2f};"
+                    f"overlap={stats['overlap_frac']:.2f};"
+                    f"miss_rate={stats['deadline_miss_rate']:.3f}")
     return lines, records
 
 
@@ -104,10 +125,23 @@ def main() -> None:
     ap.add_argument("--queue-delay-ms", type=float, default=5.0,
                     help="single policy cell: max queue delay "
                          "(with --max-batch)")
+    ap.add_argument("--in-flight", default="2",
+                    help="comma-separated dispatch-pipelining depths to "
+                         "sweep (1 = synchronous; default 2)")
     ap.add_argument("--deadline-ms", type=float, default=100.0,
                     help="per-frame completion budget (miss-rate metric)")
+    ap.add_argument("--base-fps", type=float, default=120.0,
+                    help="fastest tenant's open-loop arrival rate; far "
+                         "above the service rate = device-bound cells "
+                         "(overlap win shows in acq_per_s)")
     ap.add_argument("--ndjson", metavar="PATH", default=None,
                     help="write one multitenant record per line")
+    ap.add_argument("--merge-into", metavar="PATH", default=None,
+                    help="merge the sweep's records into an existing "
+                         "benchmarks.run --json artifact under its "
+                         "'multitenant' key (regenerates the "
+                         "benchmarks/gate.py baseline; the command is "
+                         "appended to the file's provenance note)")
     ap.add_argument("--plan", default=None,
                     choices=["fixed", "heuristic", "autotune"],
                     help="variant-resolution policy (repro.core.plan)")
@@ -120,6 +154,8 @@ def main() -> None:
     # Fail on an unwritable telemetry path now, not after the sweep.
     if args.ndjson:
         open(args.ndjson, "a").close()
+    if args.merge_into:
+        open(args.merge_into).close()   # must already exist (run --json)
 
     from repro.core import Modality, Variant, tiny_config
     variant = Variant(args.variant) if args.variant else None
@@ -136,11 +172,13 @@ def main() -> None:
                      if args.clients else DEFAULT_CLIENTS)
     policies = ([(args.max_batch, args.queue_delay_ms)]
                 if args.max_batch is not None else DEFAULT_POLICIES)
+    in_flights = [int(x) for x in args.in_flight.split(",")]
 
-    lines, records = run(client_counts, policies, fast=args.fast,
-                         deadline_ms=args.deadline_ms,
-                         plan_policy=args.plan, cfg_bmode=cfg_bmode,
-                         cfg_doppler=cfg_doppler, variant=variant)
+    lines, records = run(client_counts, policies, in_flights=in_flights,
+                         fast=args.fast, deadline_ms=args.deadline_ms,
+                         base_fps=args.base_fps, plan_policy=args.plan,
+                         cfg_bmode=cfg_bmode, cfg_doppler=cfg_doppler,
+                         variant=variant)
     print("name,us_per_acq,derived")
     for line in lines:
         print(line)
@@ -150,6 +188,16 @@ def main() -> None:
         with open(args.ndjson, "w") as f:
             for rec in records:
                 f.write(json.dumps(rec) + "\n")
+
+    if args.merge_into:
+        with open(args.merge_into) as f:
+            doc = json.load(f)
+        doc["multitenant"] = records
+        doc.setdefault("provenance", []).append(
+            "python -m benchmarks.multitenant " + " ".join(sys.argv[1:]))
+        with open(args.merge_into, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -200,7 +200,9 @@ def main() -> None:
             write_json(args.json, t1,
                        extra={"stream": stream_records,
                               "deadline_ms": args.deadline_ms,
-                              "plan_policy": args.plan})
+                              "plan_policy": args.plan,
+                              "provenance": ["python -m benchmarks.run "
+                                             + " ".join(sys.argv[1:])]})
         if args.ndjson:
             write_ndjson(args.ndjson, t1, extra_records=stream_records)
 

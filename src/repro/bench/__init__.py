@@ -1,9 +1,11 @@
 from repro.bench.harness import (  # noqa: F401
     BenchResult,
+    InFlightStats,
     LatencyStats,
     OccupancyStats,
     bench_callable,
     bench_stages,
+    in_flight_stats,
     latency_stats,
     occupancy_stats,
     write_json,
@@ -20,6 +22,7 @@ from repro.bench.resources import (  # noqa: F401
 
 __all__ = [
     "BenchResult",
+    "InFlightStats",
     "LatencyStats",
     "NvmlEnergyMeter",
     "OccupancyStats",
@@ -27,6 +30,7 @@ __all__ = [
     "ResourceStats",
     "bench_callable",
     "bench_stages",
+    "in_flight_stats",
     "latency_stats",
     "occupancy_stats",
     "write_json",

@@ -165,6 +165,48 @@ def occupancy_stats(batch_sizes: List[int],
         full_rate=float((a == max_batch).mean()))
 
 
+@dataclasses.dataclass
+class InFlightStats:
+    """Distribution of in-flight dispatch depth at launch time.
+
+    One sample per dispatched batch: how many dispatches (including the
+    new one) were in flight the moment it launched, against the
+    scheduler's ``in_flight`` ring bound. ``mean_depth`` near 1.0 means
+    the window behaved synchronously (no overlap to win); ``full_rate``
+    is the fraction of launches that filled the ring — sustained
+    full-ring launches mean the device, not the host, is the
+    bottleneck.
+    """
+
+    dispatches: int
+    in_flight: int                        # the ring bound (the knob)
+    mean_depth: float
+    p50_depth: float
+    max_depth: int
+    full_rate: float                      # fraction launched at the bound
+
+    def json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def in_flight_stats(depths: List[int], in_flight: int) -> InFlightStats:
+    """Summarize per-launch in-flight depth samples (scheduler
+    invariant: the bounded ring can never exceed ``in_flight`` —
+    asserted here, like `occupancy_stats`, so a ring bug surfaces in
+    telemetry generation)."""
+    a = np.asarray(depths, dtype=np.int64)
+    assert a.size > 0, "in_flight_stats needs at least one dispatch"
+    assert in_flight >= 1, in_flight
+    assert a.min() >= 1 and a.max() <= in_flight, (
+        f"in-flight depth outside 1..{in_flight}: {a.min()}..{a.max()}")
+    return InFlightStats(
+        dispatches=int(a.size), in_flight=int(in_flight),
+        mean_depth=float(a.mean()),
+        p50_depth=float(np.percentile(a, 50.0)),
+        max_depth=int(a.max()),
+        full_rate=float((a == in_flight).mean()))
+
+
 # ---------------------------------------------------------------------------
 # Results
 # ---------------------------------------------------------------------------

@@ -63,6 +63,11 @@ PLAN_KEYS: Dict[str, str] = {
     "fusion_group": "str?", "fusion_block": "int?",
     "config_key": "str", "geometry_key": "str", "provenance": "str",
     "devices": "int", "mesh_shape": "list?",
+    # Serving-context stamp: how the program reached the device. Null
+    # outside a serving window; `warm_start` is "aot" (compiled this
+    # process) or "pool" (reused a WarmPool entry), `in_flight` is the
+    # scheduler's dispatch-ring bound the row ran under.
+    "warm_start": "str?", "in_flight": "int?",
 }
 
 RESOURCE_KEYS: Dict[str, str] = {
@@ -76,6 +81,12 @@ OCCUPANCY_KEYS: Dict[str, str] = {
     "mean_occupancy": "real", "p50_occupancy": "real",
     "min_occupancy": "int", "max_occupancy": "int",
     "mean_fill": "real", "full_rate": "real",
+}
+
+# InFlightStats.json_dict — the dispatch ring's depth distribution.
+INFLIGHT_KEYS: Dict[str, str] = {
+    "dispatches": "int", "in_flight": "int", "mean_depth": "real",
+    "p50_depth": "real", "max_depth": "int", "full_rate": "real",
 }
 
 # Per-stream block inside a multitenant record (one per client).
@@ -113,10 +124,14 @@ RECORD_KEYS: Dict[str, Dict[str, str]] = {
     },
     "multitenant": {
         "name": "str", "clients": "int", "policy": "dict",
-        "wall_s": "real", "acquisitions": "int", "frames": "int",
+        "in_flight": "int", "wall_s": "real", "warmup_s": "real",
+        "acquisitions": "int", "frames": "int",
         "sustained_mbps": "real", "fps": "real", "acq_per_s": "real",
-        "deadline_miss_rate": "real", "latency": "dict",
+        "deadline_miss_rate": "real",
+        "device_busy_s": "real", "device_busy_frac": "real",
+        "overlap_frac": "real", "latency": "dict",
         "queue_delay": "dict", "occupancy": "dict",
+        "in_flight_occupancy": "dict",
         "per_stream": "dict", "groups": "dict", "resources": "dict",
     },
 }
@@ -191,6 +206,13 @@ def validate_record(rec: dict, path: str = "record") -> str:
 
     if kind == "multitenant":
         _check(rec["policy"], MT_POLICY_KEYS, f"{path}.policy")
+        _check(rec["in_flight_occupancy"], INFLIGHT_KEYS,
+               f"{path}.in_flight_occupancy")
+        for frac in ("device_busy_frac", "overlap_frac"):
+            if not 0.0 <= rec[frac] <= 1.0:
+                raise SchemaError(
+                    f"{path}.{frac}: expected a fraction in [0, 1], "
+                    f"got {rec[frac]!r}")
         if not rec["per_stream"]:
             raise SchemaError(f"{path}.per_stream: empty")
         for sid, s in rec["per_stream"].items():
@@ -203,9 +225,12 @@ def validate_record(rec: dict, path: str = "record") -> str:
         for gid, g in rec["groups"].items():
             gpath = f"{path}.groups[{gid}]"
             _check(g, {"plan": "dict", "streams": "list",
-                       "batches": "int", "occupancy": "dict"}, gpath)
+                       "batches": "int", "occupancy": "dict",
+                       "warmup_s": "real", "warm_source": "str",
+                       "in_flight": "dict"}, gpath)
             _check(g["plan"], PLAN_KEYS, f"{gpath}.plan")
             _check(g["occupancy"], OCCUPANCY_KEYS, f"{gpath}.occupancy")
+            _check(g["in_flight"], INFLIGHT_KEYS, f"{gpath}.in_flight")
     return kind
 
 

@@ -22,6 +22,15 @@ from repro.core.config import (  # noqa: F401
     paper_config,
     tiny_config,
 )
+from repro.core.aot import (  # noqa: F401
+    AotProgram,
+    WarmPool,
+    aot_warm,
+    compile_cache_dir,
+    configure_persistent_cache,
+    set_compile_cache_dir,
+    warm_pool,
+)
 from repro.core.lowering import (  # noqa: F401
     Lowering,
     apply_stage,
@@ -70,6 +79,14 @@ __all__ = [
     "config_hash",
     "paper_config",
     "tiny_config",
+    # AOT warm start + persistent compilation cache
+    "AotProgram",
+    "WarmPool",
+    "aot_warm",
+    "compile_cache_dir",
+    "configure_persistent_cache",
+    "set_compile_cache_dir",
+    "warm_pool",
     # operator lowerings
     "Lowering",
     "apply_stage",

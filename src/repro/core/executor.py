@@ -12,6 +12,19 @@ Public API
     batches many times on the default device. The batch axis carries the
     logical "batch" sharding name, so under an active mesh binding
     (runtime/sharding.py) it composes with the LM half's meshes.
+
+Both executors expose three dispatch granularities for the serving tier:
+``__call__`` (synchronous semantics, caller blocks when it reads),
+``call_padded`` (fixed-shape ragged dispatch, valid rows sliced off —
+the one-batch-at-a-time scheduler entry), and ``dispatch_padded`` (the
+ASYNC form of call_padded: returns the *padded, unsynchronized* device
+array immediately so the host keeps coalescing and launching while the
+device executes — the caller slices valid rows after it drains; see
+repro.launch.scheduler's in-flight ring). Donation stays safe across
+all three: every dispatch consumes a freshly-built padded batch buffer,
+never a caller-retained array. `install_aot` (fed by repro.core.aot)
+pins an ahead-of-time-compiled executable for one padded shape; the
+padded entry points prefer it over re-entering jit.
 `ShardedExecutor`  — the same contract, data-parallel over an explicit
     1-D ``jax.sharding.Mesh`` of local devices ("data" axis): consts are
     replicated, the acquisition batch axis is split via `NamedSharding`,
@@ -76,7 +89,7 @@ def _mapped_graph_fn(cfg: UltrasoundConfig):
     return mapped
 
 
-def _pad_rows(rf_batch: jnp.ndarray, pad_to: int) -> tuple:
+def _pad_rows(rf_batch, pad_to: int) -> tuple:
     """Zero-pad a ragged batch up to ``pad_to`` rows; returns (batch, b).
 
     Shared by the executors' ``call_padded`` fixed-shape dispatch: the
@@ -85,6 +98,12 @@ def _pad_rows(rf_batch: jnp.ndarray, pad_to: int) -> tuple:
     compiled program — a recompile per occupancy would stall the serving
     loop. Pad rows are zeros; per-example mapping (vmap / lax.map) keeps
     them from influencing the valid rows, and callers slice them off.
+
+    Host (numpy) batches pad on the host: the concatenate then costs a
+    memcpy instead of an op-by-op XLA program per distinct occupancy —
+    which would be exactly the hidden first-dispatch compile the AOT
+    warm-start contract forbids. Device arrays keep the jnp path (their
+    pad program caches after one occupancy-shaped compile).
     """
     b = rf_batch.shape[0]
     if b < 1:
@@ -95,8 +114,9 @@ def _pad_rows(rf_batch: jnp.ndarray, pad_to: int) -> tuple:
             "never coalesce past its policy's max_batch")
     if b == pad_to:
         return rf_batch, b
-    fill = jnp.zeros((pad_to - b,) + rf_batch.shape[1:], rf_batch.dtype)
-    return jnp.concatenate([rf_batch, fill]), b
+    xp = np if isinstance(rf_batch, np.ndarray) else jnp
+    fill = xp.zeros((pad_to - b,) + rf_batch.shape[1:], rf_batch.dtype)
+    return xp.concatenate([rf_batch, fill]), b
 
 
 def _resolve_donate(donate: Optional[bool], plan) -> bool:
@@ -129,10 +149,32 @@ class BatchedExecutor:
 
         self.donate = _resolve_donate(donate, self.plan)
         self._fn = jax.jit(run, donate_argnums=(1,) if self.donate else ())
+        self._aot: dict = {}              # pad_to -> AOT-compiled executable
 
     def __call__(self, rf_batch: jnp.ndarray) -> jnp.ndarray:
         """(B, n_l, n_c, n_f) RF batch -> (B, *image_shape)."""
         return self._fn(self.consts, rf_batch)
+
+    def install_aot(self, pad_to: int, compiled) -> None:
+        """Pin an AOT-compiled executable for the ``pad_to`` dispatch
+        shape (built by `repro.core.aot.aot_warm` — lower+compile,
+        never a live first-dispatch compilation)."""
+        self._aot[pad_to] = compiled
+
+    def dispatch_padded(self, rf_batch, pad_to: int) -> jnp.ndarray:
+        """Async fixed-shape dispatch: the PADDED, UNSYNCED output.
+
+        The in-flight serving entry: pads to ``pad_to`` rows, launches
+        (through the AOT executable when one is installed), and returns
+        the device array without blocking or slicing — the caller
+        tracks how many rows are valid and slices after it drains
+        (`jax.block_until_ready` / ``.is_ready()``). Donation-safe:
+        the launched buffer is the freshly-padded batch, never an array
+        the caller still holds.
+        """
+        rf_batch, _ = _pad_rows(rf_batch, pad_to)
+        fn = self._aot.get(pad_to, self._fn)
+        return fn(self.consts, jnp.asarray(rf_batch))
 
     def call_padded(self, rf_batch: jnp.ndarray,
                     pad_to: int) -> jnp.ndarray:
@@ -144,8 +186,8 @@ class BatchedExecutor:
         program, then slices the valid rows off the result. Pad rows
         cost compute, never a recompile.
         """
-        rf_batch, b = _pad_rows(rf_batch, pad_to)
-        out = self._fn(self.consts, rf_batch)
+        b = rf_batch.shape[0]
+        out = self.dispatch_padded(rf_batch, pad_to)
         return out[:b] if b != pad_to else out
 
     @property
@@ -222,6 +264,7 @@ class ShardedExecutor:
             in_shardings=(self._consts_sharding, self._batch_sharding),
             out_shardings=self._batch_sharding,
             donate_argnums=(1,) if self.donate else ())
+        self._aot: dict = {}              # pad_to -> AOT-compiled executable
 
     def _pad(self, rf_batch: jnp.ndarray) -> tuple:
         b = rf_batch.shape[0]
@@ -256,6 +299,30 @@ class ShardedExecutor:
                 "for remainder-padded one-shot execution")
         return self._fn(self.consts, rf_batch)
 
+    def install_aot(self, pad_to: int, compiled) -> None:
+        """Pin an AOT-compiled SPMD executable for the ``pad_to`` shape
+        (built by `repro.core.aot.aot_warm`)."""
+        self._aot[pad_to] = compiled
+
+    def dispatch_padded(self, rf_batch, pad_to: int) -> jnp.ndarray:
+        """Async fixed-shape dispatch: the PADDED, UNSYNCED device array.
+
+        Sharded counterpart of `BatchedExecutor.dispatch_padded`:
+        ``pad_to`` must be a device multiple (one SPMD shape per mesh).
+        The padded batch is committed to the batch sharding explicitly
+        so the AOT executable — which, unlike jit, does not re-resolve
+        placements — always sees its compiled-for layout.
+        """
+        if pad_to % self.n_devices:
+            raise ValueError(
+                f"dispatch_padded needs pad_to % n_devices == 0 "
+                f"(got pad_to={pad_to}, n_devices={self.n_devices})")
+        rf_batch, _ = _pad_rows(rf_batch, pad_to)
+        rf_batch = jax.device_put(jnp.asarray(rf_batch),
+                                  self._batch_sharding)
+        fn = self._aot.get(pad_to, self._fn)
+        return fn(self.consts, rf_batch)
+
     def call_padded(self, rf_batch: jnp.ndarray,
                     pad_to: int) -> jnp.ndarray:
         """Fixed-shape dispatch of a ragged batch (B <= pad_to rows).
@@ -269,8 +336,8 @@ class ShardedExecutor:
             raise ValueError(
                 f"call_padded needs pad_to % n_devices == 0 "
                 f"(got pad_to={pad_to}, n_devices={self.n_devices})")
-        rf_batch, b = _pad_rows(rf_batch, pad_to)
-        out = self._fn(self.consts, rf_batch)
+        b = rf_batch.shape[0]
+        out = self.dispatch_padded(rf_batch, pad_to)
         return out[:b] if b != pad_to else out
 
     @property

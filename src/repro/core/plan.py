@@ -184,6 +184,16 @@ class PipelinePlan:
     # with_devices() so every telemetry record names its topology.
     devices: int = 1
     mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None
+    # Serving-mode stamps (with_serving): how the program got warm
+    # (None = live first-dispatch compile, "aot" = ahead-of-time
+    # lower+compile this window — repro.core.aot — possibly against the
+    # persistent compilation cache, "pool" = reused an already-warm
+    # WarmPool executor) and the scheduler's in-flight dispatch depth
+    # (None = offline / one-at-a-time semantics). Neither is a
+    # planning decision — like devices/mesh_shape they record the
+    # execution context so every NDJSON row stays attributable.
+    warm_start: Optional[str] = None
+    in_flight: Optional[int] = None
 
     def __post_init__(self):
         assert self.variant.concrete, "plan must carry a concrete variant"
@@ -218,6 +228,20 @@ class PipelinePlan:
             mesh_shape = (("data", devices),)
         return dataclasses.replace(self, devices=devices,
                                    mesh_shape=mesh_shape)
+
+    def with_serving(self, *, warm_start: Optional[str],
+                     in_flight: Optional[int]) -> "PipelinePlan":
+        """This plan, stamped with its serving execution context.
+
+        Like `with_devices`, a pure telemetry stamp: the scheduler
+        records how the group's program was warmed ("aot" / "pool")
+        and the window's in-flight dispatch depth so overlap numbers
+        stay attributable. Decision axes unchanged.
+        """
+        if in_flight is not None and in_flight < 1:
+            raise ValueError(f"in_flight must be >= 1 (got {in_flight})")
+        return dataclasses.replace(self, warm_start=warm_start,
+                                   in_flight=in_flight)
 
     def matches(self, cfg: UltrasoundConfig) -> bool:
         """True iff this plan was built for ``cfg``'s geometry.
@@ -259,6 +283,8 @@ class PipelinePlan:
             "mesh_shape": ([[name, extent] for name, extent
                             in self.mesh_shape]
                            if self.mesh_shape is not None else None),
+            "warm_start": self.warm_start,
+            "in_flight": self.in_flight,
         }
         if self.autotune_t_s is not None:
             d["autotune_t_s"] = {k: v for k, v in self.autotune_t_s}

@@ -42,8 +42,9 @@ Multi-tenant serving (`--multitenant`) runs N open-loop probe clients
 through the dynamic-batching scheduler (`repro.launch.scheduler`):
 per-config queues, same-config-hash coalescing under a
 max_batch / max_queue_delay_ms policy, fixed padded dispatch shapes,
-per-stream latency + queue-delay + occupancy telemetry. Design and
-knobs: docs/serving.md.
+AOT warm-start compilation (repro.core.aot), pipelined dispatch to
+``--in-flight`` depth, per-stream latency + queue-delay + occupancy +
+device-overlap telemetry. Design and knobs: docs/serving.md.
 
   PYTHONPATH=src python -m repro.launch.serve --ultrasound \
       --batch 4 --batches 32 --depth 2 --deadline-ms 50
@@ -432,6 +433,9 @@ def main() -> None:
                          "frame before a partial batch flushes")
     ap.add_argument("--frames", type=int, default=24,
                     help="multitenant: acquisitions per client")
+    ap.add_argument("--in-flight", type=int, default=2,
+                    help="multitenant: dispatch-pipelining depth (1 = "
+                         "synchronous launch-block-retire)")
     args = ap.parse_args()
 
     if args.variant == "auto" and args.plan == "fixed":
@@ -471,6 +475,7 @@ def main() -> None:
         stats = serve_multitenant(
             streams,
             policy=BatchPolicy(args.max_batch, args.queue_delay_ms),
+            in_flight=args.in_flight,
             devices=cli_devices(), plan_policy=args.plan)
         lat, qd = stats["latency"], stats["queue_delay"]
         occ = stats["occupancy"]
@@ -478,7 +483,13 @@ def main() -> None:
               f"({stats['frames']} frames) from {stats['clients']} "
               f"clients in {stats['wall_s']:.2f}s = "
               f"{stats['sustained_mbps']:.2f} MB/s, "
-              f"{stats['fps']:.1f} FPS")
+              f"{stats['fps']:.1f} FPS "
+              f"(warm-up {stats['warmup_s']:.2f}s ahead of window)")
+        ifo = stats["in_flight_occupancy"]
+        print(f"overlap: in_flight={stats['in_flight']} "
+              f"mean_depth={ifo['mean_depth']:.2f} "
+              f"device_busy={stats['device_busy_frac']:.2f} "
+              f"overlap_frac={stats['overlap_frac']:.2f}")
         print(f"latency: p50={lat['p50_s'] * 1e3:.2f}ms "
               f"p95={lat['p95_s'] * 1e3:.2f}ms "
               f"p99={lat['p99_s'] * 1e3:.2f}ms; queue delay "

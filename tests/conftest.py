@@ -17,6 +17,20 @@ def _sandbox_consts_cache(tmp_path_factory):
     yield
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _sandbox_compile_cache(tmp_path_factory):
+    """Keep the XLA persistent compilation cache inside the session.
+
+    Same discipline as the consts cache: AOT warm-ups must never
+    populate (or hit) the user's `~/.cache/repro/xla` from a test run —
+    the warm-start tests assert cold-vs-warm timing differences that a
+    pre-populated cache would erase.
+    """
+    from repro.core import set_compile_cache_dir
+    set_compile_cache_dir(str(tmp_path_factory.mktemp("compile-cache")))
+    yield
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

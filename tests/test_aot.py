@@ -1,0 +1,217 @@
+"""AOT warm-start compilation + persistent compilation cache.
+
+Three contracts (repro.core.aot):
+
+  * correctness — an AOT-compiled padded program (`aot_warm` installing
+    `jax.jit(...).lower().compile()` on the executor) produces outputs
+    BIT-IDENTICAL to the jit dispatch path it replaces; the warm pool
+    groups specs exactly like the scheduler and never recompiles a key
+    it already holds.
+  * accounting — warm-up cost is measured (`compile_s` / `warmup_s`)
+    and lands in the serving stats of the window that paid it; pool
+    hits charge zero and stamp ``warm_source="pool"``.
+  * warm start — the persistent compilation cache (env-configurable
+    dir, sandboxed by conftest) is actually written, and a FRESH
+    process pointed at a populated cache compiles cheaper and serves
+    its first dispatch without a compile spike (within 3x the
+    steady-state p50) — the subprocess test at the bottom.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Modality, Variant, tiny_config
+from repro.core.executor import BatchedExecutor
+from repro.data import synth_rf
+from repro.launch.scheduler import BatchPolicy, StreamSpec, serve_multitenant
+
+BURST = 1e9
+
+
+def test_aot_warm_bit_identical_to_jit_path():
+    """The AOT executable replaces jit dispatch without moving a bit."""
+    from repro.core.aot import aot_warm
+
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    jit_eng = BatchedExecutor(cfg)          # never AOT-warmed
+    aot_eng = BatchedExecutor(cfg)
+    prog = aot_warm(aot_eng, 4)
+    assert prog.compile_s > 0.0
+    assert prog.warmup_s >= prog.compile_s
+    assert prog.pad_to == 4 and prog.devices == 1
+    assert 4 in aot_eng._aot                # executable installed
+
+    rf = jnp.asarray(np.stack([synth_rf(cfg, seed=s) for s in range(3)]))
+    want = np.asarray(jit_eng.call_padded(rf, 4))
+    got = np.asarray(aot_eng.call_padded(rf, 4))
+    assert got.dtype == want.dtype and got.shape == want.shape
+    assert np.array_equal(got, want)
+    # Other pad shapes fall back to the jit path transparently.
+    assert np.array_equal(np.asarray(aot_eng.call_padded(rf, 3)),
+                          np.asarray(jit_eng.call_padded(rf, 3)))
+
+
+def test_cache_dir_env_resolution(monkeypatch, tmp_path):
+    """REPRO_COMPILE_CACHE_DIR follows the consts-cache discipline:
+    unset -> user cache dir, "" / "0" -> disabled, path -> path."""
+    import repro.core.aot as aot
+
+    sandbox = aot.compile_cache_dir()       # conftest's tmp dir
+    try:
+        monkeypatch.delenv("REPRO_COMPILE_CACHE_DIR", raising=False)
+        aot._cache_resolved = False
+        assert aot.compile_cache_dir().endswith(
+            os.path.join(".cache", "repro", "xla"))
+        for off in ("", "0"):
+            monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", off)
+            aot._cache_resolved = False
+            assert aot.compile_cache_dir() is None
+        monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path))
+        aot._cache_resolved = False
+        assert aot.compile_cache_dir() == str(tmp_path)
+    finally:
+        aot.set_compile_cache_dir(sandbox)
+
+
+def test_persistent_cache_written_by_aot_warm():
+    """aot_warm against the sandboxed cache dir leaves entries on disk
+    (the thing the fresh-process warm start depends on)."""
+    from repro.core.aot import aot_warm, compile_cache_dir
+
+    d = compile_cache_dir()
+    assert d is not None                    # conftest sandboxed it
+    cfg = tiny_config(nz=24, variant=Variant.SPARSE)   # unseen geometry
+    aot_warm(BatchedExecutor(cfg), 2)
+    assert os.path.isdir(d) and len(os.listdir(d)) > 0
+
+
+def test_warm_pool_groups_like_scheduler_and_never_recompiles():
+    from repro.core.aot import warm_pool
+
+    cfg_b = tiny_config(variant=Variant.DYNAMIC)
+    cfg_d = tiny_config(modality=Modality.DOPPLER, variant=Variant.DYNAMIC)
+    streams = [StreamSpec("b", cfg_b, fps=BURST, n_frames=2),
+               StreamSpec("b2", cfg_b, fps=BURST, n_frames=2),  # same cfg
+               StreamSpec("d", cfg_d, fps=BURST, n_frames=2)]
+    pool = warm_pool(streams, max_batch=2)
+    assert len(pool) == 2                   # b/b2 coalesce, d is its own
+    entries = {k: pool.get(k) for k in pool.keys()}
+    # Extending with the same specs is a no-op: same WarmEntry objects.
+    warm_pool(streams, max_batch=2, pool=pool)
+    assert {k: pool.get(k) for k in pool.keys()} == entries
+    # A new padded shape is a new program, not a collision.
+    warm_pool(streams[:1], max_batch=4, pool=pool)
+    assert len(pool) == 3
+    with pytest.raises(ValueError):
+        warm_pool(streams, max_batch=0)
+
+
+def test_serve_charges_warmup_once_then_pool_is_free():
+    """First window with an empty pool pays (and stamps) the AOT cost
+    and publishes the warm executors; the next window rides the pool:
+    zero warm cost, warm_source='pool', identical outputs."""
+    from repro.core.aot import WarmPool
+
+    cfg = tiny_config(variant=Variant.DYNAMIC)
+    streams = [StreamSpec("s", cfg, fps=BURST, n_frames=3, seed=7)]
+    policy = BatchPolicy(max_batch=2, max_queue_delay_ms=1.0)
+
+    pool = WarmPool()
+    cold = serve_multitenant(streams, policy=policy, in_flight=2,
+                             collect_outputs=True, pool=pool)
+    assert cold["warmup_s"] > 0.0
+    assert len(pool) == 1                   # published back
+    (g,) = cold["groups"].values()
+    assert g["warm_source"] == "aot" and g["warmup_s"] > 0.0
+    assert g["plan"]["warm_start"] == "aot"
+    assert g["plan"]["in_flight"] == 2
+
+    warm = serve_multitenant(streams, policy=policy, in_flight=2,
+                             collect_outputs=True, pool=pool)
+    assert warm["warmup_s"] == 0.0
+    (g,) = warm["groups"].values()
+    assert g["warm_source"] == "pool" and g["warmup_s"] == 0.0
+    assert g["plan"]["warm_start"] == "pool"
+    for a, b in zip(cold["outputs"]["s"], warm["outputs"]["s"]):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fresh-process warm start via the persistent compilation cache.
+# Run the same probe twice with one shared cache dir: the first process
+# compiles cold and populates it; the second must compile cheaper and
+# serve its first dispatch without a compile spike.
+# ---------------------------------------------------------------------------
+
+_WARM_START_SCRIPT = r"""
+import json
+import time
+import numpy as np
+import jax
+from repro.core import BatchedExecutor, Variant, tiny_config
+from repro.core.aot import aot_warm, compile_cache_dir
+from repro.data import synth_rf
+
+cfg = tiny_config(variant=Variant.DYNAMIC)
+eng = BatchedExecutor(cfg)
+prog = aot_warm(eng, 4)          # REPRO_COMPILE_CACHE_DIR set by the test
+rf = np.stack([synth_rf(cfg, seed=s) for s in range(2)])
+times = []
+for _ in range(21):
+    t0 = time.perf_counter()
+    jax.block_until_ready(eng.dispatch_padded(rf, 4))
+    times.append(time.perf_counter() - t0)
+print(json.dumps({
+    "compile_s": prog.compile_s, "warmup_s": prog.warmup_s,
+    "cache_dir": compile_cache_dir(),
+    "first_s": times[0], "steady_p50_s": float(np.median(times[1:])),
+}))
+"""
+
+
+@pytest.fixture(scope="module")
+def warm_start_runs(tmp_path_factory):
+    cache = str(tmp_path_factory.mktemp("xla-warm-start"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["REPRO_COMPILE_CACHE_DIR"] = cache
+
+    def run():
+        proc = subprocess.run(
+            [sys.executable, "-c", _WARM_START_SCRIPT], env=env,
+            capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    cold = run()
+    populated = len(os.listdir(cache))
+    warm = run()
+    return cold, warm, populated
+
+
+def test_cold_process_populates_persistent_cache(warm_start_runs):
+    cold, _, populated = warm_start_runs
+    assert cold["cache_dir"] is not None
+    assert populated > 0
+
+
+def test_fresh_process_starts_warm_from_persistent_cache(warm_start_runs):
+    """The acceptance bar: with a populated cache, a fresh process's
+    AOT compile is cheaper than the cold one, and its first dispatch
+    shows no compile spike (within 3x the steady-state p50)."""
+    cold, warm, _ = warm_start_runs
+    assert warm["compile_s"] < cold["compile_s"], (
+        f"cache hit not cheaper: warm {warm['compile_s']:.3f}s vs "
+        f"cold {cold['compile_s']:.3f}s")
+    assert warm["first_s"] <= 3.0 * warm["steady_p50_s"], (
+        f"first dispatch spiked: {warm['first_s'] * 1e3:.2f}ms vs "
+        f"steady p50 {warm['steady_p50_s'] * 1e3:.2f}ms")

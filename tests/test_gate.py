@@ -1,0 +1,84 @@
+"""Throughput regression gate (benchmarks/gate.py): pure-logic tests.
+
+The gate's job is narrow — compare CI smoke rows against the committed
+baseline with a loose factor — so the tests pin exactly the decisions
+that matter: a slow row fails, a within-factor row passes, a baseline
+row MISSING from the current artifact fails loudly (a renamed row must
+never open a silent hole), extra current rows are ignored, and
+multitenant cells match on the full sweep key including the in-flight
+depth (so a depth-2 overlap regression cannot hide behind a healthy
+depth-1 cell).
+"""
+
+import json
+
+from benchmarks.gate import (gate_multitenant, gate_table1, mt_key,
+                             run_gate)
+
+
+def _t1(name, t):
+    return {"name": name, "t_avg_s": t}
+
+
+def _mt(clients, max_batch, delay_ms, in_flight, acq_per_s):
+    return {"clients": clients,
+            "policy": {"max_batch": max_batch,
+                       "max_queue_delay_ms": delay_ms},
+            "in_flight": in_flight, "acq_per_s": acq_per_s,
+            "kind": "multitenant"}
+
+
+def test_gate_table1_factor_and_missing():
+    base = [_t1("a", 1.0), _t1("b", 1.0), _t1("c", 1.0)]
+    cur = [_t1("a", 1.9),            # within 2x -> ok
+           _t1("b", 2.1),            # beyond 2x -> fail
+           _t1("extra", 99.0)]       # not in baseline -> ignored
+    failures = gate_table1(base, cur, factor=2.0)
+    assert len(failures) == 2
+    assert any("'b'" in f and "t_avg_s" in f for f in failures)
+    assert any("'c'" in f and "missing" in f for f in failures)
+    assert gate_table1(base[:1], cur[:1], factor=2.0) == []
+
+
+def test_gate_multitenant_keys_on_full_cell_identity():
+    base = [_mt(2, 4, 5.0, 1, 100.0), _mt(2, 4, 5.0, 2, 200.0)]
+    # depth-1 cell healthy, depth-2 cell regressed to depth-1 speed:
+    # the per-depth key must catch it.
+    cur = [_mt(2, 4, 5.0, 1, 95.0), _mt(2, 4, 5.0, 2, 90.0)]
+    failures = gate_multitenant(base, cur, factor=2.0)
+    assert len(failures) == 1
+    assert "in_flight=2" in failures[0] and "acq_per_s" in failures[0]
+    # A missing cell fails; an extra current cell does not.
+    failures = gate_multitenant(base, cur[:1] + [_mt(8, 4, 5.0, 1, 1.0)],
+                                factor=2.0)
+    assert len(failures) == 1 and "missing" in failures[0]
+    assert mt_key(base[0]) != mt_key(base[1])
+
+
+def test_run_gate_end_to_end(tmp_path):
+    baseline = {"results": [_t1("a", 1.0)],
+                "multitenant": [_mt(2, 4, 5.0, 2, 100.0)]}
+    (tmp_path / "base.json").write_text(json.dumps(baseline))
+    (tmp_path / "cur.json").write_text(
+        json.dumps({"results": [_t1("a", 1.5)]}))
+    with open(tmp_path / "mt.ndjson", "w") as f:
+        f.write(json.dumps(_mt(2, 4, 5.0, 2, 80.0)) + "\n")
+        f.write(json.dumps({"kind": "summary"}) + "\n")   # skipped
+
+    assert run_gate(str(tmp_path / "base.json"),
+                    current_path=str(tmp_path / "cur.json"),
+                    multitenant_path=str(tmp_path / "mt.ndjson")) == []
+
+    (tmp_path / "cur.json").write_text(
+        json.dumps({"results": [_t1("a", 2.5)]}))
+    failures = run_gate(str(tmp_path / "base.json"),
+                        current_path=str(tmp_path / "cur.json"),
+                        multitenant_path=str(tmp_path / "mt.ndjson"),
+                        factor=2.0)
+    assert len(failures) == 1 and "'a'" in failures[0]
+
+    # No multitenant baseline rows -> the NDJSON side is skipped.
+    (tmp_path / "base2.json").write_text(
+        json.dumps({"results": [_t1("a", 1.0)]}))
+    assert run_gate(str(tmp_path / "base2.json"),
+                    multitenant_path=str(tmp_path / "mt.ndjson")) == []

@@ -81,19 +81,77 @@ def test_scaling_emitter_validates():
     # repro.bench.schema SCALING_ci.ndjson --require-multidevice).
 
 
-def test_multitenant_emitter_validates():
+@pytest.fixture(scope="module")
+def mt_records():
+    """One real multitenant sweep (in-flight 1 and 2) for schema tests."""
     from benchmarks import multitenant
     cfg = _tiny_cfg()
     _, records = multitenant.run(
-        client_counts=(2,), policies=((2, 1.0),), fast=True,
-        cfg_bmode=cfg)
-    assert len(records) == 1
-    rec = records[0]
-    assert validate_record(rec) == "multitenant"
-    assert rec["clients"] == 2
-    assert set(rec["per_stream"]) == {"probe0", "probe1"}
-    for g in rec["groups"].values():
-        assert g["plan"]["variant"] == "dynamic"
+        client_counts=(2,), policies=((2, 1.0),), in_flights=(1, 2),
+        fast=True, cfg_bmode=cfg)
+    return records
+
+
+def test_multitenant_emitter_validates(mt_records):
+    assert len(mt_records) == 2
+    for rec, depth in zip(mt_records, (1, 2)):
+        assert validate_record(rec) == "multitenant"
+        assert rec["clients"] == 2
+        assert rec["in_flight"] == depth
+        assert rec["warmup_s"] >= 0.0
+        assert 0.0 <= rec["overlap_frac"] <= rec["device_busy_frac"] <= 1.0
+        assert set(rec["per_stream"]) == {"probe0", "probe1"}
+        for g in rec["groups"].values():
+            assert g["plan"]["variant"] == "dynamic"
+            assert g["plan"]["in_flight"] == depth
+            assert g["warm_source"] in ("aot", "pool")
+    # The sweep shares one warm pool: only the first cell pays AOT.
+    assert mt_records[0]["warmup_s"] > 0.0
+    assert mt_records[1]["warmup_s"] == 0.0
+
+
+def test_validator_rejects_multitenant_overlap_violations(mt_records):
+    """The new overlap/warm-start columns are REQUIRED and bounded — a
+    producer that drops or corrupts one fails loudly."""
+    import copy
+
+    base = mt_records[1]
+    validate_record(base)
+
+    rec = copy.deepcopy(base)
+    del rec["in_flight"]
+    with pytest.raises(SchemaError, match="missing required key"):
+        validate_record(rec)
+
+    for key in ("warmup_s", "device_busy_s", "device_busy_frac",
+                "overlap_frac", "in_flight_occupancy"):
+        rec = copy.deepcopy(base)
+        del rec[key]
+        with pytest.raises(SchemaError, match="missing required key"):
+            validate_record(rec)
+
+    rec = copy.deepcopy(base)
+    rec["device_busy_frac"] = 1.5
+    with pytest.raises(SchemaError, match=r"fraction in \[0, 1\]"):
+        validate_record(rec)
+
+    rec = copy.deepcopy(base)
+    del rec["in_flight_occupancy"]["mean_depth"]
+    with pytest.raises(SchemaError, match="mean_depth"):
+        validate_record(rec)
+
+    gid = next(iter(base["groups"]))
+    for key in ("warmup_s", "warm_source", "in_flight"):
+        rec = copy.deepcopy(base)
+        del rec["groups"][gid][key]
+        with pytest.raises(SchemaError, match="missing required key"):
+            validate_record(rec)
+
+    # The serving-context plan stamp is part of PLAN_KEYS everywhere.
+    rec = copy.deepcopy(base)
+    del rec["groups"][gid]["plan"]["warm_start"]
+    with pytest.raises(SchemaError, match="warm_start"):
+        validate_record(rec)
 
 
 def test_validator_rejects_bad_records():
