@@ -1,54 +1,100 @@
-"""Before/after roofline comparison: baseline vs optimized dry-run sweeps.
+"""Before/after comparison of two benchmark sweep artifacts.
 
-  PYTHONPATH=src python -m benchmarks.compare_sweeps [--mesh single]
+Compares the table1 rows of two ``benchmarks.run --json`` artifacts by
+row name, reporting each matched cell's mean with its bootstrap CI, the
+speedup as a *ratio CI* (`repro.bench.stats.ci_ratio` over the rows'
+committed ``run_means`` — a speedup whose interval straddles 1.0 is
+labelled noise, not a win), and the worst-stage % -of-roofline when the
+rows carry a stamp — so "2x faster" and "2x closer to the roof" are
+distinguishable claims.
+
+  PYTHONPATH=src python -m benchmarks.compare_sweeps \
+      --baseline BENCH_before.json --current BENCH_after.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import os
+from typing import Dict, List, Optional, Tuple
 
-RES = os.path.join(os.path.dirname(__file__), "results")
-
-
-def load(name):
-    with open(os.path.join(RES, name)) as f:
-        return {(r["arch"], r["shape"], r["mesh"]): r for r in json.load(f)}
+from repro.bench.stats import ci_ratio
 
 
-def bound(r):
-    t = r["roofline"]
-    return max(t["t_compute"], t["t_memory"], t["t_collective"])
+def load_rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)["results"]}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="single")
-    ap.add_argument("--baseline", default="dryrun_baseline.json")
-    ap.add_argument("--optimized", default="dryrun_optimized.json")
+def row_runs(row: dict) -> List[float]:
+    """A row's level-one run means (falls back to the single mean)."""
+    ci = row.get("ci") or {}
+    means = ci.get("run_means")
+    if isinstance(means, list) and means:
+        return [float(m) for m in means]
+    return [float(row["t_avg_s"])]
+
+
+def ci_str(row: dict) -> str:
+    ci = row.get("ci") or {}
+    if "ci_lo" in ci and "ci_hi" in ci and ci.get("n_runs", 1) > 1:
+        return (f"{row['t_avg_s'] * 1e3:.2f}ms "
+                f"[{ci['ci_lo'] * 1e3:.2f}, {ci['ci_hi'] * 1e3:.2f}]")
+    return f"{row['t_avg_s'] * 1e3:.2f}ms"
+
+
+def worst_roofline(row: dict) -> Optional[Tuple[str, float]]:
+    """(stage, pct) of the stage furthest below its roofline floor."""
+    roof = row.get("roofline")
+    if not roof:
+        return None
+    stage = min(roof, key=lambda s: roof[s]["pct_roofline"])
+    return stage, roof[stage]["pct_roofline"]
+
+
+def compare(baseline: Dict[str, dict],
+            current: Dict[str, dict]) -> List[str]:
+    lines = ["| cell | before (CI) | after (CI) | speedup (CI) | "
+             "verdict | worst-stage roof |",
+             "|" + "---|" * 6]
+    for name in sorted(baseline):
+        base = baseline[name]
+        cur = current.get(name)
+        if cur is None:
+            lines.append(f"| {name} | {ci_str(base)} | — | — | "
+                         f"missing | — |")
+            continue
+        # speedup = t_before / t_after: resample the ratio with the
+        # sides swapped so > 1 means faster.
+        r = ci_ratio(row_runs(cur), row_runs(base))
+        if r.ci_lo > 1.0:
+            verdict = "faster"
+        elif r.ci_hi < 1.0:
+            verdict = "SLOWER"
+        else:
+            verdict = "noise"
+        roof = worst_roofline(cur) or worst_roofline(base)
+        roof_txt = (f"{roof[0]} {100.0 * roof[1]:.0f}%" if roof else "—")
+        lines.append(
+            f"| {name} | {ci_str(base)} | {ci_str(cur)} | "
+            f"{r.ratio:.2f}x [{r.ci_lo:.2f}, {r.ci_hi:.2f}] | "
+            f"{verdict} | {roof_txt} |")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Compare two benchmarks.run --json artifacts cell "
+                    "by cell with ratio CIs.")
+    ap.add_argument("--baseline", required=True,
+                    help="'before' benchmarks.run --json artifact")
+    ap.add_argument("--current", required=True,
+                    help="'after' benchmarks.run --json artifact")
     args = ap.parse_args()
 
-    base = load(args.baseline)
-    opt = load(args.optimized)
-    print("| arch | shape | bound before | bound after | speedup | "
-          "dom before -> after |")
-    print("|---|---|---|---|---|---|")
-    total_b = total_o = 0.0
-    for key in sorted(base):
-        if key[2] != args.mesh:
-            continue
-        rb, ro = base[key], opt.get(key)
-        if rb["status"] != "ok" or not ro or ro["status"] != "ok":
-            continue
-        tb, to = bound(rb), bound(ro)
-        total_b += tb
-        total_o += to
-        print(f"| {key[0]} | {key[1]} | {tb:9.3f}s | {to:9.3f}s | "
-              f"{tb / to:6.1f}x | {rb['dominant'][2:]} -> "
-              f"{ro['dominant'][2:]} |")
-    print(f"\nsum-of-bounds: {total_b:.1f}s -> {total_o:.1f}s "
-          f"({total_b / total_o:.2f}x)")
+    for line in compare(load_rows(args.baseline),
+                        load_rows(args.current)):
+        print(line)
 
 
 if __name__ == "__main__":

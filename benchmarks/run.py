@@ -78,8 +78,25 @@ def main() -> None:
                     help="exact paper geometry (slow on CPU)")
     ap.add_argument("--fast", action="store_true",
                     help="fewer timed runs")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="repeat each table1 cell's timed window this "
+                         "many times; > 1 makes the summary's `ci` "
+                         "block a real bootstrap interval over the "
+                         "per-repeat means (use >= 3 for gate "
+                         "baselines; 1 = degenerate zero-width CI)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="stamp per-stage roofline context (bytes/FLOPs "
+                         "from compiled HLO vs calibrated machine "
+                         "peaks) into the table1 summary rows")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write BENCH_*.json-compatible results")
+    ap.add_argument("--merge-into", metavar="PATH", default=None,
+                    help="merge this run's table1 rows into an existing "
+                         "benchmarks.run --json artifact (rows with the "
+                         "same name are replaced; the command is "
+                         "appended to the file's provenance note) — "
+                         "how the committed baseline accumulates its "
+                         "pallas/fused cells")
     ap.add_argument("--ndjson", metavar="PATH", default=None,
                     help="write per-sample / per-stage NDJSON telemetry")
     ap.add_argument("--deadline-ms", type=float, default=100.0,
@@ -120,6 +137,8 @@ def main() -> None:
     args = ap.parse_args()
     runs = 2 if args.fast else 5
     deadline_s = args.deadline_ms / 1e3
+    if args.repeats < 1:
+        ap.error("--repeats must be >= 1")
 
     from repro.core import Variant
     variant = Variant(args.variant) if args.variant else None
@@ -145,6 +164,8 @@ def main() -> None:
     for path in (args.json, args.ndjson):
         if path:
             open(path, "a").close()
+    if args.merge_into:
+        open(args.merge_into).close()   # must already exist (run --json)
 
     from benchmarks import stream_throughput, table1_variants, \
         table2_portability, table3_comparison
@@ -153,8 +174,9 @@ def main() -> None:
     t1 = []
     if on("table1") or on("table3"):   # table3 derives from table1 rows
         t1, t1_skipped = table1_variants.run(
-            paper_scale=args.paper, runs=runs,
+            paper_scale=args.paper, runs=runs, repeats=args.repeats,
             deadline_s=deadline_s, stage_breakdown=True,
+            roofline=args.roofline,
             policy=args.plan, variant=variant,
             lowering=args.lowering, fusion=args.fusion,
             precision=args.precision)
@@ -205,6 +227,20 @@ def main() -> None:
                                              + " ".join(sys.argv[1:])]})
         if args.ndjson:
             write_ndjson(args.ndjson, t1, extra_records=stream_records)
+
+    if args.merge_into:
+        import json
+        with open(args.merge_into) as f:
+            doc = json.load(f)
+        fresh = {r.name: r.json_dict() for r in t1}
+        doc["results"] = ([row for row in doc.get("results", [])
+                           if row.get("name") not in fresh]
+                          + list(fresh.values()))
+        doc.setdefault("provenance", []).append(
+            "python -m benchmarks.run " + " ".join(sys.argv[1:]))
+        with open(args.merge_into, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

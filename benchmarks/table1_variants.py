@@ -44,8 +44,10 @@ VARIANTS = [Variant.DYNAMIC, Variant.CNN, Variant.SPARSE]
 
 
 def run(paper_scale: bool = False, runs: int = 5,
+        repeats: int = 1,
         deadline_s: float = None,
         stage_breakdown: bool = False,
+        roofline: bool = False,
         policy: str = "fixed",
         variant: Optional[Variant] = None,
         lowering: Optional[str] = None,
@@ -108,11 +110,16 @@ def run(paper_scale: bool = False, runs: int = 5,
                 res = bench_callable(
                     name, None, (pipe.consts, rf),
                     input_bytes=cfg.input_bytes, runs=runs,
-                    deadline_s=deadline_s,
+                    repeats=repeats, deadline_s=deadline_s,
                     jitted=pipe.jitted, plan=plan)
                 if stage_breakdown:
                     res.stage_breakdown = bench_stages(
                         cfg, rf, runs=min(runs, 3))
+                if roofline and stage_breakdown and fus == "none":
+                    # Fused spans time as one unit; the per-stage HLO
+                    # cost split does not apply to them.
+                    from benchmarks.roofline_report import attach_roofline
+                    attach_roofline(res, cfg)
                 results.append(res)
     return results, skipped
 

@@ -1,0 +1,298 @@
+"""HTML benchmark trend report: per-cell sparklines, CI bands, verdicts.
+
+The statistical gate (`benchmarks.gate`) answers "did this commit
+regress?"; this module answers the question a binary gate cannot —
+"where has this cell been drifting?". Each invocation appends the
+current run's per-cell means + bootstrap intervals + gate verdicts to
+an NDJSON *history* file (one record per cell per run, carried between
+CI runs as a restored artifact) and renders the whole history as a
+self-contained HTML page: one row per gated cell with an inline SVG
+sparkline of the mean over time inside its CI band, the latest
+mean ± CI, the gate verdict badge, and the worst-stage % -of-roofline
+when the row carries a stamp. No external assets — the page is a
+single file CI can upload as an artifact.
+
+  PYTHONPATH=src python -m benchmarks.trend_report \
+      --baseline BENCH_cpu.json --current BENCH_ci.json \
+      --current BENCH_lowering.json --multitenant MULTITENANT_ci.ndjson \
+      --history TREND_history.ndjson --out TREND_report.html
+"""
+
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.gate import (GateRecordError, _gate_cell, mt_key, t1_key)
+
+SPARK_W, SPARK_H, PAD = 240, 42, 4
+
+
+def worst_roofline(row: dict) -> Optional[Tuple[str, float]]:
+    roof = row.get("roofline")
+    if not roof:
+        return None
+    stage = min(roof, key=lambda s: roof[s]["pct_roofline"])
+    return stage, roof[stage]["pct_roofline"]
+
+
+def _ci_of(rec: dict, metric: str, ci_key: str) -> Tuple[float, float,
+                                                         float]:
+    ci = rec.get(ci_key) or {}
+    mean = float(ci.get("mean", rec.get(metric, 0.0)))
+    return (mean, float(ci.get("ci_lo", mean)),
+            float(ci.get("ci_hi", mean)))
+
+
+def collect_cells(baseline: dict, current_rows: List[dict],
+                  mt_current: List[dict], *,
+                  factor: float) -> List[dict]:
+    """One record per gated cell: identity, latest stats, verdict."""
+    cells: List[dict] = []
+
+    cur: Dict = {}
+    for rec in current_rows:
+        try:
+            cur[t1_key(rec)] = rec
+        except GateRecordError:
+            continue
+    for base in baseline.get("results", []):
+        try:
+            key = t1_key(base)
+        except GateRecordError:
+            continue
+        row = cur.get(key)
+        cell = {"family": "table1", "cell": f"{key[0]} dev={key[1]}"}
+        if row is None:
+            cell.update(verdict="missing", reason="no current row",
+                        mean=None, ci_lo=None, ci_hi=None, roof=None)
+        else:
+            try:
+                dec, _ = _gate_cell(base, row, metric="t_avg_s",
+                                    ci_key="ci", family="table1",
+                                    factor=factor,
+                                    higher_is_better=False)
+                verdict, reason = ("pass" if dec.ok else "FAIL",
+                                   dec.reason)
+            except GateRecordError as e:
+                verdict, reason = "FAIL", str(e)
+            mean, lo, hi = _ci_of(row, "t_avg_s", "ci")
+            cell.update(verdict=verdict, reason=reason, mean=mean,
+                        ci_lo=lo, ci_hi=hi,
+                        roof=worst_roofline(row) or worst_roofline(base))
+        cells.append(cell)
+
+    mt_cur: Dict = {}
+    for rec in mt_current:
+        try:
+            mt_cur[mt_key(rec)] = rec
+        except GateRecordError:
+            continue
+    for base in baseline.get("multitenant", []):
+        try:
+            key = mt_key(base)
+        except GateRecordError:
+            continue
+        row = mt_cur.get(key)
+        cell = {"family": "multitenant",
+                "cell": (f"clients={key[0]} max_batch={key[1]} "
+                         f"delay={key[2]:g}ms in_flight={key[3]}")}
+        if row is None:
+            cell.update(verdict="missing", reason="no current row",
+                        mean=None, ci_lo=None, ci_hi=None, roof=None)
+        else:
+            try:
+                dec, _ = _gate_cell(base, row, metric="acq_per_s",
+                                    ci_key="acq_per_s_ci",
+                                    family="multitenant", factor=factor,
+                                    higher_is_better=True)
+                verdict, reason = ("pass" if dec.ok else "FAIL",
+                                   dec.reason)
+            except GateRecordError as e:
+                verdict, reason = "FAIL", str(e)
+            mean, lo, hi = _ci_of(row, "acq_per_s", "acq_per_s_ci")
+            cell.update(verdict=verdict, reason=reason, mean=mean,
+                        ci_lo=lo, ci_hi=hi, roof=None)
+        cells.append(cell)
+    return cells
+
+
+def append_history(path: str, cells: List[dict], *, ts: float,
+                   label: str) -> List[dict]:
+    """Append this run's cells to the NDJSON history; returns the full
+    history (old + new) for rendering."""
+    history: List[dict] = []
+    try:
+        with open(path) as f:
+            history = [json.loads(line) for line in f if line.strip()]
+    except FileNotFoundError:
+        pass
+    fresh = [{"ts": ts, "label": label, "family": c["family"],
+              "cell": c["cell"], "mean": c["mean"],
+              "ci_lo": c["ci_lo"], "ci_hi": c["ci_hi"],
+              "verdict": c["verdict"]} for c in cells]
+    with open(path, "a") as f:
+        for rec in fresh:
+            f.write(json.dumps(rec) + "\n")
+    return history + fresh
+
+
+_VERDICT_COLOR = {"pass": "#2da44e", "FAIL": "#cf222e",
+                  "missing": "#9a6700"}
+
+
+def sparkline(points: List[dict]) -> str:
+    """Inline SVG: mean polyline inside its CI band, one x per run."""
+    pts = [p for p in points if p.get("mean") is not None]
+    if not pts:
+        return "<svg width='%d' height='%d'></svg>" % (SPARK_W, SPARK_H)
+    los = [p.get("ci_lo", p["mean"]) or p["mean"] for p in pts]
+    his = [p.get("ci_hi", p["mean"]) or p["mean"] for p in pts]
+    lo, hi = min(los), max(his)
+    span = (hi - lo) or max(abs(hi), 1e-12)
+
+    def x(i: int) -> float:
+        n = max(len(pts) - 1, 1)
+        return PAD + (SPARK_W - 2 * PAD) * i / n
+
+    def y(v: float) -> float:
+        return PAD + (SPARK_H - 2 * PAD) * (1.0 - (v - lo) / span)
+
+    band = " ".join(f"{x(i):.1f},{y(h):.1f}"
+                    for i, h in enumerate(his))
+    band += " " + " ".join(f"{x(i):.1f},{y(lo_):.1f}" for i, lo_ in
+                           reversed(list(enumerate(los))))
+    line = " ".join(f"{x(i):.1f},{y(p['mean']):.1f}"
+                    for i, p in enumerate(pts))
+    last = pts[-1]
+    color = _VERDICT_COLOR.get(last.get("verdict", "pass"), "#57606a")
+    dot = (f"<circle cx='{x(len(pts) - 1):.1f}' "
+           f"cy='{y(last['mean']):.1f}' r='2.5' fill='{color}'/>")
+    return (f"<svg width='{SPARK_W}' height='{SPARK_H}' "
+            f"viewBox='0 0 {SPARK_W} {SPARK_H}'>"
+            f"<polygon points='{band}' fill='#0969da22' stroke='none'/>"
+            f"<polyline points='{line}' fill='none' stroke='#0969da' "
+            f"stroke-width='1.2'/>{dot}</svg>")
+
+
+def _fmt(cell: dict) -> str:
+    if cell["mean"] is None:
+        return "—"
+    unit = "ms" if cell["family"] == "table1" else "acq/s"
+    scale = 1e3 if cell["family"] == "table1" else 1.0
+    return (f"{cell['mean'] * scale:.2f} "
+            f"[{cell['ci_lo'] * scale:.2f}, "
+            f"{cell['ci_hi'] * scale:.2f}] {unit}")
+
+
+def render_html(cells: List[dict], history: List[dict], *,
+                factor: float, label: str) -> str:
+    by_cell: Dict[Tuple[str, str], List[dict]] = {}
+    for rec in history:
+        by_cell.setdefault((rec["family"], rec["cell"]), []).append(rec)
+    for series in by_cell.values():
+        series.sort(key=lambda r: r.get("ts", 0.0))
+
+    rows = []
+    for cell in cells:
+        series = by_cell.get((cell["family"], cell["cell"]), [])
+        color = _VERDICT_COLOR.get(cell["verdict"], "#57606a")
+        badge = (f"<span class='badge' style='background:{color}'>"
+                 f"{html.escape(cell['verdict'])}</span>")
+        roof = cell.get("roof")
+        roof_txt = (f"{html.escape(roof[0])} {100 * roof[1]:.0f}%"
+                    if roof else "—")
+        rows.append(
+            "<tr>"
+            f"<td class='mono'>{html.escape(cell['cell'])}</td>"
+            f"<td>{sparkline(series)}</td>"
+            f"<td class='mono'>{html.escape(_fmt(cell))}</td>"
+            f"<td>{badge}</td>"
+            f"<td class='mono'>{roof_txt}</td>"
+            f"<td class='reason'>{html.escape(cell['reason'])}</td>"
+            "</tr>")
+
+    n_fail = sum(1 for c in cells if c["verdict"] == "FAIL")
+    status = (f"{n_fail} FAILING" if n_fail
+              else f"all {len(cells)} cells pass")
+    return f"""<!DOCTYPE html>
+<html><head><meta charset="utf-8">
+<title>benchmark trends — {html.escape(label)}</title>
+<style>
+body {{ font: 14px/1.5 -apple-system, 'Segoe UI', sans-serif;
+       margin: 2em; color: #1f2328; }}
+table {{ border-collapse: collapse; width: 100%; }}
+th, td {{ border-bottom: 1px solid #d0d7de; padding: 4px 10px;
+          text-align: left; vertical-align: middle; }}
+th {{ background: #f6f8fa; }}
+.mono {{ font-family: ui-monospace, monospace; font-size: 12px; }}
+.reason {{ font-size: 12px; color: #57606a; max-width: 28em; }}
+.badge {{ color: #fff; border-radius: 10px; padding: 1px 8px;
+          font-size: 12px; }}
+</style></head><body>
+<h1>Benchmark trends</h1>
+<p>run <b>{html.escape(label)}</b> · gate factor {factor:g}
+(CI-exclusion rule) · {status} · sparkline = mean over runs inside its
+bootstrap CI band (latest dot colored by verdict; time-like cells
+trend down-is-good, throughput cells up-is-good)</p>
+<table>
+<tr><th>cell</th><th>trend</th><th>latest mean [CI]</th>
+<th>verdict</th><th>worst-stage roof</th><th>gate reason</th></tr>
+{''.join(rows)}
+</table></body></html>
+"""
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Append the current benchmark run to the trend "
+                    "history and render the HTML trend report.")
+    ap.add_argument("--baseline", default="BENCH_cpu.json")
+    ap.add_argument("--current", action="append", default=None,
+                    help="benchmarks.run --json artifact (repeatable)")
+    ap.add_argument("--multitenant", default=None,
+                    help="benchmarks.multitenant --ndjson artifact")
+    ap.add_argument("--history", default="TREND_history.ndjson",
+                    help="NDJSON trend history (appended; restore it "
+                         "across CI runs to accumulate the trend)")
+    ap.add_argument("--out", default="TREND_report.html")
+    ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument("--label", default=None,
+                    help="run label in the history/page (default: "
+                         "UTC timestamp)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    current_rows: List[dict] = []
+    for path in args.current or []:
+        with open(path) as f:
+            current_rows += json.load(f)["results"]
+    mt_current: List[dict] = []
+    if args.multitenant:
+        with open(args.multitenant) as f:
+            mt_current = [json.loads(line) for line in f
+                          if line.strip()]
+        mt_current = [r for r in mt_current
+                      if r.get("kind") == "multitenant"]
+
+    ts = time.time()
+    label = args.label or time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                        time.gmtime(ts))
+    cells = collect_cells(baseline, current_rows, mt_current,
+                          factor=args.factor)
+    history = append_history(args.history, cells, ts=ts, label=label)
+    page = render_html(cells, history, factor=args.factor, label=label)
+    with open(args.out, "w") as f:
+        f.write(page)
+    print(f"{args.out}: {len(cells)} cells, "
+          f"{len(history)} history records")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -16,20 +16,34 @@ from repro.bench.resources import (  # noqa: F401
     ResourceMeter,
     ResourceStats,
 )
+from repro.bench.stats import (  # noqa: F401
+    CIStats,
+    GateDecision,
+    RatioCI,
+    bootstrap_ci,
+    ci_ratio,
+    gate_ratio,
+)
 # NDJSON schema validation lives in repro.bench.schema — imported
 # directly (not re-exported here) so `python -m repro.bench.schema`
 # doesn't double-execute the module under runpy.
 
 __all__ = [
     "BenchResult",
+    "CIStats",
+    "GateDecision",
     "InFlightStats",
     "LatencyStats",
     "NvmlEnergyMeter",
     "OccupancyStats",
+    "RatioCI",
     "ResourceMeter",
     "ResourceStats",
     "bench_callable",
     "bench_stages",
+    "bootstrap_ci",
+    "ci_ratio",
+    "gate_ratio",
     "in_flight_stats",
     "latency_stats",
     "occupancy_stats",

@@ -13,6 +13,11 @@ Public API (full methodology reference: docs/benchmarking-methodology.md)
                    model; returns a `BenchResult` carrying the full
                    sample distribution, the resolved `plan` stamp, and
                    measured `ResourceStats` (repro.bench.resources).
+                   `repeats` > 1 repeats the whole timed window and the
+                   result additionally carries a two-level bootstrap
+                   confidence interval over the per-repeat means
+                   (repro.bench.stats; Kalibera & Jones) — the `ci`
+                   stamp the statistical regression gate compares.
 `bench_stages`   — per-stage timing breakdown of the stage graph.
 `BenchResult`    — one benchmark row; `csv()` (frozen legacy format),
                    `json_dict()`, `ndjson_lines()` (summary / sample /
@@ -223,6 +228,14 @@ class BenchResult:
     runs: int
     samples_s: List[float] = dataclasses.field(default_factory=list)
     stats: Optional[LatencyStats] = None
+    # Two-level bootstrap CI over per-repeat means (repro.bench.stats
+    # CIStats.json_dict): {mean, ci_lo, ci_hi, n_runs, run_means, ...}.
+    # n_runs == 1 (no --repeats) is the documented degenerate interval.
+    ci: Optional[dict] = None
+    # Per-repeat sample lists (level-two data behind `ci`); flattened
+    # into samples_s for the legacy distribution columns.
+    run_samples_s: List[List[float]] = dataclasses.field(
+        default_factory=list)
     stage_breakdown: Dict[str, LatencyStats] = dataclasses.field(
         default_factory=dict)
     # Resolved execution plan (PipelinePlan.json_dict()): the exact
@@ -233,6 +246,11 @@ class BenchResult:
     # (ResourceStats.json_dict()): peak_memory_bytes + energy_joules,
     # None where the backend cannot measure them.
     resources: Optional[dict] = None
+    # Stage-graph roofline stamp (benchmarks/roofline_report.py):
+    # per-stage {flops, bytes, t_roof_s, pct_roofline, bound} against
+    # calibrated machine peaks, so the gated number carries its
+    # "% of attainable" context.
+    roofline: Optional[dict] = None
 
     def csv(self) -> str:
         """Legacy one-line CSV — format frozen (paper-table parsers)."""
@@ -255,6 +273,10 @@ class BenchResult:
             d["plan"] = self.plan
         if self.resources is not None:
             d["resources"] = self.resources
+        if self.ci is not None:
+            d["ci"] = self.ci
+        if self.roofline is not None:
+            d["roofline"] = self.roofline
         if self.stats is not None:
             d["latency"] = self.stats.json_dict()
         if self.stage_breakdown:
@@ -316,16 +338,19 @@ def write_json(path: str, results: List["BenchResult"],
 
 
 def _timed_samples(fn_j: Callable, args: tuple, *, warmup: int,
-                   runs: int, meter=None) -> List[float]:
+                   runs: int, meter=None,
+                   start_meter: bool = True) -> List[float]:
     """The paper's §II-E measurement protocol, shared by every bench:
     warm-up iterations excluded from timing, then per-run wall clock with
     device sync (block_until_ready) bracketing each sample. `meter` (a
     ResourceMeter) is started only after the warm-up loop — compilation
     energy/memory never count — and sampled after each run, outside the
-    timed bracket, so metering overhead never pollutes the samples."""
+    timed bracket, so metering overhead never pollutes the samples.
+    `start_meter=False` keeps an already-open metering window running
+    (repeat windows share one window; start() would reset its clock)."""
     for _ in range(warmup):
         jax.block_until_ready(fn_j(*args))
-    if meter is not None:
+    if meter is not None and start_meter:
         meter.start()
     samples: List[float] = []
     for _ in range(runs):
@@ -340,7 +365,7 @@ def _timed_samples(fn_j: Callable, args: tuple, *, warmup: int,
 
 def bench_callable(name: str, fn: Callable, args: tuple, *,
                    input_bytes: int, warmup: int = 2, runs: int = 5,
-                   utilization: float = 0.5,
+                   repeats: int = 1, utilization: float = 0.5,
                    deadline_s: Optional[float] = None,
                    jitted: Optional[Callable] = None,
                    plan=None) -> BenchResult:
@@ -348,24 +373,39 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
 
     Each steady-state run is timed individually (sync'd with
     block_until_ready) so the result carries the full latency
-    distribution, not just T_avg. `plan` (a PipelinePlan or its
-    json_dict) is stamped into the result and every telemetry record,
-    as is the measured `ResourceStats` for the timed window (peak
-    memory + incremental energy, None where unsupported).
+    distribution, not just T_avg. ``repeats`` repeats the whole timed
+    window (warm-up is paid once): each repeat is one *run* in the
+    Kalibera & Jones sense and the result's ``ci`` stamp is the
+    two-level bootstrap confidence interval over the per-repeat means
+    (degenerate zero-width at ``repeats=1`` — no noise estimate is
+    ever invented). `plan` (a PipelinePlan or its json_dict) is
+    stamped into the result and every telemetry record, as is the
+    measured `ResourceStats` for the timed window (peak memory +
+    incremental energy, None where unsupported).
     """
     from repro.bench.resources import ResourceMeter, devices_of
+    from repro.bench.stats import bootstrap_ci
 
+    assert repeats >= 1, repeats
     fn_j = jitted if jitted is not None else jax.jit(fn)
     if plan is not None and not isinstance(plan, dict):
         plan = plan.json_dict()
 
     # Scope the meter to the devices holding the inputs (host-resident
-    # args: fall back to all local); started post-warmup by _timed_samples.
+    # args: fall back to all local); started post-warmup by
+    # _timed_samples. Later repeats skip the warm-up loop (the program
+    # is warm by construction) and keep the same meter running.
     meter = ResourceMeter(devices=devices_of(args))
-    samples = _timed_samples(fn_j, args, warmup=warmup, runs=runs,
-                             meter=meter)
+    run_samples = [_timed_samples(fn_j, args, warmup=warmup, runs=runs,
+                                  meter=meter)]
+    for _ in range(repeats - 1):
+        run_samples.append(_timed_samples(fn_j, args, warmup=0,
+                                          runs=runs, meter=meter,
+                                          start_meter=False))
     resources = meter.stop()
-    t_avg = sum(samples) / runs
+    samples = [t for rs in run_samples for t in rs]
+    t_avg = sum(samples) / len(samples)
+    ci = bootstrap_ci(run_samples)
 
     # peak memory: static analysis of the compiled executable
     peak = 0.0
@@ -383,6 +423,7 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
         mbps=input_bytes / (t_avg * 1e6),
         joules_per_run_model=e_run, peak_mem_gb=peak, runs=runs,
         samples_s=samples, stats=latency_stats(samples, deadline_s),
+        ci=ci.json_dict(), run_samples_s=run_samples,
         plan=plan, resources=resources.json_dict())
 
 

@@ -11,8 +11,12 @@ files with the module CLI instead of ad-hoc inline asserts:
 
 Validation is structural — required keys and JSON types per record
 ``kind``, plus the nested `plan` (PipelinePlan.json_dict), `resources`
-(ResourceStats.json_dict), `latency` (LatencyStats.json_dict), and
-`occupancy` (OccupancyStats.json_dict) stamps. ``None`` is legal
+(ResourceStats.json_dict), `latency` (LatencyStats.json_dict),
+`occupancy` (OccupancyStats.json_dict), `ci` / `acq_per_s_ci`
+(CIStats.json_dict — required on summary and multitenant records so
+the statistical gate always has an interval, degenerate when no
+repeats were run), and `roofline` (per-stage % -of-attainable, when
+stamped) blocks. ``None`` is legal
 exactly where the producers document "not measurable on this backend"
 (energy off-NVML, budget_s without a deadline) — a missing *key* is
 always an error, so a producer that silently drops a column fails CI
@@ -50,6 +54,23 @@ LATENCY_KEYS: Dict[str, str] = {
     "n": "int", "mean_s": "real", "std_s": "real", "p50_s": "real",
     "p95_s": "real", "p99_s": "real", "jitter_s": "real",
     "budget_s": "real?", "miss_rate": "real",
+}
+
+# CIStats.json_dict (repro.bench.stats): the two-level bootstrap
+# confidence interval the statistical regression gate compares.
+# `run_means` is the level-one data — committed baselines must carry it
+# so a later gate can bootstrap a ratio CI against fresh runs.
+CI_KEYS: Dict[str, str] = {
+    "mean": "real", "ci_lo": "real", "ci_hi": "real", "n_runs": "int",
+    "confidence": "real", "n_boot": "int", "seed": "int",
+    "method": "str", "run_means": "list",
+}
+
+# Per-stage roofline stamp (benchmarks/roofline_report.py): analytic
+# bytes/FLOPs from the compiled HLO vs calibrated machine peaks.
+ROOFLINE_STAGE_KEYS: Dict[str, str] = {
+    "flops": "real", "bytes": "real", "t_measured_s": "real",
+    "t_roof_s": "real", "pct_roofline": "real", "bound": "str",
 }
 
 PLAN_KEYS: Dict[str, str] = {
@@ -103,7 +124,7 @@ RECORD_KEYS: Dict[str, Dict[str, str]] = {
     "summary": {
         "name": "str", "t_avg_s": "real", "fps": "real", "mbps": "real",
         "joules_per_run_model": "real", "peak_mem_gb": "real",
-        "runs": "int", "latency": "dict",
+        "runs": "int", "latency": "dict", "ci": "dict",
     },
     "sample": {"name": "str", "run": "int", "t_s": "real"},
     "stage": {"name": "str", "stage": "str", **LATENCY_KEYS},
@@ -127,7 +148,7 @@ RECORD_KEYS: Dict[str, Dict[str, str]] = {
         "in_flight": "int", "wall_s": "real", "warmup_s": "real",
         "acquisitions": "int", "frames": "int",
         "sustained_mbps": "real", "fps": "real", "acq_per_s": "real",
-        "deadline_miss_rate": "real",
+        "acq_per_s_ci": "dict", "deadline_miss_rate": "real",
         "device_busy_s": "real", "device_busy_frac": "real",
         "overlap_frac": "real", "latency": "dict",
         "queue_delay": "dict", "occupancy": "dict",
@@ -169,6 +190,35 @@ def _check_latency(lat: dict, path: str) -> None:
                           f"p99={lat['p99_s']})")
 
 
+def _check_ci(ci: dict, path: str) -> None:
+    _check(ci, CI_KEYS, path)
+    if not (ci["ci_lo"] <= ci["mean"] <= ci["ci_hi"]):
+        raise SchemaError(
+            f"{path}: interval does not contain its point estimate "
+            f"(ci_lo={ci['ci_lo']}, mean={ci['mean']}, "
+            f"ci_hi={ci['ci_hi']})")
+    if ci["n_runs"] < 1:
+        raise SchemaError(f"{path}.n_runs: expected >= 1, "
+                          f"got {ci['n_runs']}")
+    if len(ci["run_means"]) != ci["n_runs"]:
+        raise SchemaError(
+            f"{path}.run_means: {len(ci['run_means'])} entries but "
+            f"n_runs={ci['n_runs']} — a baseline without its level-one "
+            f"data cannot be re-bootstrapped")
+
+
+def _check_roofline(roof: dict, path: str) -> None:
+    if not roof:
+        raise SchemaError(f"{path}: empty")
+    for stage, row in roof.items():
+        if not isinstance(row, dict):
+            raise SchemaError(f"{path}[{stage}]: expected dict, got "
+                              f"{type(row).__name__}")
+        _check(row, ROOFLINE_STAGE_KEYS, f"{path}[{stage}]")
+        if row["pct_roofline"] < 0.0:
+            raise SchemaError(f"{path}[{stage}].pct_roofline: negative")
+
+
 def validate_record(rec: dict, path: str = "record") -> str:
     """Validate one NDJSON record; returns its kind, raises SchemaError.
 
@@ -195,6 +245,10 @@ def validate_record(rec: dict, path: str = "record") -> str:
                     f"({name!r})")
     if "resources" in rec and rec["resources"] is not None:
         _check(rec["resources"], RESOURCE_KEYS, f"{path}.resources")
+    if "ci" in rec and rec["ci"] is not None:
+        _check_ci(rec["ci"], f"{path}.ci")
+    if "roofline" in rec and rec["roofline"] is not None:
+        _check_roofline(rec["roofline"], f"{path}.roofline")
     if kind == "stage":
         _check_latency(rec, path)
     elif "latency" in rec and rec["latency"] is not None:
@@ -206,6 +260,7 @@ def validate_record(rec: dict, path: str = "record") -> str:
 
     if kind == "multitenant":
         _check(rec["policy"], MT_POLICY_KEYS, f"{path}.policy")
+        _check_ci(rec["acq_per_s_ci"], f"{path}.acq_per_s_ci")
         _check(rec["in_flight_occupancy"], INFLIGHT_KEYS,
                f"{path}.in_flight_occupancy")
         for frac in ("device_busy_frac", "overlap_frac"):

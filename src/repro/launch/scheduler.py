@@ -399,6 +399,7 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     from repro.bench.harness import (in_flight_stats, latency_stats,
                                      occupancy_stats)
     from repro.bench.resources import ResourceMeter
+    from repro.bench.stats import bootstrap_ci
     from repro.core.aot import WarmEntry, aot_warm
 
     if not streams:
@@ -593,6 +594,11 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
         "sustained_mbps": total_bytes / (wall * 1e6),
         "fps": total_frames / wall,
         "acq_per_s": acqs / wall,
+        # One serving window = one run: a degenerate (zero-width)
+        # interval. benchmarks/multitenant.py --repeats replaces this
+        # with the bootstrap CI over repeated windows; the schema
+        # requires the stamp either way so the gate always has one.
+        "acq_per_s_ci": bootstrap_ci([acqs / wall]).json_dict(),
         "deadline_miss_rate": (misses / with_budget if with_budget
                                else 0.0),
         "device_busy_s": device_busy_s,

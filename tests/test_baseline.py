@@ -1,0 +1,80 @@
+"""The committed benchmark baseline (BENCH_cpu.json) is gate-worthy.
+
+Tier-1 guard on the artifact every CI gate decision depends on: the
+rows are schema-valid summary/multitenant records, they carry real
+bootstrap intervals (``--repeats >= 3`` — a baseline without run-level
+data silently degrades every gate verdict to the mean-only rule), the
+provenance note records the exact regeneration commands, the sweep
+covers the default, pallas-lowering and fused-precision cells, and the
+baseline self-gates at factor 1.0 (a baseline that cannot pass against
+itself would fail every commit)."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.gate import run_gate
+from repro.bench.schema import validate_record
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_cpu.json")
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def test_table1_rows_schema_valid_with_real_intervals(baseline):
+    rows = baseline["results"]
+    assert len(rows) >= 9          # 3 variants x 3 modalities minimum
+    for row in rows:
+        assert validate_record({"kind": "summary", **row}) == "summary"
+        ci = row["ci"]
+        assert ci["n_runs"] >= 3, (
+            f"{row['name']}: baseline needs --repeats >= 3 for a real "
+            f"interval, got n_runs={ci['n_runs']}")
+        assert len(ci["run_means"]) == ci["n_runs"]
+
+
+def test_multitenant_rows_schema_valid_with_real_intervals(baseline):
+    rows = baseline["multitenant"]
+    assert rows
+    for row in rows:
+        assert validate_record(row) == "multitenant"
+        assert row["acq_per_s_ci"]["n_runs"] >= 3, row["name"]
+
+
+def test_sweep_covers_lowering_and_fusion_cells(baseline):
+    names = [r["name"] for r in baseline["results"]]
+    assert len(names) == len(set(names))         # keys are unique
+    assert any("/xla" in n for n in names)
+    assert any("/pallas" in n and "fused" not in n for n in names), (
+        "no pallas-lowering cell in the baseline")
+    assert any("fused@bf16" in n for n in names), (
+        "no fused bf16 cell in the baseline")
+    depths = {r["in_flight"] for r in baseline["multitenant"]}
+    assert {1, 2} <= depths                      # overlap win is gated
+
+
+def test_provenance_records_regeneration_commands(baseline):
+    prov = baseline["provenance"]
+    assert prov and all(p.startswith("python -m benchmarks.")
+                        for p in prov)
+    assert any("--repeats 3" in p for p in prov)
+    assert any("benchmarks.multitenant" in p for p in prov)
+
+
+def test_baseline_self_gates_at_factor_one(baseline, tmp_path):
+    """Identical data on both sides must pass at factor 1.0: real
+    run_means resample to an interval containing 1.0, degenerate rows
+    compare equal. If this fails the gate would fail every commit."""
+    mt_path = tmp_path / "mt.ndjson"
+    with open(mt_path, "w") as f:
+        for rec in baseline["multitenant"]:
+            f.write(json.dumps(rec) + "\n")
+    failures = run_gate(BASELINE, current_path=BASELINE,
+                        multitenant_path=str(mt_path), factor=1.0)
+    assert failures == []

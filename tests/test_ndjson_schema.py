@@ -172,14 +172,76 @@ def test_validator_rejects_bad_records():
         validate_record({**good, "run": True})
 
 
+def _ci_block(means=(0.1,)):
+    return {"mean": sum(means) / len(means), "ci_lo": min(means),
+            "ci_hi": max(means), "n_runs": len(means),
+            "confidence": 0.95, "n_boot": 2000, "seed": 0,
+            "method": "kalibera-jones-bootstrap",
+            "run_means": list(means)}
+
+
 def test_validator_rejects_non_monotone_percentiles():
     lat = {"n": 2, "mean_s": 0.1, "std_s": 0.0, "p50_s": 0.2,
            "p95_s": 0.1, "p99_s": 0.3, "jitter_s": 0.0,
            "budget_s": None, "miss_rate": 0.0}
     rec = {"kind": "summary", "name": "x", "t_avg_s": 0.1, "fps": 10.0,
            "mbps": 1.0, "joules_per_run_model": 0.0, "peak_mem_gb": 0.0,
-           "runs": 2, "latency": lat}
+           "runs": 2, "latency": lat, "ci": _ci_block()}
     with pytest.raises(SchemaError, match="percentiles not monotone"):
+        validate_record(rec)
+
+
+def test_summary_requires_ci_block(bench_result):
+    """The statistical gate needs an interval on every summary row —
+    a producer that drops the ci block (or corrupts it) fails CI
+    loudly, it does not degrade the gate silently."""
+    summary = json.loads(bench_result.ndjson_lines()[0])
+    validate_record(summary)
+    assert summary["ci"]["n_runs"] >= 1
+
+    rec = {k: v for k, v in summary.items() if k != "ci"}
+    with pytest.raises(SchemaError, match="missing required key 'ci'"):
+        validate_record(rec)
+    with pytest.raises(SchemaError, match="null not allowed"):
+        validate_record({**summary, "ci": None})
+    # A ci block missing its level-one data cannot be re-bootstrapped.
+    truncated = {k: v for k, v in summary["ci"].items()
+                 if k != "run_means"}
+    with pytest.raises(SchemaError, match="run_means"):
+        validate_record({**summary, "ci": truncated})
+
+
+def test_ci_block_internal_consistency_enforced():
+    good = {"kind": "summary", "name": "x", "t_avg_s": 0.1, "fps": 10.0,
+            "mbps": 1.0, "joules_per_run_model": 0.0, "peak_mem_gb": 0.0,
+            "runs": 2, "ci": _ci_block((0.1, 0.12, 0.08)),
+            "latency": {"n": 2, "mean_s": 0.1, "std_s": 0.0,
+                        "p50_s": 0.1, "p95_s": 0.1, "p99_s": 0.1,
+                        "jitter_s": 0.0, "budget_s": None,
+                        "miss_rate": 0.0}}
+    validate_record(good)
+    # Interval must contain its point estimate.
+    bad = {**good, "ci": {**good["ci"], "ci_lo": 0.11}}
+    with pytest.raises(SchemaError, match="point estimate"):
+        validate_record(bad)
+    # run_means length must equal n_runs (re-bootstrappability).
+    bad = {**good, "ci": {**good["ci"], "run_means": [0.1]}}
+    with pytest.raises(SchemaError, match="n_runs=3"):
+        validate_record(bad)
+    bad = {**good, "ci": {**good["ci"], "n_runs": 0, "run_means": []}}
+    with pytest.raises(SchemaError, match="n_runs"):
+        validate_record(bad)
+
+
+def test_multitenant_requires_acq_per_s_ci(mt_records):
+    import copy
+
+    rec = copy.deepcopy(mt_records[0])
+    validate_record(rec)
+    assert rec["acq_per_s_ci"]["n_runs"] >= 1    # producer-stamped
+    del rec["acq_per_s_ci"]
+    with pytest.raises(SchemaError,
+                       match="missing required key 'acq_per_s_ci'"):
         validate_record(rec)
 
 

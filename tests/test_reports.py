@@ -1,60 +1,198 @@
-"""Analysis tooling: the dry-run records parse and the reports render."""
+"""Analysis/report tooling on the stage graph: roofline, sweep
+comparison, trend report.
+
+The roofline tests run the real pipeline at tiny geometry — per-stage
+HLO costing, calibrated peaks, the BenchResult stamp — and hold the
+stamp to the schema CI enforces. The comparison/trend tests run on
+synthetic artifacts so the verdict logic (faster / SLOWER / noise /
+missing) is pinned without timing anything."""
 
 import json
 import os
+import sys
 
-import pytest
+import jax.numpy as jnp
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
-                           "results")
+from repro.bench import bench_callable, bench_stages
+from repro.bench.schema import SchemaError, validate_record
+from repro.core import UltrasoundPipeline, Variant, tiny_config
+from repro.data import synth_rf
 
+repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         ".."))
+if repo_root not in sys.path:  # `pytest tests/` has no cwd on sys.path
+    sys.path.insert(0, repo_root)
 
-def _load(name):
-    path = os.path.join(RESULTS_DIR, name)
-    if not os.path.exists(path):
-        pytest.skip(f"{name} not generated (run the dry-run sweep)")
-    with open(path) as f:
-        return json.load(f)
-
-
-@pytest.mark.parametrize("name", ["dryrun_baseline.json",
-                                  "dryrun_optimized.json"])
-def test_sweep_records_complete(name):
-    recs = _load(name)
-    lm = [r for r in recs if r["arch"] != "ultrasound-bmode-cnn-batch256"]
-    cells = {(r["arch"], r["shape"], r["mesh"]) for r in lm}
-    assert len(cells) >= 80, len(cells)         # 40 cells x 2 meshes
-    bad = [r for r in lm if r["status"] not in ("ok", "skipped")]
-    assert not bad, [(r["arch"], r["shape"], r["mesh"]) for r in bad]
-    # every compiled record carries the three roofline terms
-    for r in lm:
-        if r["status"] == "ok":
-            for k in ("t_compute", "t_memory", "t_collective"):
-                assert r["roofline"][k] >= 0.0
-            assert r["unknown_trip_loops"] == 0, r["arch"]
+from benchmarks import compare_sweeps, roofline_report  # noqa: E402
 
 
-def test_skips_match_design_rules():
-    recs = _load("dryrun_optimized.json")
-    skipped = {(r["arch"], r["shape"]) for r in recs
-               if r["status"] == "skipped" and r["mesh"] == "single"}
-    expected = {(a, "long_500k") for a in [
-        "qwen3-8b", "granite-3-8b", "llama3-405b", "qwen2-vl-2b",
-        "deepseek-v2-236b", "granite-moe-3b-a800m",
-        "seamless-m4t-large-v2"]}
-    assert skipped == expected, skipped ^ expected
+def _tiny_cfg():
+    return tiny_config(variant=Variant.DYNAMIC)
 
 
-def test_roofline_report_renders():
-    import sys
-    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__),
-                                             ".."))
-    if repo_root not in sys.path:  # `pytest tests/` has no cwd on sys.path
-        sys.path.insert(0, repo_root)
-    from benchmarks import roofline_report
-    recs = _load("dryrun_optimized.json")
-    table = roofline_report.render(recs, "single")
-    assert table.count("\n") > 40
-    assert "llama3-405b" in table
-    mem = roofline_report.memory_table(recs, "single")
-    assert "mamba2-130m" in mem
+def _peaks():
+    # Small calibration shapes: the memoized result is shared by every
+    # test in the process, and ratios (not absolutes) are under test.
+    return roofline_report.calibrate_peaks(n=256, copy_mb=8, reps=2)
+
+
+def test_calibrated_peaks_positive_and_memoized():
+    a, b = _peaks(), _peaks()
+    assert a.flops_per_s > 0 and a.bytes_per_s > 0
+    assert b is a                                 # per-backend memo
+
+
+def test_stage_costs_on_stage_graph():
+    costs = roofline_report.stage_costs(_tiny_cfg())
+    assert set(costs) == {"demod", "beamform", "bmode"}
+    beam = costs["beamform"]
+    assert beam.flops > 0 and beam.bytes_min > 0
+    assert beam.gather_elems > 0       # the dynamic DAS gather
+
+
+def test_stage_roofline_rows_schema_valid():
+    cfg = _tiny_cfg()
+    measured = {"demod": 1e-4, "beamform": 2e-3, "bmode": 1e-4}
+    roof = roofline_report.stage_roofline(cfg, measured, peaks=_peaks())
+    assert set(roof) == set(measured)
+    for name, row in roof.items():
+        assert row["t_roof_s"] > 0 and row["pct_roofline"] > 0
+        assert row["bound"] in ("compute", "memory", "memory+gather")
+    # Unmeasured stages are skipped, never invented.
+    partial = roofline_report.stage_roofline(
+        cfg, {"beamform": 2e-3}, peaks=_peaks())
+    assert set(partial) == {"beamform"}
+    # The stamp satisfies the summary-record schema end to end.
+    rec = _summary_rec("x", 1.0, runs=[1.0, 1.1, 0.9])
+    validate_record({**rec, "roofline": roof})
+    try:
+        validate_record({**rec, "roofline": {"demod": {"flops": 1.0}}})
+    except SchemaError:
+        pass
+    else:
+        raise AssertionError("truncated roofline row passed the schema")
+
+
+def test_attach_roofline_stamps_bench_result():
+    cfg = _tiny_cfg()
+    pipe = UltrasoundPipeline(cfg)
+    rf = jnp.asarray(synth_rf(cfg, seed=0))
+    res = bench_callable("t", None, (pipe.consts, rf),
+                         input_bytes=cfg.input_bytes, warmup=1, runs=2,
+                         jitted=pipe.jitted, plan=pipe.plan)
+    roofline_report.attach_roofline(res, cfg, peaks=_peaks())
+    assert res.roofline is None        # no stage breakdown -> no stamp
+    res.stage_breakdown = bench_stages(cfg, rf, runs=2)
+    roofline_report.attach_roofline(res, cfg, peaks=_peaks())
+    assert set(res.roofline) == {"demod", "beamform", "bmode"}
+    summary = json.loads(res.ndjson_lines()[0])
+    assert validate_record(summary) == "summary"
+    assert summary["roofline"]["beamform"]["pct_roofline"] > 0
+
+
+def test_roofline_render_markdown():
+    roof = {"beamform": {"flops": 1e9, "bytes": 2e6, "bytes_min": 1e6,
+                         "t_measured_s": 2e-3, "t_roof_s": 1e-3,
+                         "pct_roofline": 0.5, "bound": "memory+gather"}}
+    table = roofline_report.render(roof, title="cell")
+    assert "### cell" in table and "beamform" in table
+    assert " 50.0%" in table and "gather" in table
+
+
+# ---------------------------------------------------------------------------
+# compare_sweeps on synthetic artifacts
+# ---------------------------------------------------------------------------
+
+def _summary_rec(name, t, runs=None, roofline=None):
+    rec = {"kind": "summary", "name": name, "t_avg_s": t, "fps": 1 / t,
+           "mbps": 1.0, "joules_per_run_model": 0.0, "peak_mem_gb": 0.0,
+           "runs": 3,
+           "latency": {"n": 3, "mean_s": t, "std_s": 0.0, "p50_s": t,
+                       "p95_s": t, "p99_s": t, "jitter_s": 0.0,
+                       "budget_s": None, "miss_rate": 0.0},
+           "ci": {"mean": t, "ci_lo": t, "ci_hi": t, "n_runs": 1,
+                  "confidence": 0.95, "n_boot": 2000, "seed": 0,
+                  "method": "kalibera-jones-bootstrap",
+                  "run_means": [t]}}
+    if runs is not None:
+        rec["ci"].update(mean=sum(runs) / len(runs), ci_lo=min(runs),
+                         ci_hi=max(runs), n_runs=len(runs),
+                         run_means=list(runs))
+    if roofline is not None:
+        rec["roofline"] = roofline
+    return rec
+
+
+def test_compare_sweeps_verdicts(tmp_path):
+    roof = {"beamform": {"flops": 1e9, "bytes": 2e6, "bytes_min": 1e6,
+                         "t_measured_s": 2e-3, "t_roof_s": 1e-3,
+                         "pct_roofline": 0.5, "bound": "memory"}}
+    base = {r["name"]: r for r in [
+        _summary_rec("fast2x", 2.0, runs=[2.0, 2.02, 1.98]),
+        _summary_rec("noisy", 1.0, runs=[0.8, 1.0, 1.2]),
+        _summary_rec("slower", 1.0, runs=[1.0, 1.02, 0.98]),
+        _summary_rec("gone", 1.0)]}
+    cur = {r["name"]: r for r in [
+        _summary_rec("fast2x", 1.0, runs=[1.0, 1.01, 0.99],
+                     roofline=roof),
+        _summary_rec("noisy", 1.1, runs=[0.9, 1.1, 1.3]),
+        _summary_rec("slower", 3.0, runs=[3.0, 3.05, 2.95])]}
+    lines = compare_sweeps.compare(base, cur)
+    table = "\n".join(lines)
+    row = {line.split("|")[1].strip(): line for line in lines[2:]}
+    assert "faster" in row["fast2x"] and "50%" in row["fast2x"]
+    assert "noise" in row["noisy"]
+    assert "SLOWER" in row["slower"]
+    assert "missing" in row["gone"]
+    assert "2.0" in row["fast2x"]                 # ~2x speedup ratio
+    assert table.count("|") > 20
+
+
+def test_compare_sweeps_row_runs_fallback():
+    assert compare_sweeps.row_runs({"t_avg_s": 1.5}) == [1.5]
+    assert compare_sweeps.row_runs(
+        _summary_rec("x", 1.0, runs=[1.0, 2.0])) == [1.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# trend report: history accumulation + HTML render
+# ---------------------------------------------------------------------------
+
+def test_trend_report_history_and_html(tmp_path):
+    from benchmarks import trend_report
+
+    baseline = {"results": [_summary_rec("cell_a", 1.0,
+                                         runs=[1.0, 1.02, 0.98])],
+                "multitenant": []}
+    good = {"results": [_summary_rec("cell_a", 1.05,
+                                     runs=[1.05, 1.08, 1.02])]}
+    bad = {"results": [_summary_rec("cell_a", 9.0,
+                                    runs=[9.0, 9.1, 8.9])]}
+
+    hist = tmp_path / "hist.ndjson"
+    cells = trend_report.collect_cells(baseline, good["results"], [],
+                                       factor=2.0)
+    assert [c["verdict"] for c in cells] == ["pass"]
+    history = trend_report.append_history(str(hist), cells, ts=1.0,
+                                          label="r1")
+    assert len(history) == 1
+
+    cells2 = trend_report.collect_cells(baseline, bad["results"], [],
+                                        factor=2.0)
+    assert [c["verdict"] for c in cells2] == ["FAIL"]
+    history = trend_report.append_history(str(hist), cells2, ts=2.0,
+                                          label="r2")
+    assert len(history) == 2                      # accumulated on disk
+
+    page = trend_report.render_html(cells2, history, factor=2.0,
+                                    label="r2")
+    assert "<svg" in page and "polyline" in page   # sparkline rendered
+    assert "FAIL" in page and "cell_a" in page
+    assert "entirely above" in page                # gate reason surfaced
+
+    # A baseline cell with no current row renders as missing, not a
+    # crash.
+    cells3 = trend_report.collect_cells(baseline, [], [], factor=2.0)
+    assert [c["verdict"] for c in cells3] == ["missing"]
+    assert "missing" in trend_report.render_html(
+        cells3, history, factor=2.0, label="r3")

@@ -1,0 +1,212 @@
+"""Statistics layer (repro.bench.stats): bootstrap CIs + the gate rule.
+
+The deterministic tests pin the invariants the regression gate relies
+on — the interval contains its point estimate, fixed seeds reproduce
+exactly, run order cannot move an interval, wider confidence never
+shrinks it, and the 95% interval actually covers ~95% on synthetic
+noise (calibration, the property that makes "CI excludes the factor" a
+meaningful verdict). The Hypothesis section re-checks the structural
+invariants over randomized inputs when the library is installed
+(requirements-dev.txt documents the auto-skip).
+"""
+
+import numpy as np
+import pytest
+
+from repro.bench.stats import (CIStats, bootstrap_ci, ci_ratio,
+                               gate_ratio, run_means)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without dev extras: auto-skip
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Deterministic invariants
+# ---------------------------------------------------------------------------
+
+def test_run_means_flat_nested_and_sorted():
+    np.testing.assert_allclose(run_means([3.0, 1.0, 2.0]),
+                               [1.0, 2.0, 3.0])
+    # Nested per-run samples reduce to their means first (two-level).
+    np.testing.assert_allclose(
+        run_means([[2.0, 4.0], [1.0, 1.0]]), [1.0, 3.0])
+    with pytest.raises(ValueError, match="at least one run"):
+        run_means([])
+
+
+def test_ci_contains_point_estimate():
+    ci = bootstrap_ci([1.0, 1.2, 0.9, 1.1])
+    assert ci.ci_lo <= ci.mean <= ci.ci_hi
+    assert ci.n_runs == 4 and len(ci.run_means) == 4
+    assert ci.method == "kalibera-jones-bootstrap"
+
+
+def test_single_run_interval_is_degenerate():
+    ci = bootstrap_ci([2.5])
+    assert ci.ci_lo == ci.mean == ci.ci_hi == 2.5
+    assert ci.n_runs == 1
+
+
+def test_seed_reproducibility_exact():
+    runs = [1.0, 1.3, 0.8, 1.1, 0.95]
+    a = bootstrap_ci(runs, seed=7)
+    b = bootstrap_ci(runs, seed=7)
+    assert (a.ci_lo, a.ci_hi) == (b.ci_lo, b.ci_hi)
+    c = bootstrap_ci(runs, seed=8)
+    assert (a.ci_lo, a.ci_hi) != (c.ci_lo, c.ci_hi)   # seed matters
+
+
+def test_permutation_invariance():
+    runs = [1.0, 1.3, 0.8, 1.1, 0.95]
+    a = bootstrap_ci(runs)
+    b = bootstrap_ci(list(reversed(runs)))
+    rng = np.random.default_rng(0)
+    c = bootstrap_ci(list(rng.permutation(runs)))
+    assert (a.ci_lo, a.ci_hi) == (b.ci_lo, b.ci_hi) == (c.ci_lo, c.ci_hi)
+
+
+def test_interval_widens_with_confidence():
+    runs = [1.0, 1.3, 0.8, 1.1, 0.95, 1.2]
+    prev = bootstrap_ci(runs, confidence=0.5)
+    for conf in (0.8, 0.9, 0.95, 0.99):
+        ci = bootstrap_ci(runs, confidence=conf)
+        assert ci.ci_lo <= prev.ci_lo and ci.ci_hi >= prev.ci_hi, conf
+        prev = ci
+
+
+def test_confidence_bounds_validated():
+    for bad in (0.0, 1.0, -0.5, 2.0):
+        with pytest.raises(ValueError, match="confidence"):
+            bootstrap_ci([1.0, 2.0], confidence=bad)
+        with pytest.raises(ValueError, match="confidence"):
+            ci_ratio([1.0, 2.0], [1.0, 2.0], confidence=bad)
+
+
+def test_median_statistic_supported():
+    ci = bootstrap_ci([1.0, 1.0, 1.0, 100.0], statistic="median")
+    assert ci.mean == 1.0            # robust to the outlier run
+    with pytest.raises(KeyError):
+        bootstrap_ci([1.0, 2.0], statistic="mode")
+
+
+def test_calibrated_coverage_on_synthetic_noise():
+    """~95% of 95% intervals cover the true mean on iid normal runs.
+
+    The property that makes CI-exclusion gating meaningful: if the
+    intervals were too narrow the gate would false-alarm on noise, too
+    wide and it would never fire. Bootstrap-over-5-runs is known to
+    undercover slightly, so the bar is a generous [0.80, 0.999]."""
+    rng = np.random.default_rng(42)
+    covered = 0
+    n_data = 200
+    for i in range(n_data):
+        runs = rng.normal(loc=10.0, scale=1.0, size=5)
+        ci = bootstrap_ci(list(runs), seed=i)
+        covered += int(ci.ci_lo <= 10.0 <= ci.ci_hi)
+    coverage = covered / n_data
+    assert 0.80 <= coverage <= 0.999, coverage
+
+
+def test_ci_ratio_point_and_degenerate():
+    r = ci_ratio([2.0], [3.0])
+    assert r.ratio == r.ci_lo == r.ci_hi == 1.5   # single-run degenerate
+    r = ci_ratio([1.0, 1.1, 0.9], [2.0, 2.2, 1.8])
+    assert r.ci_lo <= r.ratio <= r.ci_hi
+    assert r.n_runs_baseline == r.n_runs_current == 3
+    with pytest.raises(ValueError, match="zero"):
+        ci_ratio([0.0, 1.0], [1.0, 2.0])
+
+
+def test_gate_ratio_time_like_decisions():
+    base = [1.0, 1.02, 0.98]
+    # Point estimate past the factor but interval straddling it: pass.
+    noisy = [1.15, 1.0, 1.25]
+    dec = gate_ratio(base, noisy, factor=1.05, higher_is_better=False)
+    assert dec.ok and "contains or undercuts" in dec.reason
+    # Interval entirely past the factor: fail, no rerun will undo it.
+    dec = gate_ratio(base, [3.0, 3.1, 2.9], factor=2.0,
+                     higher_is_better=False)
+    assert not dec.ok and "entirely above" in dec.reason
+    with pytest.raises(ValueError, match="factor"):
+        gate_ratio(base, noisy, factor=0.0, higher_is_better=False)
+
+
+def test_gate_ratio_throughput_like_decisions():
+    base = [100.0, 102.0, 98.0]
+    dec = gate_ratio(base, [97.0, 101.0, 99.0], factor=2.0,
+                     higher_is_better=True)
+    assert dec.ok
+    dec = gate_ratio(base, [30.0, 31.0, 29.0], factor=2.0,
+                     higher_is_better=True)
+    assert not dec.ok and "entirely below" in dec.reason
+
+
+def test_gate_ratio_degenerate_collapses_to_strict_mean_rule():
+    # One run each side: the legacy strict comparison, no invented noise.
+    assert gate_ratio([1.0], [1.9], factor=2.0,
+                      higher_is_better=False).ok
+    assert not gate_ratio([1.0], [2.1], factor=2.0,
+                          higher_is_better=False).ok
+    assert gate_ratio([100.0], [51.0], factor=2.0,
+                      higher_is_better=True).ok
+    assert not gate_ratio([100.0], [49.0], factor=2.0,
+                          higher_is_better=True).ok
+
+
+def test_json_dict_round_trip_matches_schema_keys():
+    from repro.bench.schema import CI_KEYS
+    d = bootstrap_ci([1.0, 1.1, 0.9]).json_dict()
+    assert set(d) == set(CI_KEYS)
+    assert CIStats(**d).json_dict() == d
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (auto-skip without the dev extra)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    finite_runs = st.lists(
+        st.floats(min_value=1e-3, max_value=1e3,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=12)
+
+    @given(runs=finite_runs, seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_prop_ci_contains_sample_mean(runs, seed):
+        ci = bootstrap_ci(runs, seed=seed)
+        mean = float(np.mean(runs))
+        assert ci.ci_lo <= mean + 1e-12 and ci.ci_hi >= mean - 1e-12
+
+    @given(runs=finite_runs, seed=st.integers(0, 2**31 - 1),
+           lo=st.sampled_from([0.5, 0.8]), hi=st.sampled_from([0.95,
+                                                               0.99]))
+    @settings(max_examples=50, deadline=None)
+    def test_prop_interval_monotone_in_confidence(runs, seed, lo, hi):
+        narrow = bootstrap_ci(runs, confidence=lo, seed=seed)
+        wide = bootstrap_ci(runs, confidence=hi, seed=seed)
+        assert wide.ci_lo <= narrow.ci_lo
+        assert wide.ci_hi >= narrow.ci_hi
+
+    @given(runs=st.lists(st.floats(min_value=1e-3, max_value=1e3,
+                                   allow_nan=False,
+                                   allow_infinity=False),
+                         min_size=2, max_size=10),
+           seed=st.integers(0, 2**31 - 1),
+           perm_seed=st.integers(0, 1000))
+    @settings(max_examples=50, deadline=None)
+    def test_prop_permutation_invariance(runs, seed, perm_seed):
+        rng = np.random.default_rng(perm_seed)
+        shuffled = list(rng.permutation(runs))
+        a = bootstrap_ci(runs, seed=seed)
+        b = bootstrap_ci(shuffled, seed=seed)
+        assert (a.ci_lo, a.ci_hi) == (b.ci_lo, b.ci_hi)
+
+    @given(runs=finite_runs, seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_prop_seed_reproducibility(runs, seed):
+        a = bootstrap_ci(runs, seed=seed)
+        b = bootstrap_ci(runs, seed=seed)
+        assert a.json_dict() == b.json_dict()

@@ -67,18 +67,30 @@ def test_streaming_batched_throughput_beats_single_frame():
 
     At tiny geometry the batched engine wins by a wide margin (dispatch
     overhead dominates), but this is still a wall-clock inequality on a
-    shared machine — retry once so a scheduler stall during one window
-    can't red-flag the suite.
+    shared machine — so it is asserted with the CI-exclusion rule over
+    three windows per side (fail only when the whole ratio interval
+    says the batched engine is slower), replacing a retry loop that
+    still flaked whenever two windows in a row caught a stall.
     """
+    from repro.bench.stats import gate_ratio
+
     cfg = tiny_config()
-    for attempt in range(2):
-        single = serve_ultrasound_stream(cfg, batch=1, n_batches=8, depth=1,
-                                         deadline_s=1.0)
-        batched = serve_ultrasound_stream(cfg, batch=8, n_batches=8, depth=2,
-                                          deadline_s=1.0)
-        if batched["sustained_mbps"] >= single["sustained_mbps"]:
-            break
-    assert batched["sustained_mbps"] >= single["sustained_mbps"]
+    single_mbps, batched_mbps = [], []
+    for _ in range(3):
+        single_mbps.append(serve_ultrasound_stream(
+            cfg, batch=1, n_batches=8, depth=1,
+            deadline_s=1.0)["sustained_mbps"])
+    for _ in range(3):
+        batched_mbps.append(serve_ultrasound_stream(
+            cfg, batch=8, n_batches=8, depth=2,
+            deadline_s=1.0)["sustained_mbps"])
+    batched = serve_ultrasound_stream(cfg, batch=8, n_batches=8, depth=2,
+                                      deadline_s=1.0)
+    # higher_is_better at factor 1.0: fail only when the batched/single
+    # ratio CI sits entirely below 1.0.
+    dec = gate_ratio(single_mbps, batched_mbps, factor=1.0,
+                     higher_is_better=True)
+    assert dec.ok, dec.reason
     assert batched["acquisitions"] == 64
     assert batched["frames"] == 64 * cfg.n_f
     lat = batched["latency"]
