@@ -23,7 +23,8 @@ Two row families are gated:
     smoke artifacts are all gated against the one baseline.
   * multitenant rows (``benchmarks.multitenant`` NDJSON): matched by
     the sweep cell key (clients, max_batch, max_queue_delay_ms,
-    in_flight); throughput-like: FAIL when the acq/s ratio CI sits
+    in_flight, load_profile — a burst window never gates against a
+    steady baseline); throughput-like: FAIL when the acq/s ratio CI sits
     entirely below ``1/factor``. Gating acq/s per in-flight depth
     keeps the async scheduler's overlap win (depth 2 > depth 1 in the
     baseline) from regressing back to synchronous throughput
@@ -51,7 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.bench.stats import GateDecision, gate_ratio
 
-MtKey = Tuple[int, int, float, int]
+MtKey = Tuple[int, int, float, int, str]
 T1Key = Tuple[str, int]
 
 
@@ -87,10 +88,17 @@ def t1_key(rec: dict) -> T1Key:
 
 
 def mt_key(rec: dict) -> MtKey:
-    """A multitenant record's sweep-cell identity."""
+    """A multitenant record's sweep-cell identity.
+
+    ``load_profile`` is part of the identity — a burst or churn window
+    must never gate against a steady baseline cell. Pre-profile records
+    (old baselines) default to "steady", which is exactly the schedule
+    they ran.
+    """
     try:
         return (rec["clients"], rec["policy"]["max_batch"],
-                rec["policy"]["max_queue_delay_ms"], rec["in_flight"])
+                rec["policy"]["max_queue_delay_ms"], rec["in_flight"],
+                rec.get("load_profile", "steady"))
     except (TypeError, KeyError) as e:
         raise GateRecordError(
             f"multitenant {_ident(rec)}: missing cell-identity key "
@@ -183,7 +191,8 @@ def gate_multitenant(baseline: List[dict], current: List[dict], *,
             key = mt_key(base)
             row = cur.get(key)
             cell = (f"clients={key[0]} max_batch={key[1]} "
-                    f"delay_ms={key[2]:g} in_flight={key[3]}")
+                    f"delay_ms={key[2]:g} in_flight={key[3]} "
+                    f"profile={key[4]}")
             if row is None:
                 failures.append(f"multitenant cell [{cell}]: missing "
                                 f"from current")

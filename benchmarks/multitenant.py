@@ -25,12 +25,21 @@ All cells share one `repro.core.aot.WarmPool`: each distinct
 sweep, warm cost lands in the first cell that needs it (``warmup_s``)
 and later cells stamp ``warm_source="pool"``.
 
+``--profile`` adds the load axis (repro.data.traces): ``steady`` is
+the historical uniform open-loop schedule (reproduced bit-identically —
+same arrivals, same trace_sha256), ``burst`` / ``diurnal_ramp`` /
+``churn`` / ``adversarial`` generate seeded arrival traces and replay
+them through `make_trace_streams`; ``--trace PATH`` replays a recorded
+repro-trace-v1 file instead. Every record stamps ``load_profile`` and
+``trace_sha256`` — the profile is part of the gate's cell identity, so
+a burst row never gates against a steady baseline.
+
 NDJSON rows are ``{"kind": "multitenant", ...}`` — schema enforced by
 `repro.bench.schema` (CI validates the smoke artifact with exactly that
 module):
 
   PYTHONPATH=src python -m benchmarks.multitenant --fast \
-      --ndjson MT.ndjson
+      --profile steady,burst --ndjson MT.ndjson
   PYTHONPATH=src python -m repro.bench.schema MT.ndjson \
       --require-kind multitenant
 """
@@ -54,7 +63,10 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
         repeats: int = 1,
         deadline_ms: Optional[float] = 100.0, base_fps: float = 120.0,
         plan_policy: Optional[str] = None, cfg_bmode=None,
-        cfg_doppler=None, variant=None) -> Tuple[List[str], List[dict]]:
+        cfg_doppler=None, variant=None,
+        profiles: Sequence[str] = ("steady",),
+        trace_path: Optional[str] = None
+        ) -> Tuple[List[str], List[dict]]:
     """Returns (csv lines, NDJSON-ready records), one per sweep cell.
 
     ``cfg_bmode`` / ``cfg_doppler`` override the tenant geometries
@@ -73,15 +85,30 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
     the statistical regression gate compares. ``acq_per_s`` then
     reports the across-window mean; the distribution blocks (latency,
     occupancy, overlap) stay those of the last window.
+
+    ``profiles`` sweeps load scenarios (`repro.data.traces.PROFILES`):
+    ``steady`` drives the historical `make_mixed_streams` uniform
+    schedule directly (bit-identical arrivals and trace_sha256 to the
+    pre-profile benchmark); other profiles generate a seeded trace per
+    (profile, client count) and replay it through `make_trace_streams`.
+    ``trace_path`` replays one recorded repro-trace-v1 file instead —
+    the trace then fixes the tenant count and ``client_counts`` is
+    ignored.
     """
     from benchmarks.common import stream_config
     from repro.bench.stats import bootstrap_ci
     from repro.core import Modality, Variant
     from repro.core.aot import WarmPool
+    from repro.data.traces import PROFILES, generate_trace, load_trace
     from repro.launch.scheduler import (BatchPolicy, make_mixed_streams,
+                                        make_trace_streams,
                                         serve_multitenant)
 
     assert repeats >= 1, repeats
+    for p in profiles:
+        if p not in PROFILES:
+            raise ValueError(f"unknown profile {p!r} "
+                             f"(expected one of {PROFILES})")
 
     v = variant if variant is not None else Variant.DYNAMIC
     if cfg_bmode is None:
@@ -90,41 +117,70 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
         cfg_doppler = cfg_bmode.with_(modality=Modality.DOPPLER)
     n_frames = 8 if fast else 24
 
+    replay = None
+    if trace_path is not None:
+        replay = load_trace(trace_path)
+        client_counts = (len(replay.streams),)
+        profiles = (replay.profile or "trace",)
+
     pool = WarmPool()
     lines, records = [], []
     for n in client_counts:
-        streams = make_mixed_streams(n, cfg_bmode, cfg_doppler,
-                                     base_fps=base_fps,
-                                     n_frames=n_frames,
-                                     deadline_ms=deadline_ms)
-        for max_batch, delay_ms in policies:
-            for in_flight in in_flights:
-                windows = [serve_multitenant(
-                    streams, policy=BatchPolicy(max_batch, delay_ms),
-                    in_flight=in_flight, plan_policy=plan_policy,
-                    pool=pool) for _ in range(repeats)]
-                stats = windows[-1]
-                if repeats > 1:
-                    ci = bootstrap_ci([w["acq_per_s"] for w in windows])
-                    stats["acq_per_s"] = ci.mean
-                    stats["acq_per_s_ci"] = ci.json_dict()
-                rec = {"kind": "multitenant", **stats}
-                records.append(rec)
-                lat, occ = stats["latency"], stats["occupancy"]
-                worst_p95 = max(s["latency"]["p95_s"]
-                                for s in stats["per_stream"].values())
-                lines.append(
-                    f"{stats['name']},{1e6 / stats['acq_per_s']:.1f},"
-                    f"clients={n};max_batch={max_batch};"
-                    f"delay_ms={delay_ms:g};in_flight={in_flight};"
-                    f"mbps={stats['sustained_mbps']:.2f};"
-                    f"fps={stats['fps']:.2f};"
-                    f"p50_ms={lat['p50_s'] * 1e3:.2f};"
-                    f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
-                    f"fill={occ['mean_fill']:.2f};"
-                    f"busy={stats['device_busy_frac']:.2f};"
-                    f"overlap={stats['overlap_frac']:.2f};"
-                    f"miss_rate={stats['deadline_miss_rate']:.3f}")
+        for profile in profiles:
+            if replay is not None:
+                streams = make_trace_streams(
+                    replay, cfg_bmode, cfg_doppler,
+                    deadline_ms=deadline_ms)
+            elif profile == "steady":
+                # The historical uniform path, untouched: steady cells
+                # must reproduce the pre-profile benchmark exactly.
+                streams = make_mixed_streams(n, cfg_bmode, cfg_doppler,
+                                             base_fps=base_fps,
+                                             n_frames=n_frames,
+                                             deadline_ms=deadline_ms)
+            else:
+                trace = generate_trace(profile, n_streams=n,
+                                       n_frames=n_frames,
+                                       base_fps=base_fps, seed=0)
+                streams = make_trace_streams(
+                    trace, cfg_bmode, cfg_doppler,
+                    deadline_ms=deadline_ms)
+            for max_batch, delay_ms in policies:
+                for in_flight in in_flights:
+                    windows = [serve_multitenant(
+                        streams,
+                        policy=BatchPolicy(max_batch, delay_ms),
+                        in_flight=in_flight, plan_policy=plan_policy,
+                        pool=pool, load_profile=profile)
+                        for _ in range(repeats)]
+                    stats = windows[-1]
+                    if repeats > 1:
+                        ci = bootstrap_ci(
+                            [w["acq_per_s"] for w in windows])
+                        stats["acq_per_s"] = ci.mean
+                        stats["acq_per_s_ci"] = ci.json_dict()
+                    rec = {"kind": "multitenant", **stats}
+                    records.append(rec)
+                    lat, occ = stats["latency"], stats["occupancy"]
+                    worst_p95 = max(
+                        s["latency"]["p95_s"]
+                        for s in stats["per_stream"].values()
+                        if s["latency"] is not None)
+                    lines.append(
+                        f"{stats['name']},"
+                        f"{1e6 / stats['acq_per_s']:.1f},"
+                        f"clients={n};profile={profile};"
+                        f"max_batch={max_batch};"
+                        f"delay_ms={delay_ms:g};in_flight={in_flight};"
+                        f"mbps={stats['sustained_mbps']:.2f};"
+                        f"fps={stats['fps']:.2f};"
+                        f"p50_ms={lat['p50_s'] * 1e3:.2f};"
+                        f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
+                        f"fill={occ['mean_fill']:.2f};"
+                        f"busy={stats['device_busy_frac']:.2f};"
+                        f"overlap={stats['overlap_frac']:.2f};"
+                        f"dropped={stats['dropped']};"
+                        f"miss_rate={stats['deadline_miss_rate']:.3f}")
     return lines, records
 
 
@@ -156,6 +212,15 @@ def main() -> None:
                     help="fastest tenant's open-loop arrival rate; far "
                          "above the service rate = device-bound cells "
                          "(overlap win shows in acq_per_s)")
+    ap.add_argument("--profile", default="steady",
+                    help="comma-separated load profiles to sweep "
+                         "(steady, burst, diurnal_ramp, churn, "
+                         "adversarial — repro.data.traces; steady is "
+                         "the historical uniform schedule)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="replay a recorded repro-trace-v1 file instead "
+                         "of generating profiles (the trace fixes the "
+                         "tenant count; overrides --profile/--clients)")
     ap.add_argument("--ndjson", metavar="PATH", default=None,
                     help="write one multitenant record per line")
     ap.add_argument("--merge-into", metavar="PATH", default=None,
@@ -201,7 +266,9 @@ def main() -> None:
                          deadline_ms=args.deadline_ms,
                          base_fps=args.base_fps, plan_policy=args.plan,
                          cfg_bmode=cfg_bmode, cfg_doppler=cfg_doppler,
-                         variant=variant)
+                         variant=variant,
+                         profiles=tuple(args.profile.split(",")),
+                         trace_path=args.trace)
     print("name,us_per_acq,derived")
     for line in lines:
         print(line)

@@ -99,7 +99,8 @@ def collect_cells(baseline: dict, current_rows: List[dict],
         row = mt_cur.get(key)
         cell = {"family": "multitenant",
                 "cell": (f"clients={key[0]} max_batch={key[1]} "
-                         f"delay={key[2]:g}ms in_flight={key[3]}")}
+                         f"delay={key[2]:g}ms in_flight={key[3]} "
+                         f"profile={key[4]}")}
         if row is None:
             cell.update(verdict="missing", reason="no current row",
                         mean=None, ci_lo=None, ci_hi=None, roof=None)

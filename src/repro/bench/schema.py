@@ -111,10 +111,14 @@ INFLIGHT_KEYS: Dict[str, str] = {
 }
 
 # Per-stream block inside a multitenant record (one per client).
+# `latency` / `queue_delay` are null exactly when the stream served
+# zero frames (fully dropped by a churn disconnect); `dropped` counts
+# the out-of-window arrivals that never reached the scheduler.
 MT_STREAM_KEYS: Dict[str, str] = {
     "pipeline": "str", "variant": "str", "arrival_fps": "real",
-    "frames": "int", "acquisitions": "int", "latency": "dict",
-    "queue_delay": "dict", "deadline_miss_rate": "real",
+    "frames": "int", "acquisitions": "int", "dropped": "int",
+    "latency": "dict?", "queue_delay": "dict?",
+    "deadline_miss_rate": "real",
 }
 
 # kind -> required top-level keys. Stamps (plan/resources/latency/
@@ -154,6 +158,11 @@ RECORD_KEYS: Dict[str, Dict[str, str]] = {
         "queue_delay": "dict", "occupancy": "dict",
         "in_flight_occupancy": "dict",
         "per_stream": "dict", "groups": "dict", "resources": "dict",
+        # Load provenance (repro.launch.scheduler): the scenario name
+        # (gate cell identity) and the repro-trace-v1 hash of the exact
+        # arrival schedule served; `dropped` counts out-of-window
+        # (churn-disconnected) frames across all streams.
+        "load_profile": "str", "trace_sha256": "str", "dropped": "int",
     },
 }
 
@@ -263,6 +272,12 @@ def validate_record(rec: dict, path: str = "record") -> str:
         _check_ci(rec["acq_per_s_ci"], f"{path}.acq_per_s_ci")
         _check(rec["in_flight_occupancy"], INFLIGHT_KEYS,
                f"{path}.in_flight_occupancy")
+        sha = rec["trace_sha256"]
+        if len(sha) != 64 or any(c not in "0123456789abcdef"
+                                 for c in sha):
+            raise SchemaError(
+                f"{path}.trace_sha256: expected 64 lowercase hex chars "
+                f"(a repro-trace-v1 provenance hash), got {sha!r}")
         for frac in ("device_busy_frac", "overlap_frac"):
             if not 0.0 <= rec[frac] <= 1.0:
                 raise SchemaError(
@@ -273,19 +288,37 @@ def validate_record(rec: dict, path: str = "record") -> str:
         for sid, s in rec["per_stream"].items():
             spath = f"{path}.per_stream[{sid}]"
             _check(s, MT_STREAM_KEYS, spath)
-            _check_latency(s["latency"], f"{spath}.latency")
-            _check_latency(s["queue_delay"], f"{spath}.queue_delay")
+            # Null latency blocks are legal only for a stream that
+            # served nothing (every arrival dropped out-of-window).
+            if s["latency"] is not None:
+                _check_latency(s["latency"], f"{spath}.latency")
+            if s["queue_delay"] is not None:
+                _check_latency(s["queue_delay"], f"{spath}.queue_delay")
+            if s["latency"] is None and s["acquisitions"] > 0:
+                raise SchemaError(
+                    f"{spath}.latency: null but the stream served "
+                    f"{s['acquisitions']} acquisitions")
         if not rec["groups"]:
             raise SchemaError(f"{path}.groups: empty")
         for gid, g in rec["groups"].items():
             gpath = f"{path}.groups[{gid}]"
             _check(g, {"plan": "dict", "streams": "list",
-                       "batches": "int", "occupancy": "dict",
+                       "batches": "int", "occupancy": "dict?",
                        "warmup_s": "real", "warm_source": "str",
-                       "in_flight": "dict"}, gpath)
+                       "in_flight": "dict?"}, gpath)
             _check(g["plan"], PLAN_KEYS, f"{gpath}.plan")
-            _check(g["occupancy"], OCCUPANCY_KEYS, f"{gpath}.occupancy")
-            _check(g["in_flight"], INFLIGHT_KEYS, f"{gpath}.in_flight")
+            # Null distributions are legal only for a group that
+            # launched zero batches (all streams fully dropped).
+            if g["occupancy"] is not None:
+                _check(g["occupancy"], OCCUPANCY_KEYS,
+                       f"{gpath}.occupancy")
+            elif g["batches"] > 0:
+                raise SchemaError(
+                    f"{gpath}.occupancy: null but the group launched "
+                    f"{g['batches']} batches")
+            if g["in_flight"] is not None:
+                _check(g["in_flight"], INFLIGHT_KEYS,
+                       f"{gpath}.in_flight")
     return kind
 
 

@@ -1,1 +1,5 @@
 from repro.data.rf_data import synth_rf  # noqa: F401
+from repro.data.traces import (ArrivalProcess, EmptyTraceError,  # noqa: F401
+                               StreamTrace, Trace, TraceArrival,
+                               TraceError, UniformArrival,
+                               generate_trace, load_trace, seed_space)

@@ -12,11 +12,14 @@ requires that none of that batching changes a single output bit.
 
 This module is that frontend:
 
-  * `StreamSpec` — one client: an `UltrasoundConfig`, an arrival rate
-    (``fps`` acquisitions per second; open-loop arrivals, frame k of a
-    stream arrives at k/fps on the window clock whether or not the
-    device is keeping up), a frame count, a seed, and an optional
-    per-frame completion deadline.
+  * `StreamSpec` — one client: an `UltrasoundConfig`, an arrival
+    process (`repro.data.traces.ArrivalProcess` — uniform open-loop
+    ``phase_s + k / fps`` by default, or a `TraceArrival` replaying
+    recorded timestamps bit-identically), a frame count, a seed, an
+    optional connect/disconnect window (``start_s`` / ``stop_s`` —
+    churn: frames whose arrival falls outside the window are dropped
+    deterministically at admission), and an optional per-frame
+    completion deadline.
   * `BatchPolicy` — the two knobs of dynamic batching: ``max_batch``
     (coalescing ceiling = the padded dispatch shape) and
     ``max_queue_delay_ms`` (the longest any frame may wait for
@@ -91,8 +94,12 @@ import numpy as np
 import jax
 
 from repro.core.config import UltrasoundConfig
+from repro.data.traces import (ArrivalProcess, StreamTrace, Trace,
+                               TraceArrival, mixed_phase, mixed_rate,
+                               seed_space)
 
 __all__ = ["BatchPolicy", "StreamSpec", "make_mixed_streams",
+           "make_trace_streams", "trace_of_streams",
            "serve_multitenant"]
 
 
@@ -127,13 +134,26 @@ class BatchPolicy:
 class StreamSpec:
     """One tenant: a probe configuration plus its arrival process.
 
-    ``fps`` is the open-loop arrival rate in acquisitions per second
-    (frame k arrives at ``k / fps`` on the window clock); ``phase_s``
-    offsets the whole stream (staggering tenants de-synchronizes their
-    bursts). ``pool`` pre-generated acquisitions cycle like
+    Arrivals: with the default ``arrival=None`` the stream is uniform
+    open-loop — frame k arrives at ``phase_s + k / fps`` on the window
+    clock (``phase_s`` staggers tenants so their bursts de-synchronize).
+    Any `repro.data.traces.ArrivalProcess` plugs in instead: a
+    `TraceArrival` replays recorded timestamps bit-identically.
+
+    Connect window (churn): frames whose arrival timestamp falls before
+    ``start_s`` or at/after ``stop_s`` are DROPPED deterministically at
+    admission — the probe is not connected — and counted in the
+    ``dropped`` telemetry. The decision uses only arrival timestamps,
+    never wall clock, so a replay drops the same frames.
+
+    RF content: ``pool`` pre-generated acquisitions cycle like
     `SyntheticAcquisitionSource` so host-side synthesis stays out of
-    the serving window; frame k carries RF
-    ``synth_rf(cfg, seed=seed + (k % pool))``.
+    the serving window. The cycle period is ``min(pool, n_frames)``
+    (never more pools than frames are synthesized); frame k carries RF
+    ``synth_rf(cfg, seed=self.frame_seed(k))``, where `frame_seed`
+    derives a per-(stream_id, seed) disjoint seed space via
+    `repro.data.traces.seed_space` — two tenants never share a
+    byte-identical frame just because their base seeds sit close.
     """
 
     stream_id: str
@@ -144,6 +164,9 @@ class StreamSpec:
     pool: int = 4
     phase_s: float = 0.0
     deadline_ms: Optional[float] = None   # per-frame completion budget
+    arrival: Optional[ArrivalProcess] = None
+    start_s: float = 0.0                  # connect instant
+    stop_s: Optional[float] = None        # disconnect instant (churn)
 
     def __post_init__(self):
         if self.fps <= 0:
@@ -153,9 +176,38 @@ class StreamSpec:
                              f"(got {self.n_frames})")
         if self.pool < 1:
             raise ValueError(f"pool must be >= 1 (got {self.pool})")
+        if self.start_s < 0:
+            raise ValueError(f"start_s must be >= 0 "
+                             f"(got {self.start_s})")
+        if self.stop_s is not None and self.stop_s <= self.start_s:
+            raise ValueError(f"stop_s={self.stop_s} must be > "
+                             f"start_s={self.start_s}")
+        if self.arrival is not None:
+            try:
+                n = len(self.arrival)          # type: ignore[arg-type]
+            except TypeError:
+                n = None
+            if n is not None and self.n_frames > n:
+                raise ValueError(
+                    f"n_frames={self.n_frames} exceeds the arrival "
+                    f"process's {n} recorded timestamps")
 
     def arrival_s(self, k: int) -> float:
+        if self.arrival is not None:
+            return self.arrival.arrival_s(k)
         return self.phase_s + k / self.fps
+
+    def frame_seed(self, k: int) -> int:
+        """The `synth_rf` seed of frame k: the pool cycles with period
+        ``min(pool, n_frames)``, each slot in a seed space disjoint
+        per (seed, stream_id)."""
+        return seed_space("stream", self.seed, self.stream_id,
+                          k % min(self.pool, self.n_frames))
+
+    def in_window(self, t: float) -> bool:
+        """Is the probe connected at window-clock time t?"""
+        return t >= self.start_s and (self.stop_s is None
+                                      or t < self.stop_s)
 
 
 def make_mixed_streams(n_clients: int, cfg_bmode: UltrasoundConfig,
@@ -169,6 +221,10 @@ def make_mixed_streams(n_clients: int, cfg_bmode: UltrasoundConfig,
     ``base_fps / (1 + i/2)`` — tenants never share a clock, so the
     scheduler's coalescing has to earn its occupancy from genuinely
     unaligned arrivals. Phases stagger by 1/4 of the fastest period.
+    Rates/phases come from `repro.data.traces.mixed_rate` /
+    `mixed_phase` — the SAME helpers the ``steady`` trace generator
+    uses, so a generated steady trace replays this schedule
+    bit-identically (equal floats, equal trace_sha256).
     Used by ``--multitenant`` serving and `benchmarks/multitenant.py`.
     """
     if n_clients < 1:
@@ -177,10 +233,53 @@ def make_mixed_streams(n_clients: int, cfg_bmode: UltrasoundConfig,
         StreamSpec(
             stream_id=f"probe{i}",
             cfg=cfg_bmode if i % 2 == 0 else cfg_doppler,
-            fps=base_fps / (1 + i / 2), n_frames=n_frames,
-            seed=17 * i, phase_s=i * 0.25 / base_fps,
+            fps=mixed_rate(i, base_fps), n_frames=n_frames,
+            seed=17 * i, phase_s=mixed_phase(i, base_fps),
             deadline_ms=deadline_ms)
         for i in range(n_clients)]
+
+
+def make_trace_streams(trace: Trace, cfg_bmode: UltrasoundConfig,
+                       cfg_doppler: UltrasoundConfig, *,
+                       deadline_ms: Optional[float] = 100.0,
+                       pool: int = 4) -> List[StreamSpec]:
+    """Bind a recorded/generated `Trace` to the mixed-tenant configs.
+
+    Stream i of the trace gets the same modality assignment (B-mode
+    even, Doppler odd) and the same RF seed (``17 * i``) as
+    `make_mixed_streams` client i, but its arrivals come from a
+    `TraceArrival` — replayed bit-identically — and its connect window
+    from the trace's ``start_s`` / ``stop_s``. Replaying a ``steady``
+    trace therefore serves the exact frames `make_mixed_streams` would.
+    """
+    return [
+        StreamSpec(
+            stream_id=st.stream_id,
+            cfg=cfg_bmode if i % 2 == 0 else cfg_doppler,
+            fps=st.fps, n_frames=len(st.arrivals),
+            seed=17 * i, pool=pool, deadline_ms=deadline_ms,
+            arrival=TraceArrival(st.arrivals),
+            start_s=st.start_s, stop_s=st.stop_s)
+        for i, st in enumerate(trace.streams)]
+
+
+def trace_of_streams(specs: Sequence[StreamSpec], *,
+                     profile: Optional[str] = None,
+                     seed: Optional[int] = None) -> Trace:
+    """The `Trace` a set of specs will replay — uniform or recorded.
+
+    Materializes every spec's arrival process into timestamps, so the
+    uniform open-loop default and a `TraceArrival` replay of its saved
+    copy produce the same trace — and therefore the same ``sha256``
+    provenance stamp in the telemetry.
+    """
+    return Trace(
+        streams=tuple(StreamTrace(
+            stream_id=s.stream_id,
+            arrivals=tuple(s.arrival_s(k) for k in range(s.n_frames)),
+            fps=s.fps, start_s=s.start_s, stop_s=s.stop_s)
+            for s in specs),
+        profile=profile, seed=seed)
 
 
 @dataclasses.dataclass
@@ -287,22 +386,38 @@ def _build_groups(specs: Sequence[StreamSpec], policy: BatchPolicy, *,
     return list(groups.values()), group_of_stream
 
 
-def _make_frames(specs: Sequence[StreamSpec]) -> List[_Frame]:
-    """Pre-generate every frame (arrival-sorted); synthesis is untimed."""
+def _make_frames(specs: Sequence[StreamSpec]
+                 ) -> Tuple[List[_Frame], List[int]]:
+    """Pre-generate every in-window frame (arrival-sorted) + drops.
+
+    Synthesis is untimed. Frames whose arrival falls outside the
+    stream's connect window are dropped HERE — the admit/retire
+    decision depends only on trace timestamps, never on wall clock, so
+    replays drop identically. Returns (frames, dropped-per-stream).
+    The sort key ``(t_arrival, stream, seq)`` makes simultaneous
+    arrivals (equal timestamps — bursts, trace replays) admit in
+    deterministic spec order.
+    """
     from repro.data import synth_rf
 
     pools = []
     for spec in specs:
         n = min(spec.pool, spec.n_frames)
-        pools.append([synth_rf(spec.cfg, seed=spec.seed + i)
+        pools.append([synth_rf(spec.cfg, seed=spec.frame_seed(i))
                       for i in range(n)])
-    frames = [
-        _Frame(stream=si, seq=k, rf=pools[si][k % len(pools[si])],
-               t_arrival=spec.arrival_s(k))
-        for si, spec in enumerate(specs)
-        for k in range(spec.n_frames)]
+    frames: List[_Frame] = []
+    dropped = [0] * len(specs)
+    for si, spec in enumerate(specs):
+        for k in range(spec.n_frames):
+            t = spec.arrival_s(k)
+            if not spec.in_window(t):
+                dropped[si] += 1
+                continue
+            frames.append(_Frame(stream=si, seq=k,
+                                 rf=pools[si][k % len(pools[si])],
+                                 t_arrival=t))
     frames.sort(key=lambda f: (f.t_arrival, f.stream, f.seq))
-    return frames
+    return frames, dropped
 
 
 def _pick_group(groups: List[_Group], now: float,
@@ -360,13 +475,17 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
                       in_flight: int = 2,
                       devices=None, plan_policy: Optional[str] = None,
                       collect_outputs: bool = False,
-                      pool=None) -> dict:
+                      pool=None, load_profile: str = "steady") -> dict:
     """Serve N open-loop tenants through coalescing dynamic batching.
 
     Runs one serving window: every frame of every stream is admitted at
-    its scheduled arrival time, queued per config group, coalesced
+    its scheduled arrival time (uniform or trace-replayed — see
+    `StreamSpec.arrival`), queued per config group, coalesced
     under ``policy``, executed at the group's fixed padded shape, and
-    timed from arrival to completion. Dispatch is PIPELINED to depth
+    timed from arrival to completion. Frames arriving outside a
+    stream's connect window are dropped deterministically at admission
+    (churn); frames admitted before a disconnect always drain.
+    Dispatch is PIPELINED to depth
     ``in_flight``: launched batches ride a bounded ring as pending
     completions while the host keeps admitting, coalescing, and
     launching; completions drain via non-blocking readiness checks,
@@ -394,7 +513,14 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     latency and queue-delay LatencyStats, OccupancyStats,
     device-overlap columns (``device_busy_frac``, ``overlap_frac``,
     ``in_flight_occupancy``), warm-up seconds, per-group plan stamps,
-    ResourceStats, sustained MB/s / FPS / acq/s.
+    ResourceStats, sustained MB/s / FPS / acq/s. Load provenance is
+    stamped on every window: ``load_profile`` (the scenario name —
+    part of the gate's cell identity), ``trace_sha256`` (the
+    `trace_of_streams` hash of the exact arrival schedule served),
+    ``dropped`` (out-of-window frames, aggregate and per stream), and
+    ``dispatch_order`` (the launched batches as ``[stream_id, seq]``
+    lists, in launch order — what the trace-replay determinism oracle
+    compares across reruns).
     """
     from repro.bench.harness import (in_flight_stats, latency_stats,
                                      occupancy_stats)
@@ -414,7 +540,12 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     groups, group_of_stream = _build_groups(
         specs, policy, devices=devices, plan_policy=plan_policy,
         pool=pool)
-    frames = _make_frames(specs)
+    frames, dropped_per_stream = _make_frames(specs)
+    if not frames:
+        raise ValueError(
+            "every frame falls outside its stream's connect window — "
+            "nothing to serve (check the trace's start_s/stop_s)")
+    trace_sha256 = trace_of_streams(specs).sha256()
 
     # Meter before warm-up: the NVML idle baseline must see the board
     # cold; one meter spans every group's devices.
@@ -445,6 +576,7 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     # spent doing USEFUL work (admit/coalesce/launch/drain) concurrent
     # with device execution.
     pending: collections.deque = collections.deque()
+    dispatch_order: List[List[List[object]]] = []   # [[stream_id, seq]]
     depth_samples: List[int] = []
     busy_since: Optional[float] = None
     device_busy_s = 0.0
@@ -519,6 +651,8 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
                     busy_since = t_dispatch
                 pending.append(_Pending(group=g, batch=batch, out=out,
                                         t_dispatch=t_dispatch))
+                dispatch_order.append(
+                    [[specs[f.stream].stream_id, f.seq] for f in batch])
                 g.n_pending += 1
                 g.depths.append(len(pending))
                 depth_samples.append(len(pending))
@@ -553,9 +687,13 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     misses, with_budget = 0, 0
     for si, spec in enumerate(specs):
         fs = [f for f in frames if f.stream == si]
-        lat = latency_stats([f.t_done - f.t_arrival for f in fs],
-                            budget_s=budget(spec))
-        qd = latency_stats([f.t_dispatch - f.t_arrival for f in fs])
+        # A fully-dropped stream (disconnected before its first
+        # arrival) has no latency distribution — the blocks are None
+        # (nullable in the schema), never empty stats.
+        lat = (latency_stats([f.t_done - f.t_arrival for f in fs],
+                             budget_s=budget(spec)) if fs else None)
+        qd = (latency_stats([f.t_dispatch - f.t_arrival for f in fs])
+              if fs else None)
         if budget(spec) is not None:
             # Count misses directly from the per-frame completion
             # latencies — re-deriving the count from the rounded
@@ -568,25 +706,34 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
             "pipeline": spec.cfg.name,
             "variant": group_of_stream[si].cfg.variant.value,
             "arrival_fps": spec.fps,
-            "acquisitions": spec.n_frames,
-            "frames": spec.n_frames * spec.cfg.n_f,
+            "acquisitions": len(fs),           # served (admitted) frames
+            "frames": len(fs) * spec.cfg.n_f,
+            "dropped": dropped_per_stream[si],  # out-of-window arrivals
             "deadline_ms": spec.deadline_ms,
-            "latency": lat.json_dict(),
-            "queue_delay": qd.json_dict(),
-            "deadline_miss_rate": lat.miss_rate,
+            "latency": lat.json_dict() if lat else None,
+            "queue_delay": qd.json_dict() if qd else None,
+            "deadline_miss_rate": lat.miss_rate if lat else 0.0,
         }
 
+    # Throughput counts what was SERVED: dropped (disconnected) frames
+    # never reached the device and must not inflate MB/s or acq/s.
     acqs = len(frames)
-    total_frames = sum(s.n_frames * s.cfg.n_f for s in specs)
-    total_bytes = sum(s.n_frames * s.cfg.input_bytes for s in specs)
+    total_frames = sum(per_stream[s.stream_id]["frames"] for s in specs)
+    total_bytes = sum(
+        per_stream[s.stream_id]["acquisitions"] * s.cfg.input_bytes
+        for s in specs)
     all_occ = [n for g in groups for n in g.occupancies]
     stats = {
         "name": (f"multitenant/{len(specs)}streams/{len(groups)}groups"
                  f"/b{policy.max_batch}q{policy.max_queue_delay_ms:g}"
-                 f"if{in_flight}"),
+                 f"if{in_flight}/{load_profile}"),
         "clients": len(specs),
         "policy": policy.json_dict(),
         "in_flight": in_flight,
+        "load_profile": load_profile,
+        "trace_sha256": trace_sha256,
+        "dropped": sum(dropped_per_stream),
+        "dispatch_order": dispatch_order,
         "wall_s": wall,
         "warmup_s": warmup_s,
         "acquisitions": acqs,
@@ -623,10 +770,14 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
                 "batches": len(g.occupancies),
                 "warmup_s": g.warmup_s,
                 "warm_source": g.warm_source,
-                "occupancy": occupancy_stats(
-                    g.occupancies, policy.max_batch).json_dict(),
-                "in_flight": in_flight_stats(
-                    g.depths, in_flight).json_dict(),
+                # A group whose every stream was fully dropped launches
+                # zero batches — no distributions to report.
+                "occupancy": (occupancy_stats(
+                    g.occupancies, policy.max_batch).json_dict()
+                    if g.occupancies else None),
+                "in_flight": (in_flight_stats(
+                    g.depths, in_flight).json_dict()
+                    if g.depths else None),
             } for g in groups},
         "resources": resources.json_dict(),
     }

@@ -91,7 +91,9 @@ def serve_session(cfg, *, requests: int, batch: int, prompt_len: int,
 
     outs = []
     n_steps = 0
-    t0 = time.time()
+    # perf_counter, like every other timing window in this module: an
+    # NTP step mid-session would skew (or negate) a time.time() wall.
+    t0 = time.perf_counter()
     max_len = prompt_len + max_new + 1
     for r0 in range(0, requests, batch):
         bsz = min(batch, requests - r0)
@@ -113,7 +115,7 @@ def serve_session(cfg, *, requests: int, batch: int, prompt_len: int,
             n_steps += 1
         outs.append(np.concatenate(gen, axis=1))
 
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     toks = sum(o.size for o in outs)
     stats = {"wall_s": wall, "tokens": toks,
              "tok_per_s": toks / max(wall, 1e-9),
@@ -153,15 +155,22 @@ class SyntheticAcquisitionSource:
     (a probe sweep) and cycles it — generation cost stays out of the
     streaming window, while every dispatch still uploads a fresh
     host->device buffer like a real acquisition stream would.
+
+    Frame seeds come from `repro.data.traces.seed_space`, so sources
+    with different base seeds occupy disjoint seed spaces: the old
+    additive ``seed + b * batch + i`` scheme made two sources whose
+    base seeds differed by less than ``pool * batch`` stream
+    byte-identical RF.
     """
 
     def __init__(self, cfg, batch: int, *, pool: int = 4, seed: int = 0):
-        from repro.data import synth_rf
+        from repro.data import seed_space, synth_rf
         self.cfg = cfg
         self.batch = batch
         self._pool = [
-            np.stack([synth_rf(cfg, seed=seed + b * batch + i)
-                      for i in range(batch)])
+            np.stack([synth_rf(
+                cfg, seed=seed_space("source", seed, b * batch + i))
+                for i in range(batch)])
             for b in range(pool)]
         self._i = 0
 

@@ -37,7 +37,8 @@ def _t1(name, t, runs=None, devices=None):
     return rec
 
 
-def _mt(clients, max_batch, delay_ms, in_flight, acq_per_s, runs=None):
+def _mt(clients, max_batch, delay_ms, in_flight, acq_per_s, runs=None,
+        profile=None):
     rec = {"clients": clients,
            "policy": {"max_batch": max_batch,
                       "max_queue_delay_ms": delay_ms},
@@ -45,6 +46,8 @@ def _mt(clients, max_batch, delay_ms, in_flight, acq_per_s, runs=None):
            "kind": "multitenant"}
     if runs is not None:
         rec["acq_per_s_ci"] = _ci(runs)
+    if profile is not None:
+        rec["load_profile"] = profile
     return rec
 
 
@@ -78,6 +81,28 @@ def test_gate_multitenant_keys_on_full_cell_identity():
                                 factor=2.0)
     assert len(failures) == 1 and "missing" in failures[0]
     assert mt_key(base[0]) != mt_key(base[1])
+
+
+def test_gate_multitenant_profile_is_part_of_cell_identity():
+    """A burst window must never gate against a steady baseline cell —
+    and a record without the stamp (pre-profile baseline) IS the steady
+    cell it ran as."""
+    base = [_mt(2, 4, 5.0, 2, 100.0, profile="steady"),
+            _mt(2, 4, 5.0, 2, 60.0, profile="burst")]
+    assert mt_key(base[0]) != mt_key(base[1])
+    assert mt_key(base[0])[4] == "steady"
+    # unstamped record == steady: backwards-compatible identity
+    assert mt_key(_mt(2, 4, 5.0, 2, 100.0)) == mt_key(base[0])
+
+    # a burst row at steady-regression speed satisfies its OWN cell but
+    # must not stand in for the missing steady cell
+    cur = [_mt(2, 4, 5.0, 2, 55.0, profile="burst")]
+    failures = gate_multitenant(base, cur, factor=2.0)
+    assert len(failures) == 1
+    assert "missing" in failures[0] and "profile=steady" in failures[0]
+    # both profiles present and healthy -> pass
+    cur.append(_mt(2, 4, 5.0, 2, 95.0, profile="steady"))
+    assert gate_multitenant(base, cur, factor=2.0) == []
 
 
 # ---------------------------------------------------------------------------

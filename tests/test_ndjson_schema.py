@@ -233,6 +233,39 @@ def test_ci_block_internal_consistency_enforced():
         validate_record(bad)
 
 
+def test_multitenant_requires_load_profile_stamp(mt_records):
+    """The load-profile provenance columns are REQUIRED: a multitenant
+    row without its profile name, trace hash, or drop count could be
+    mistaken for a different load scenario when gated."""
+    import copy
+
+    base = mt_records[0]
+    assert base["load_profile"] == "steady"
+    assert len(base["trace_sha256"]) == 64
+    assert base["dropped"] == 0
+
+    for key in ("load_profile", "trace_sha256", "dropped"):
+        rec = copy.deepcopy(base)
+        del rec[key]
+        with pytest.raises(SchemaError, match="missing required key"):
+            validate_record(rec)
+
+    rec = copy.deepcopy(base)
+    rec["trace_sha256"] = "not-a-hash"
+    with pytest.raises(SchemaError, match="64 lowercase hex"):
+        validate_record(rec)
+    rec["trace_sha256"] = base["trace_sha256"][:-1] + "G"
+    with pytest.raises(SchemaError, match="64 lowercase hex"):
+        validate_record(rec)
+
+    # A served stream may not carry a null latency block.
+    rec = copy.deepcopy(base)
+    sid = next(iter(rec["per_stream"]))
+    rec["per_stream"][sid]["latency"] = None
+    with pytest.raises(SchemaError, match="null but the stream served"):
+        validate_record(rec)
+
+
 def test_multitenant_requires_acq_per_s_ci(mt_records):
     import copy
 

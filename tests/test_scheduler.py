@@ -74,7 +74,7 @@ def test_scheduler_output_bit_identical_to_monolithic_oracle(variant):
         outs = stats["outputs"][sid]
         assert len(outs) == spec.n_frames
         for k, out in enumerate(outs):
-            rf = synth_rf(spec.cfg, seed=spec.seed + (k % spec.pool))
+            rf = synth_rf(spec.cfg, seed=spec.frame_seed(k))
             want = _mono_oracle(spec.cfg, rf)
             assert out.dtype == want.dtype and out.shape == want.shape
             assert np.array_equal(out, want), (
@@ -114,7 +114,7 @@ def test_async_in_flight_oracle_bit_identical(variant, in_flight):
         outs = stats["outputs"][sid]
         assert len(outs) == spec.n_frames
         for k, out in enumerate(outs):
-            rf = synth_rf(spec.cfg, seed=spec.seed + (k % spec.pool))
+            rf = synth_rf(spec.cfg, seed=spec.frame_seed(k))
             want = _mono_oracle(spec.cfg, rf)
             assert np.array_equal(out, want), (
                 f"{sid}[{k}] ({variant.value}, in_flight={in_flight}) "
@@ -175,7 +175,7 @@ def test_out_of_order_drain_bit_identical(monkeypatch):
 
     for sid, spec in (("b", streams[0]), ("d", streams[1])):
         for k, out in enumerate(stats["outputs"][sid]):
-            rf = synth_rf(spec.cfg, seed=spec.seed + (k % spec.pool))
+            rf = synth_rf(spec.cfg, seed=spec.frame_seed(k))
             assert np.array_equal(out, _mono_oracle(spec.cfg, rf)), (
                 f"{sid}[{k}] drifted under out-of-order drains")
 
@@ -336,6 +336,49 @@ def test_per_stream_deadlines_and_telemetry_shape():
     validate_record({"kind": "multitenant", **stats})
 
 
+def test_frame_pool_cycles_with_period_min_pool_n_frames():
+    """The documented pool contract, pinned: frame RF cycles with
+    period ``min(pool, n_frames)`` (never more pools than frames are
+    synthesized — a 5-pool 3-frame stream has 3 distinct frames, not a
+    phantom 5), and seeds within one period are distinct."""
+    cfg = tiny_config()
+
+    short = StreamSpec("s", cfg, n_frames=3, pool=5, seed=9)
+    assert min(short.pool, short.n_frames) == 3
+    assert len({short.frame_seed(k) for k in range(3)}) == 3
+
+    long = StreamSpec("s", cfg, n_frames=10, pool=4, seed=9)
+    assert long.frame_seed(4) == long.frame_seed(0)    # period 4
+    assert long.frame_seed(9) == long.frame_seed(1)
+    assert len({long.frame_seed(k) for k in range(4)}) == 4
+
+    # Same (seed, stream_id, slot) -> same seed regardless of how the
+    # period was reached: the pool bound changes WHICH slots exist,
+    # never what a slot contains.
+    assert short.frame_seed(0) == StreamSpec(
+        "s", cfg, n_frames=8, pool=8, seed=9).frame_seed(0)
+
+
+def test_streams_with_adjacent_seeds_share_no_frame():
+    """Disjoint per-stream seed spaces: under the old additive scheme
+    (``seed + i``) two tenants whose base seeds differ by less than the
+    pool span served byte-identical RF (seed 0 frame 1 == seed 1 frame
+    0). `frame_seed` hashes (seed, stream_id), so neither adjacent base
+    seeds nor equal ones may collide across distinct streams."""
+    cfg = tiny_config()
+    a = StreamSpec("a", cfg, n_frames=4, pool=4, seed=0)
+    b = StreamSpec("b", cfg, n_frames=4, pool=4, seed=1)   # adjacent
+    c = StreamSpec("c", cfg, n_frames=4, pool=4, seed=0)   # equal
+    pools = {s.stream_id: [synth_rf(cfg, seed=s.frame_seed(k))
+                           for k in range(4)] for s in (a, b, c)}
+    for x, y in (("a", "b"), ("a", "c"), ("b", "c")):
+        for i, fx in enumerate(pools[x]):
+            for j, fy in enumerate(pools[y]):
+                assert not np.array_equal(fx, fy), (
+                    f"streams {x}[{i}] and {y}[{j}] share a "
+                    f"byte-identical frame")
+
+
 def test_policy_and_spec_validation():
     cfg = tiny_config()
     with pytest.raises(ValueError):
@@ -472,7 +515,7 @@ for sid, spec in (("b", streams[0]), ("d", streams[1])):
     mono = jax.jit(monolithic_pipeline_fn(spec.cfg))
     for k, img in enumerate(stats["outputs"][sid]):
         want = np.asarray(mono(consts, jnp.asarray(
-            synth_rf(spec.cfg, seed=spec.seed + (k % spec.pool)))))
+            synth_rf(spec.cfg, seed=spec.frame_seed(k)))))
         max_err = max(max_err, float(np.abs(img - want).max()))
 out["mt_max_err"] = max_err
 out["mt_plan_devices"] = [g["plan"]["devices"]

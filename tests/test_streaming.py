@@ -62,6 +62,28 @@ def test_acquisition_source_shapes_and_cycling():
     assert np.array_equal(a, c)                         # pool of 2 cycles
 
 
+def test_acquisition_sources_with_nearby_seeds_share_no_frame():
+    """Disjoint per-source seed spaces: the old additive scheme
+    (``seed + b * batch + i``) made two sources whose base seeds differ
+    by less than ``pool * batch`` stream byte-identical frames (source
+    0's frame 2 was source 2's frame 0). Hash-derived seed spaces must
+    never collide across distinct base seeds."""
+    cfg = tiny_config()
+    src_a = SyntheticAcquisitionSource(cfg, batch=2, pool=2, seed=0)
+    src_b = SyntheticAcquisitionSource(cfg, batch=2, pool=2, seed=2)
+    frames_a = [f for batch in src_a._pool for f in batch]
+    frames_b = [f for batch in src_b._pool for f in batch]
+    for i, fa in enumerate(frames_a):
+        for j, fb in enumerate(frames_b):
+            assert not np.array_equal(fa, fb), (
+                f"sources seed=0 frame {i} and seed=2 frame {j} are "
+                f"byte-identical")
+    # within one source every pooled frame is still distinct
+    for i, fa in enumerate(frames_a):
+        for fb in frames_a[i + 1:]:
+            assert not np.array_equal(fa, fb)
+
+
 def test_streaming_batched_throughput_beats_single_frame():
     """Acceptance: sustained MB/s at batch N>1 >= single-frame MB/s.
 

@@ -1,0 +1,385 @@
+"""Trace-driven arrival replayer: format, generators, replay oracle.
+
+The tentpole contract (ISSUE 9): the arrival schedule is a first-class,
+replayable input. Pinned here:
+
+  * format — repro-trace-v1 validation raises NAMED errors
+    (`EmptyTraceError` for nothing-to-replay, `TraceError` for contract
+    violations), save -> load -> sha256 is a fixed point, and the hash
+    covers the load identity only (generator metadata excluded);
+  * steady == uniform — the ``steady`` generator reproduces
+    `make_mixed_streams`' open-loop schedule bit-identically: equal
+    arrival floats, equal trace_sha256, bit-identical served outputs;
+  * replay oracle — serving the same all-arrived-upfront trace twice
+    (queue delay 0, so eligibility never consults the wall clock)
+    yields an IDENTICAL dispatch order and bit-identical per-stream
+    outputs; bit-identical outputs hold for every profile regardless;
+  * churn — a disconnect (``stop_s``) drops the timestamps at/after it
+    and drains everything admitted before it, identically on replay;
+    a fully-dropped stream stamps null latency and still validates;
+  * edge cases — simultaneous arrivals admit in deterministic
+    (t_arrival, stream, seq) order; empty traces raise the named error.
+"""
+
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.bench.schema import validate_record
+from repro.core import Modality, Variant, tiny_config
+from repro.data.traces import (PROFILES, EmptyTraceError, StreamTrace,
+                               Trace, TraceArrival, TraceError,
+                               UniformArrival, generate_trace,
+                               load_trace, seed_space)
+from repro.launch.scheduler import (BatchPolicy, StreamSpec,
+                                    make_mixed_streams,
+                                    make_trace_streams, serve_multitenant,
+                                    trace_of_streams)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "traces",
+                       "burst_tiny.json")
+# Pinned provenance of the committed fixture: a drive-by edit to the
+# trace file (or a format change that silently re-hashes old traces)
+# must fail loudly, because benchmark records name this hash.
+FIXTURE_SHA = ("202704d3f54ff3642a327d52d9b87df7"
+               "e6415037fd84498742c6cdf2ccc282d0")
+
+
+def _cfgs():
+    cfg_b = tiny_config(variant=Variant.DYNAMIC)
+    return cfg_b, cfg_b.with_(modality=Modality.DOPPLER)
+
+
+# ---------------------------------------------------------------------------
+# Format + named errors
+# ---------------------------------------------------------------------------
+
+
+def test_empty_traces_raise_named_error():
+    with pytest.raises(EmptyTraceError):
+        Trace(streams=())
+    with pytest.raises(EmptyTraceError):
+        StreamTrace(stream_id="s", arrivals=(), fps=10.0)
+    with pytest.raises(EmptyTraceError):
+        generate_trace("steady", n_frames=0)
+    with pytest.raises(EmptyTraceError):
+        TraceArrival(())
+    # the named error IS a TraceError (and a ValueError): callers may
+    # catch at any level
+    assert issubclass(EmptyTraceError, TraceError)
+    assert issubclass(TraceError, ValueError)
+
+
+def test_format_violations_raise_trace_error():
+    ok = dict(stream_id="s", arrivals=(0.0, 1.0), fps=10.0)
+    StreamTrace(**ok)                                   # sanity
+    with pytest.raises(TraceError, match="non-decreasing"):
+        StreamTrace(**{**ok, "arrivals": (1.0, 0.5)})
+    with pytest.raises(TraceError, match="negative"):
+        StreamTrace(**{**ok, "arrivals": (-1.0, 0.0)})
+    with pytest.raises(TraceError, match="fps"):
+        StreamTrace(**{**ok, "fps": 0.0})
+    with pytest.raises(TraceError, match="stop_s"):
+        StreamTrace(**ok, start_s=1.0, stop_s=0.5)
+    with pytest.raises(TraceError, match="duplicate"):
+        Trace(streams=(StreamTrace(**ok), StreamTrace(**ok)))
+    with pytest.raises(TraceError, match="unknown profile"):
+        generate_trace("weekend")
+    # equal timestamps are LEGAL (simultaneity), not a monotonicity error
+    StreamTrace(**{**ok, "arrivals": (0.5, 0.5, 0.5)})
+
+
+def test_save_load_sha_is_a_fixed_point(tmp_path):
+    tr = generate_trace("burst", n_streams=3, n_frames=7,
+                        base_fps=120.0, seed=5)
+    path = str(tmp_path / "t.json")
+    tr.save(path)
+    back = load_trace(path)
+    assert back.sha256() == tr.sha256()
+    assert back.profile == "burst" and back.seed == 5
+    for a, b in zip(tr.streams, back.streams):
+        assert a == b                    # float repr round-trips exactly
+    with pytest.raises(TraceError, match="repro-trace-v1"):
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"schema": "something-else", "streams": []}')
+        load_trace(str(bad))
+
+
+def test_sha_covers_load_identity_not_generator_metadata():
+    tr = generate_trace("burst", n_streams=2, n_frames=4, seed=3)
+    relabeled = Trace(streams=tr.streams, profile=None, seed=None)
+    assert relabeled.sha256() == tr.sha256()
+    # but the load itself is covered: any timestamp change re-hashes
+    st = tr.streams[0]
+    moved = Trace(streams=(StreamTrace(
+        stream_id=st.stream_id, fps=st.fps, start_s=st.start_s,
+        stop_s=st.stop_s,
+        arrivals=tuple(t + 1e-9 for t in st.arrivals)),) + tr.streams[1:])
+    assert moved.sha256() != tr.sha256()
+
+
+def test_generators_are_seed_deterministic_and_distinct():
+    for profile in PROFILES:
+        a = generate_trace(profile, n_streams=3, n_frames=8, seed=1)
+        b = generate_trace(profile, n_streams=3, n_frames=8, seed=1)
+        assert a.sha256() == b.sha256(), profile
+        assert len(a.streams) == 3
+        assert all(len(s.arrivals) == 8 for s in a.streams)
+    # distinct seeds move the seeded profiles (burst gaps are random)
+    assert (generate_trace("burst", n_streams=2, n_frames=8, seed=1)
+            .sha256() !=
+            generate_trace("burst", n_streams=2, n_frames=8, seed=2)
+            .sha256())
+    # profile shapes differ from each other
+    shas = {generate_trace(p, n_streams=3, n_frames=8, seed=1).sha256()
+            for p in PROFILES}
+    assert len(shas) == len(PROFILES)
+
+
+def test_seed_space_is_stable_and_collision_free_here():
+    assert seed_space("a", 1) == seed_space("a", 1)
+    seen = {seed_space("stream", s, f"probe{i}", k)
+            for s in range(4) for i in range(4) for k in range(4)}
+    assert len(seen) == 64               # no collisions in a real span
+    assert all(v >= 0 for v in seen)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+
+def test_trace_arrival_replays_bit_identically():
+    ts = (0.0, 0.1 + 1e-17, math.pi / 7, 1.5)
+    ap = TraceArrival(ts)
+    for k, t in enumerate(ts):
+        assert ap.arrival_s(k) == t      # exact float, no re-derivation
+    assert len(ap) == 4
+    uni = UniformArrival(fps=120.0, phase_s=0.25)
+    assert uni.arrival_s(3) == 0.25 + 3 / 120.0
+    with pytest.raises(TraceError):
+        UniformArrival(fps=0.0)
+
+
+def test_stream_spec_arrival_plumbing_and_validation():
+    cfg, _ = _cfgs()
+    spec = StreamSpec("s", cfg, fps=10.0, n_frames=3,
+                      arrival=TraceArrival((0.0, 0.5, 0.5)))
+    assert [spec.arrival_s(k) for k in range(3)] == [0.0, 0.5, 0.5]
+    # more frames than recorded timestamps is a construction error, not
+    # a serving-time IndexError
+    with pytest.raises(ValueError, match="exceeds"):
+        StreamSpec("s", cfg, n_frames=4,
+                   arrival=TraceArrival((0.0, 0.5)))
+    with pytest.raises(ValueError, match="start_s"):
+        StreamSpec("s", cfg, start_s=-1.0)
+    with pytest.raises(ValueError, match="stop_s"):
+        StreamSpec("s", cfg, start_s=1.0, stop_s=1.0)
+    assert spec.in_window(0.0) and not StreamSpec(
+        "s", cfg, stop_s=1.0).in_window(1.0)       # stop is exclusive
+
+
+def test_simultaneous_arrivals_admit_in_stream_seq_order():
+    """Equal timestamps resolve to (t_arrival, stream, seq) — spec
+    order, then sequence — so a burst of simultaneous arrivals admits
+    identically on every replay."""
+    from repro.launch.scheduler import _make_frames
+
+    cfg, cfg_d = _cfgs()
+    specs = [
+        StreamSpec("z_last", cfg, n_frames=2,
+                   arrival=TraceArrival((0.0, 0.0))),
+        StreamSpec("a_first", cfg_d, n_frames=2,
+                   arrival=TraceArrival((0.0, 0.0))),
+    ]
+    frames, dropped = _make_frames(specs)
+    assert dropped == [0, 0]
+    # stream INDEX order (construction), not alphabetical id order
+    assert [(f.stream, f.seq) for f in frames] == [
+        (0, 0), (0, 1), (1, 0), (1, 1)]
+
+
+# ---------------------------------------------------------------------------
+# steady == uniform (the acceptance criterion's "reproduces exactly")
+# ---------------------------------------------------------------------------
+
+
+def test_steady_trace_reproduces_uniform_schedule_bit_identically():
+    cfg_b, cfg_d = _cfgs()
+    uniform = make_mixed_streams(4, cfg_b, cfg_d, base_fps=4000.0,
+                                 n_frames=5)
+    trace = generate_trace("steady", n_streams=4, n_frames=5,
+                           base_fps=4000.0, seed=0)
+    replay = make_trace_streams(trace, cfg_b, cfg_d)
+    for u, r in zip(uniform, replay):
+        assert u.stream_id == r.stream_id
+        assert u.seed == r.seed and u.cfg == r.cfg
+        for k in range(u.n_frames):
+            assert u.arrival_s(k) == r.arrival_s(k)     # exact floats
+    # one load, one provenance hash — uniform, generated, and replayed
+    assert (trace_of_streams(uniform).sha256() == trace.sha256()
+            == trace_of_streams(replay).sha256())
+
+
+def test_steady_replay_serves_bit_identical_outputs_to_uniform():
+    cfg_b, cfg_d = _cfgs()
+    policy = BatchPolicy(max_batch=2, max_queue_delay_ms=0.0)
+    uniform = make_mixed_streams(2, cfg_b, cfg_d, base_fps=4000.0,
+                                 n_frames=4)
+    trace = generate_trace("steady", n_streams=2, n_frames=4,
+                           base_fps=4000.0, seed=0)
+    replay = make_trace_streams(trace, cfg_b, cfg_d)
+    a = serve_multitenant(uniform, policy=policy, collect_outputs=True)
+    b = serve_multitenant(replay, policy=policy, collect_outputs=True)
+    assert a["trace_sha256"] == b["trace_sha256"] == trace.sha256()
+    assert a["load_profile"] == b["load_profile"] == "steady"
+    assert a["dropped"] == b["dropped"] == 0
+    for sid in a["outputs"]:
+        for x, y in zip(a["outputs"][sid], b["outputs"][sid]):
+            assert np.array_equal(x, y), sid
+
+
+# ---------------------------------------------------------------------------
+# Replay determinism oracle
+# ---------------------------------------------------------------------------
+
+
+def test_replaying_a_trace_twice_is_deterministic():
+    """The acceptance oracle: same trace -> identical dispatch order +
+    bit-identical per-stream outputs. The fixture's arrivals are all at
+    t=0 and the policy's queue delay is 0, so every scheduling decision
+    depends only on trace timestamps — never on the wall clock."""
+    cfg_b, cfg_d = _cfgs()
+    trace = load_trace(FIXTURE)
+    assert trace.sha256() == FIXTURE_SHA
+    policy = BatchPolicy(max_batch=2, max_queue_delay_ms=0.0)
+
+    runs = [serve_multitenant(
+        make_trace_streams(trace, cfg_b, cfg_d),
+        policy=policy, in_flight=2, collect_outputs=True,
+        load_profile="burst") for _ in range(2)]
+
+    a, b = runs
+    assert a["dispatch_order"] == b["dispatch_order"]
+    assert a["dispatch_order"], "no batches launched?"
+    assert a["trace_sha256"] == b["trace_sha256"] == FIXTURE_SHA
+    for sid in a["outputs"]:
+        assert len(a["outputs"][sid]) == len(b["outputs"][sid])
+        for k, (x, y) in enumerate(zip(a["outputs"][sid],
+                                       b["outputs"][sid])):
+            assert np.array_equal(x, y), f"{sid}[{k}] differs on replay"
+    # the dispatch order covers every admitted frame exactly once
+    served = [tuple(e) for batch in a["dispatch_order"] for e in batch]
+    assert sorted(served) == sorted(
+        (s.stream_id, k) for s in trace.streams
+        for k in range(len(s.arrivals)))
+    # and the record is schema-valid with the new provenance stamps
+    rec = {"kind": "multitenant", **a}
+    rec.pop("outputs")
+    assert validate_record(rec) == "multitenant"
+
+
+@pytest.mark.parametrize("profile", ["burst", "adversarial"])
+def test_generated_profiles_replay_bit_identical_outputs(profile):
+    """Output bits never depend on wall-clock jitter for ANY profile —
+    only the dispatch-order guarantee needs the all-upfront trace."""
+    cfg_b, cfg_d = _cfgs()
+    trace = generate_trace(profile, n_streams=2, n_frames=4,
+                           base_fps=4000.0, seed=0)
+    policy = BatchPolicy(max_batch=2, max_queue_delay_ms=1.0)
+    a, b = [serve_multitenant(
+        make_trace_streams(trace, cfg_b, cfg_d), policy=policy,
+        collect_outputs=True, load_profile=profile) for _ in range(2)]
+    assert a["trace_sha256"] == b["trace_sha256"]
+    for sid in a["outputs"]:
+        for x, y in zip(a["outputs"][sid], b["outputs"][sid]):
+            assert np.array_equal(x, y), (profile, sid)
+
+
+# ---------------------------------------------------------------------------
+# Churn: admit/retire mid-window
+# ---------------------------------------------------------------------------
+
+
+def test_churn_disconnect_drops_tail_and_drains_admitted_frames():
+    """A stop_s mid-stream: arrivals at/after it are dropped at
+    admission (deterministically — timestamps only), arrivals before it
+    ALL drain through the scheduler, and the telemetry accounts for
+    both. Replaying drops the same frames."""
+    cfg_b, cfg_d = _cfgs()
+    trace = Trace(streams=(
+        StreamTrace(stream_id="keeps", fps=4000.0,
+                    arrivals=(0.0, 0.001, 0.002, 0.003)),
+        StreamTrace(stream_id="leaves", fps=4000.0, stop_s=0.0025,
+                    arrivals=(0.0, 0.001, 0.002, 0.003)),
+    ), profile="churn")
+    policy = BatchPolicy(max_batch=2, max_queue_delay_ms=1.0)
+
+    runs = [serve_multitenant(
+        make_trace_streams(trace, cfg_b, cfg_d), policy=policy,
+        collect_outputs=True, load_profile="churn") for _ in range(2)]
+    for stats in runs:
+        assert stats["dropped"] == 1                    # t=0.003 only
+        ps = stats["per_stream"]
+        assert ps["keeps"]["acquisitions"] == 4
+        assert ps["keeps"]["dropped"] == 0
+        assert ps["leaves"]["acquisitions"] == 3        # admitted drain
+        assert ps["leaves"]["dropped"] == 1
+        assert ps["leaves"]["latency"]["n"] == 3
+        assert len(stats["outputs"]["leaves"]) == 3
+        assert stats["acquisitions"] == 7
+        rec = {"kind": "multitenant", **stats}
+        rec.pop("outputs")
+        assert validate_record(rec) == "multitenant"
+    # deterministic: both replays dropped/served the same frames
+    a, b = runs
+    for x, y in zip(a["outputs"]["leaves"], b["outputs"]["leaves"]):
+        assert np.array_equal(x, y)
+
+
+def test_fully_dropped_stream_stamps_null_latency():
+    """A probe that disconnects before its first arrival serves zero
+    frames: null latency blocks (schema-legal), zero throughput
+    contribution, and the window still completes."""
+    cfg_b, cfg_d = _cfgs()
+    trace = Trace(streams=(
+        StreamTrace(stream_id="alive", fps=4000.0,
+                    arrivals=(0.0, 0.001)),
+        StreamTrace(stream_id="ghost", fps=4000.0, stop_s=0.0005,
+                    arrivals=(0.001, 0.002)),
+    ))
+    stats = serve_multitenant(
+        make_trace_streams(trace, cfg_b, cfg_d),
+        policy=BatchPolicy(max_batch=2, max_queue_delay_ms=0.0),
+        load_profile="churn")
+    ghost = stats["per_stream"]["ghost"]
+    assert ghost["acquisitions"] == 0 and ghost["dropped"] == 2
+    assert ghost["latency"] is None and ghost["queue_delay"] is None
+    assert stats["acquisitions"] == 2
+    assert validate_record({"kind": "multitenant", **stats}) == \
+        "multitenant"
+    # nothing admitted at all is a named refusal, not a hang
+    all_gone = Trace(streams=(StreamTrace(
+        stream_id="ghost", fps=4000.0, stop_s=0.0005,
+        arrivals=(0.001,)),))
+    with pytest.raises(ValueError, match="connect window"):
+        serve_multitenant(
+            make_trace_streams(all_gone, cfg_b, cfg_d),
+            policy=BatchPolicy(max_batch=2, max_queue_delay_ms=0.0))
+
+
+def test_churn_generator_staggers_and_disconnects():
+    trace = generate_trace("churn", n_streams=4, n_frames=10,
+                           base_fps=120.0, seed=0)
+    starts = [s.start_s for s in trace.streams]
+    assert starts == sorted(starts) and starts[0] < starts[-1]
+    # odd probes disconnect with arrivals still scheduled -> dropped
+    assert trace.streams[1].stop_s is not None
+    assert trace.streams[0].stop_s is None
+    dropped = sum(
+        sum(1 for t in s.arrivals
+            if s.stop_s is not None and t >= s.stop_s)
+        for s in trace.streams)
+    assert dropped > 0
