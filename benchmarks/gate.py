@@ -23,12 +23,18 @@ Two row families are gated:
     smoke artifacts are all gated against the one baseline.
   * multitenant rows (``benchmarks.multitenant`` NDJSON): matched by
     the sweep cell key (clients, max_batch, max_queue_delay_ms,
-    in_flight, load_profile — a burst window never gates against a
-    steady baseline); throughput-like: FAIL when the acq/s ratio CI sits
+    in_flight, load_profile, drain — a burst window never gates
+    against a steady baseline, an async-drain window never against a
+    blocking one); throughput-like: FAIL when the acq/s ratio CI sits
     entirely below ``1/factor``. Gating acq/s per in-flight depth
     keeps the async scheduler's overlap win (depth 2 > depth 1 in the
     baseline) from regressing back to synchronous throughput
-    unnoticed.
+    unnoticed. ``device_busy_frac`` and ``overlap_frac`` are gated the
+    same way (their own CI blocks, higher is better) so the overlap
+    machinery itself cannot silently decay while acq/s hides it behind
+    arrival-rate slack; a baseline cell whose metric has a zero run
+    mean (a legitimately synchronous depth-1 cell) is skipped for that
+    metric — the ratio is undefined there, not regressed.
 
 A baseline row with no current counterpart fails loudly (a renamed or
 dropped row is a silent gate hole); extra current rows are ignored so
@@ -52,7 +58,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.bench.stats import GateDecision, gate_ratio
 
-MtKey = Tuple[int, int, float, int, str]
+MtKey = Tuple[int, int, float, int, str, str]
 T1Key = Tuple[str, int]
 
 
@@ -93,12 +99,16 @@ def mt_key(rec: dict) -> MtKey:
     ``load_profile`` is part of the identity — a burst or churn window
     must never gate against a steady baseline cell. Pre-profile records
     (old baselines) default to "steady", which is exactly the schedule
-    they ran.
+    they ran. ``drain`` (the host-transfer retirement mode) is likewise
+    part of the identity — an async-drain window must never gate
+    against a blocking baseline — and pre-drain records default to
+    "block", the only retirement path that existed when they ran.
     """
     try:
         return (rec["clients"], rec["policy"]["max_batch"],
                 rec["policy"]["max_queue_delay_ms"], rec["in_flight"],
-                rec.get("load_profile", "steady"))
+                rec.get("load_profile", "steady"),
+                rec.get("drain", "block"))
     except (TypeError, KeyError) as e:
         raise GateRecordError(
             f"multitenant {_ident(rec)}: missing cell-identity key "
@@ -175,10 +185,20 @@ def gate_table1(baseline: List[dict], current: List[dict], *,
     return failures
 
 
+# Overlap-telemetry metrics gated alongside acq/s: each is
+# throughput-like (higher is better), each carries its own bootstrap CI
+# block. A baseline cell with any zero run mean is skipped for that
+# metric — the ratio is undefined, and a legitimately synchronous cell
+# (depth-1 overlap_frac == 0) must not wedge the gate.
+_MT_FRAC_METRICS = (("device_busy_frac", "device_busy_frac_ci"),
+                    ("overlap_frac", "overlap_frac_ci"))
+
+
 def gate_multitenant(baseline: List[dict], current: List[dict], *,
                      factor: float) -> List[str]:
-    """Failures: multitenant cells whose acq/s ratio CI excludes the
-    allowed floor."""
+    """Failures: multitenant cells whose acq/s — or overlap-telemetry
+    (device_busy_frac / overlap_frac) — ratio CI excludes the allowed
+    floor."""
     failures: List[str] = []
     cur: Dict[MtKey, dict] = {}
     for rec in current:
@@ -192,7 +212,7 @@ def gate_multitenant(baseline: List[dict], current: List[dict], *,
             row = cur.get(key)
             cell = (f"clients={key[0]} max_batch={key[1]} "
                     f"delay_ms={key[2]:g} in_flight={key[3]} "
-                    f"profile={key[4]}")
+                    f"profile={key[4]} drain={key[5]}")
             if row is None:
                 failures.append(f"multitenant cell [{cell}]: missing "
                                 f"from current")
@@ -209,19 +229,41 @@ def gate_multitenant(baseline: List[dict], current: List[dict], *,
             failures.append(
                 f"multitenant cell [{cell}]: acq_per_s "
                 f"{dec.reason}{note}")
+        for metric, ci_key in _MT_FRAC_METRICS:
+            if metric not in base:
+                continue    # pre-telemetry baseline: nothing to hold
+            try:
+                base_runs, base_real = _metric_runs(
+                    base, metric, ci_key, "multitenant")
+                if any(b == 0.0 for b in base_runs):
+                    continue    # ratio undefined (synchronous cell)
+                cur_runs, cur_real = _metric_runs(
+                    row, metric, ci_key, "multitenant")
+                dec = gate_ratio(base_runs, cur_runs, factor=factor,
+                                 higher_is_better=True)
+            except GateRecordError as e:
+                failures.append(str(e))
+                continue
+            if not dec.ok:
+                note = "" if (base_real and cur_real) else " (mean-only)"
+                failures.append(
+                    f"multitenant cell [{cell}]: {metric} "
+                    f"{dec.reason}{note}")
     return failures
 
 
 def run_gate(baseline_path: str, *,
              current_path: Union[str, Sequence[str], None] = None,
-             multitenant_path: Optional[str] = None,
+             multitenant_path: Union[str, Sequence[str], None] = None,
              factor: float = 2.0) -> List[str]:
     """All gate failures for the given artifact files (empty = pass).
 
-    ``current_path`` accepts one path or a sequence of paths — the CI
-    workflow gates the default, lowering and fused smoke artifacts
-    against the one baseline in a single invocation, so every baseline
-    cell must be covered by the union of the current artifacts.
+    ``current_path`` and ``multitenant_path`` each accept one path or a
+    sequence of paths — the CI workflow gates the default, lowering and
+    fused smoke artifacts (and the steady + transfer-telemetry
+    multitenant NDJSON artifacts) against the one baseline in a single
+    invocation, so every baseline cell must be covered by the union of
+    the current artifacts.
     """
     with open(baseline_path) as f:
         baseline = json.load(f)
@@ -237,8 +279,14 @@ def run_gate(baseline_path: str, *,
                                 factor=factor)
     mt_base = baseline.get("multitenant", [])
     if multitenant_path is not None and mt_base:
-        with open(multitenant_path) as f:
-            mt_cur = [json.loads(line) for line in f if line.strip()]
+        mt_paths = ([multitenant_path]
+                    if isinstance(multitenant_path, str)
+                    else list(multitenant_path))
+        mt_cur: List[dict] = []
+        for path in mt_paths:
+            with open(path) as f:
+                mt_cur += [json.loads(line) for line in f
+                           if line.strip()]
         mt_cur = [r for r in mt_cur if r.get("kind") == "multitenant"]
         failures += gate_multitenant(mt_base, mt_cur, factor=factor)
     return failures
@@ -255,9 +303,10 @@ def main() -> int:
                     help="benchmarks.run --json artifact to gate "
                          "(repeatable; the union of rows must cover "
                          "every baseline cell)")
-    ap.add_argument("--multitenant", default=None,
+    ap.add_argument("--multitenant", action="append", default=None,
                     help="benchmarks.multitenant --ndjson artifact to "
-                         "gate")
+                         "gate (repeatable; the union of rows must "
+                         "cover every baseline multitenant cell)")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="allowed slowdown factor (default 2.0); FAIL "
                          "only when the ratio CI excludes it")

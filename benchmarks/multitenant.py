@@ -25,6 +25,14 @@ All cells share one `repro.core.aot.WarmPool`: each distinct
 sweep, warm cost lands in the first cell that needs it (``warmup_s``)
 and later cells stamp ``warm_source="pool"``.
 
+``--drain`` adds the host-transfer axis: ``async`` (default) retires
+batches through `copy_to_host_async` staging-ring drains so D2H rides
+off the admit loop's critical path; ``block`` is the legacy
+detect-block-harvest retirement. Both are bit-identical — the drain
+mode only moves *when* host copies happen — so a block/async cell pair
+on the same geometry isolates the transfer-overlap win
+(``transfer_frac`` / ``acq_per_s``) with no confound.
+
 ``--profile`` adds the load axis (repro.data.traces): ``steady`` is
 the historical uniform open-loop schedule (reproduced bit-identically —
 same arrivals, same trace_sha256), ``burst`` / ``diurnal_ramp`` /
@@ -60,7 +68,7 @@ DEFAULT_CLIENTS = (1, 2, 4)
 def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
         policies: Sequence[Tuple[int, float]] = DEFAULT_POLICIES, *,
         in_flights: Sequence[int] = (2,), fast: bool = False,
-        repeats: int = 1,
+        repeats: int = 1, drains: Sequence[str] = ("async",),
         deadline_ms: Optional[float] = 100.0, base_fps: float = 120.0,
         plan_policy: Optional[str] = None, cfg_bmode=None,
         cfg_doppler=None, variant=None,
@@ -80,11 +88,16 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
 
     ``repeats`` serves each cell's window that many times (the shared
     `WarmPool` means only the first window anywhere pays AOT cost) and
-    replaces the record's degenerate ``acq_per_s_ci`` with the
-    two-level bootstrap CI over the per-window acq/s — the interval
-    the statistical regression gate compares. ``acq_per_s`` then
-    reports the across-window mean; the distribution blocks (latency,
-    occupancy, overlap) stay those of the last window.
+    replaces the record's degenerate ``acq_per_s_ci`` /
+    ``device_busy_frac_ci`` / ``overlap_frac_ci`` with two-level
+    bootstrap CIs over the per-window values — the intervals the
+    statistical regression gate compares. The point metrics then
+    report the across-window means; the distribution blocks (latency,
+    occupancy) stay those of the last window.
+
+    ``drains`` sweeps the host-transfer retirement mode
+    (``async`` / ``block``, part of the record name and the gate's
+    cell identity); outputs are bit-identical across the axis.
 
     ``profiles`` sweeps load scenarios (`repro.data.traces.PROFILES`):
     ``steady`` drives the historical `make_mixed_streams` uniform
@@ -105,6 +118,10 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
                                         serve_multitenant)
 
     assert repeats >= 1, repeats
+    for d in drains:
+        if d not in ("async", "block"):
+            raise ValueError(f"unknown drain mode {d!r} "
+                             f"(expected 'async' or 'block')")
     for p in profiles:
         if p not in PROFILES:
             raise ValueError(f"unknown profile {p!r} "
@@ -147,40 +164,47 @@ def run(client_counts: Sequence[int] = DEFAULT_CLIENTS,
                     deadline_ms=deadline_ms)
             for max_batch, delay_ms in policies:
                 for in_flight in in_flights:
-                    windows = [serve_multitenant(
-                        streams,
-                        policy=BatchPolicy(max_batch, delay_ms),
-                        in_flight=in_flight, plan_policy=plan_policy,
-                        pool=pool, load_profile=profile)
-                        for _ in range(repeats)]
-                    stats = windows[-1]
-                    if repeats > 1:
-                        ci = bootstrap_ci(
-                            [w["acq_per_s"] for w in windows])
-                        stats["acq_per_s"] = ci.mean
-                        stats["acq_per_s_ci"] = ci.json_dict()
-                    rec = {"kind": "multitenant", **stats}
-                    records.append(rec)
-                    lat, occ = stats["latency"], stats["occupancy"]
-                    worst_p95 = max(
-                        s["latency"]["p95_s"]
-                        for s in stats["per_stream"].values()
-                        if s["latency"] is not None)
-                    lines.append(
-                        f"{stats['name']},"
-                        f"{1e6 / stats['acq_per_s']:.1f},"
-                        f"clients={n};profile={profile};"
-                        f"max_batch={max_batch};"
-                        f"delay_ms={delay_ms:g};in_flight={in_flight};"
-                        f"mbps={stats['sustained_mbps']:.2f};"
-                        f"fps={stats['fps']:.2f};"
-                        f"p50_ms={lat['p50_s'] * 1e3:.2f};"
-                        f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
-                        f"fill={occ['mean_fill']:.2f};"
-                        f"busy={stats['device_busy_frac']:.2f};"
-                        f"overlap={stats['overlap_frac']:.2f};"
-                        f"dropped={stats['dropped']};"
-                        f"miss_rate={stats['deadline_miss_rate']:.3f}")
+                    for drain in drains:
+                        windows = [serve_multitenant(
+                            streams,
+                            policy=BatchPolicy(max_batch, delay_ms),
+                            in_flight=in_flight, drain=drain,
+                            plan_policy=plan_policy,
+                            pool=pool, load_profile=profile)
+                            for _ in range(repeats)]
+                        stats = windows[-1]
+                        if repeats > 1:
+                            for metric in ("acq_per_s",
+                                           "device_busy_frac",
+                                           "overlap_frac"):
+                                ci = bootstrap_ci(
+                                    [w[metric] for w in windows])
+                                stats[metric] = ci.mean
+                                stats[metric + "_ci"] = ci.json_dict()
+                        rec = {"kind": "multitenant", **stats}
+                        records.append(rec)
+                        lat, occ = stats["latency"], stats["occupancy"]
+                        worst_p95 = max(
+                            s["latency"]["p95_s"]
+                            for s in stats["per_stream"].values()
+                            if s["latency"] is not None)
+                        lines.append(
+                            f"{stats['name']},"
+                            f"{1e6 / stats['acq_per_s']:.1f},"
+                            f"clients={n};profile={profile};"
+                            f"max_batch={max_batch};"
+                            f"delay_ms={delay_ms:g};"
+                            f"in_flight={in_flight};drain={drain};"
+                            f"mbps={stats['sustained_mbps']:.2f};"
+                            f"fps={stats['fps']:.2f};"
+                            f"p50_ms={lat['p50_s'] * 1e3:.2f};"
+                            f"worst_stream_p95_ms={worst_p95 * 1e3:.2f};"
+                            f"fill={occ['mean_fill']:.2f};"
+                            f"busy={stats['device_busy_frac']:.2f};"
+                            f"overlap={stats['overlap_frac']:.2f};"
+                            f"xfer={stats['transfer_frac']:.2f};"
+                            f"dropped={stats['dropped']};"
+                            f"miss_rate={stats['deadline_miss_rate']:.3f}")
     return lines, records
 
 
@@ -206,6 +230,11 @@ def main() -> None:
     ap.add_argument("--in-flight", default="2",
                     help="comma-separated dispatch-pipelining depths to "
                          "sweep (1 = synchronous; default 2)")
+    ap.add_argument("--drain", default="async",
+                    help="comma-separated host-transfer retirement "
+                         "modes to sweep (async = staging-ring "
+                         "copy_to_host_async drain, block = legacy "
+                         "blocking harvest; default async)")
     ap.add_argument("--deadline-ms", type=float, default=100.0,
                     help="per-frame completion budget (miss-rate metric)")
     ap.add_argument("--base-fps", type=float, default=120.0,
@@ -263,6 +292,7 @@ def main() -> None:
 
     lines, records = run(client_counts, policies, in_flights=in_flights,
                          fast=args.fast, repeats=args.repeats,
+                         drains=tuple(args.drain.split(",")),
                          deadline_ms=args.deadline_ms,
                          base_fps=args.base_fps, plan_policy=args.plan,
                          cfg_bmode=cfg_bmode, cfg_doppler=cfg_doppler,

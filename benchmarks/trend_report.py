@@ -8,8 +8,12 @@ an NDJSON *history* file (one record per cell per run, carried between
 CI runs as a restored artifact) and renders the whole history as a
 self-contained HTML page: one row per gated cell with an inline SVG
 sparkline of the mean over time inside its CI band, the latest
-mean ± CI, the gate verdict badge, and the worst-stage % -of-roofline
-when the row carries a stamp. No external assets — the page is a
+mean ± CI, the gate verdict badge, the worst-stage % -of-roofline
+when the row carries a stamp, and a host-cost diagnostic — the
+multitenant row's ``transfer_frac`` (staging + H2D + D2H share of
+wall) or the summary row's variance-decomposition split (between-run
+vs within-run noise share, which says whether more ``--repeats`` or
+longer runs buy precision). No external assets — the page is a
 single file CI can upload as an artifact.
 
   PYTHONPATH=src python -m benchmarks.trend_report \
@@ -82,7 +86,8 @@ def collect_cells(baseline: dict, current_rows: List[dict],
             mean, lo, hi = _ci_of(row, "t_avg_s", "ci")
             cell.update(verdict=verdict, reason=reason, mean=mean,
                         ci_lo=lo, ci_hi=hi,
-                        roof=worst_roofline(row) or worst_roofline(base))
+                        roof=worst_roofline(row) or worst_roofline(base),
+                        variance=row.get("variance"))
         cells.append(cell)
 
     mt_cur: Dict = {}
@@ -100,7 +105,7 @@ def collect_cells(baseline: dict, current_rows: List[dict],
         cell = {"family": "multitenant",
                 "cell": (f"clients={key[0]} max_batch={key[1]} "
                          f"delay={key[2]:g}ms in_flight={key[3]} "
-                         f"profile={key[4]}")}
+                         f"profile={key[4]} drain={key[5]}")}
         if row is None:
             cell.update(verdict="missing", reason="no current row",
                         mean=None, ci_lo=None, ci_hi=None, roof=None)
@@ -116,9 +121,25 @@ def collect_cells(baseline: dict, current_rows: List[dict],
                 verdict, reason = "FAIL", str(e)
             mean, lo, hi = _ci_of(row, "acq_per_s", "acq_per_s_ci")
             cell.update(verdict=verdict, reason=reason, mean=mean,
-                        ci_lo=lo, ci_hi=hi, roof=None)
+                        ci_lo=lo, ci_hi=hi, roof=None,
+                        transfer_frac=row.get("transfer_frac"))
         cells.append(cell)
     return cells
+
+
+def _diag(cell: dict) -> str:
+    """The cell's host-cost diagnostic: transfer share for multitenant
+    rows (how much wall the staging/H2D/D2H copies cost), the
+    variance-decomposition split for summary rows that carry one (is
+    the noise between-run — more --repeats — or within-run)."""
+    xfer = cell.get("transfer_frac")
+    if xfer is not None:
+        return f"xfer {100 * xfer:.0f}%"
+    var = cell.get("variance")
+    if var:
+        return (f"between-run {100 * var['between_share']:.0f}% / "
+                f"within {100 * var['within_share']:.0f}%")
+    return "—"
 
 
 def append_history(path: str, cells: List[dict], *, ts: float,
@@ -213,6 +234,7 @@ def render_html(cells: List[dict], history: List[dict], *,
             f"<td class='mono'>{html.escape(_fmt(cell))}</td>"
             f"<td>{badge}</td>"
             f"<td class='mono'>{roof_txt}</td>"
+            f"<td class='mono'>{html.escape(_diag(cell))}</td>"
             f"<td class='reason'>{html.escape(cell['reason'])}</td>"
             "</tr>")
 
@@ -241,7 +263,8 @@ bootstrap CI band (latest dot colored by verdict; time-like cells
 trend down-is-good, throughput cells up-is-good)</p>
 <table>
 <tr><th>cell</th><th>trend</th><th>latest mean [CI]</th>
-<th>verdict</th><th>worst-stage roof</th><th>gate reason</th></tr>
+<th>verdict</th><th>worst-stage roof</th>
+<th>transfer / noise split</th><th>gate reason</th></tr>
 {''.join(rows)}
 </table></body></html>
 """
@@ -254,8 +277,9 @@ def main() -> int:
     ap.add_argument("--baseline", default="BENCH_cpu.json")
     ap.add_argument("--current", action="append", default=None,
                     help="benchmarks.run --json artifact (repeatable)")
-    ap.add_argument("--multitenant", default=None,
-                    help="benchmarks.multitenant --ndjson artifact")
+    ap.add_argument("--multitenant", action="append", default=None,
+                    help="benchmarks.multitenant --ndjson artifact "
+                         "(repeatable)")
     ap.add_argument("--history", default="TREND_history.ndjson",
                     help="NDJSON trend history (appended; restore it "
                          "across CI runs to accumulate the trend)")
@@ -273,12 +297,12 @@ def main() -> int:
         with open(path) as f:
             current_rows += json.load(f)["results"]
     mt_current: List[dict] = []
-    if args.multitenant:
-        with open(args.multitenant) as f:
-            mt_current = [json.loads(line) for line in f
-                          if line.strip()]
-        mt_current = [r for r in mt_current
-                      if r.get("kind") == "multitenant"]
+    for path in args.multitenant or []:
+        with open(path) as f:
+            mt_current += [json.loads(line) for line in f
+                           if line.strip()]
+    mt_current = [r for r in mt_current
+                  if r.get("kind") == "multitenant"]
 
     ts = time.time()
     label = args.label or time.strftime("%Y-%m-%dT%H:%M:%SZ",
@@ -291,6 +315,16 @@ def main() -> int:
         f.write(page)
     print(f"{args.out}: {len(cells)} cells, "
           f"{len(history)} history records")
+    for row in current_rows:
+        var = row.get("variance")
+        if var:
+            print(f"variance {row.get('name', '?')}: "
+                  f"between-run {100 * var['between_share']:.0f}% / "
+                  f"within-run {100 * var['within_share']:.0f}% "
+                  f"(n_runs={var['n_runs']}, "
+                  f"mean_iters={var['mean_iters']:g}) — "
+                  f"{'more --repeats' if var['between_share'] >= 0.5 else 'longer runs'}"
+                  f" reduce this cell's noise fastest")
     return 0
 
 

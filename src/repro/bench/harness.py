@@ -251,6 +251,16 @@ class BenchResult:
     # calibrated machine peaks, so the gated number carries its
     # "% of attainable" context.
     roofline: Optional[dict] = None
+    # Variance decomposition over the per-repeat sample lists
+    # (repro.bench.stats VarianceDecomposition.json_dict): within- vs
+    # between-run share of the run-mean variance — the diagnostic that
+    # sizes --repeats per backend. Stamped when repeats > 1.
+    variance: Optional[dict] = None
+    # Host-transfer telemetry stamp ({stage_copy_s, h2d_s, d2h_s,
+    # transfer_frac}; schema TRANSFER_KEYS) for rows whose producer
+    # measured the host edge — serving rows carry the keys flat, a
+    # summary producer may attach this block.
+    transfer: Optional[dict] = None
 
     def csv(self) -> str:
         """Legacy one-line CSV — format frozen (paper-table parsers)."""
@@ -277,6 +287,10 @@ class BenchResult:
             d["ci"] = self.ci
         if self.roofline is not None:
             d["roofline"] = self.roofline
+        if self.variance is not None:
+            d["variance"] = self.variance
+        if self.transfer is not None:
+            d["transfer"] = self.transfer
         if self.stats is not None:
             d["latency"] = self.stats.json_dict()
         if self.stage_breakdown:
@@ -384,7 +398,7 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
     incremental energy, None where unsupported).
     """
     from repro.bench.resources import ResourceMeter, devices_of
-    from repro.bench.stats import bootstrap_ci
+    from repro.bench.stats import bootstrap_ci, variance_decomposition
 
     assert repeats >= 1, repeats
     fn_j = jitted if jitted is not None else jax.jit(fn)
@@ -418,13 +432,18 @@ def bench_callable(name: str, fn: Callable, args: tuple, *,
         pass
 
     e_run = (CHIP_TDP_W - CHIP_IDLE_W) * utilization * t_avg
+    # Within/between-run noise split: only claimable from > 1 repeat
+    # (a single window has no between-run axis to decompose).
+    variance = (variance_decomposition(run_samples).json_dict()
+                if repeats > 1 else None)
     return BenchResult(
         name=name, t_avg_s=t_avg, fps=1.0 / t_avg,
         mbps=input_bytes / (t_avg * 1e6),
         joules_per_run_model=e_run, peak_mem_gb=peak, runs=runs,
         samples_s=samples, stats=latency_stats(samples, deadline_s),
         ci=ci.json_dict(), run_samples_s=run_samples,
-        plan=plan, resources=resources.json_dict())
+        plan=plan, resources=resources.json_dict(),
+        variance=variance)
 
 
 def bench_stages(cfg, rf, *, warmup: int = 1,

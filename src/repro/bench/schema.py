@@ -110,6 +110,23 @@ INFLIGHT_KEYS: Dict[str, str] = {
     "p50_depth": "real", "max_depth": "int", "full_rate": "real",
 }
 
+# Host-transfer telemetry block (optional on summary records; the
+# multitenant keys are required flat — see RECORD_KEYS). All three
+# components are host-thread-sequential slices of the wall, so
+# transfer_frac is a true fraction.
+TRANSFER_KEYS: Dict[str, str] = {
+    "stage_copy_s": "real", "h2d_s": "real", "d2h_s": "real",
+    "transfer_frac": "real",
+}
+
+# VarianceDecomposition.json_dict (repro.bench.stats): within- vs
+# between-run share of the run-mean variance — sizes --repeats.
+VARIANCE_KEYS: Dict[str, str] = {
+    "n_runs": "int", "mean_iters": "real", "within_var": "real",
+    "between_var": "real", "within_share": "real",
+    "between_share": "real",
+}
+
 # Per-stream block inside a multitenant record (one per client).
 # `latency` / `queue_delay` are null exactly when the stream served
 # zero frames (fully dropped by a churn disconnect); `dropped` counts
@@ -154,7 +171,15 @@ RECORD_KEYS: Dict[str, Dict[str, str]] = {
         "sustained_mbps": "real", "fps": "real", "acq_per_s": "real",
         "acq_per_s_ci": "dict", "deadline_miss_rate": "real",
         "device_busy_s": "real", "device_busy_frac": "real",
-        "overlap_frac": "real", "latency": "dict",
+        "overlap_frac": "real",
+        # Overlap-column intervals (degenerate without --repeats) so
+        # the gate can apply CI-exclusion beyond acq_per_s.
+        "device_busy_frac_ci": "dict", "overlap_frac_ci": "dict",
+        # Host-transfer telemetry + the drain mode that produced it
+        # ("async" = copy_to_host_async at retirement detection,
+        # "block" = synchronous D2H — part of the gate cell identity).
+        "drain": "str", **TRANSFER_KEYS,
+        "latency": "dict",
         "queue_delay": "dict", "occupancy": "dict",
         "in_flight_occupancy": "dict",
         "per_stream": "dict", "groups": "dict", "resources": "dict",
@@ -258,6 +283,21 @@ def validate_record(rec: dict, path: str = "record") -> str:
         _check_ci(rec["ci"], f"{path}.ci")
     if "roofline" in rec and rec["roofline"] is not None:
         _check_roofline(rec["roofline"], f"{path}.roofline")
+    if "transfer" in rec and rec["transfer"] is not None:
+        _check(rec["transfer"], TRANSFER_KEYS, f"{path}.transfer")
+        tf = rec["transfer"]["transfer_frac"]
+        if not 0.0 <= tf <= 1.0:
+            raise SchemaError(
+                f"{path}.transfer.transfer_frac: expected a fraction "
+                f"in [0, 1], got {tf!r}")
+    if "variance" in rec and rec["variance"] is not None:
+        _check(rec["variance"], VARIANCE_KEYS, f"{path}.variance")
+        for share in ("within_share", "between_share"):
+            v = rec["variance"][share]
+            if not 0.0 <= v <= 1.0:
+                raise SchemaError(
+                    f"{path}.variance.{share}: expected a fraction in "
+                    f"[0, 1], got {v!r}")
     if kind == "stage":
         _check_latency(rec, path)
     elif "latency" in rec and rec["latency"] is not None:
@@ -270,15 +310,23 @@ def validate_record(rec: dict, path: str = "record") -> str:
     if kind == "multitenant":
         _check(rec["policy"], MT_POLICY_KEYS, f"{path}.policy")
         _check_ci(rec["acq_per_s_ci"], f"{path}.acq_per_s_ci")
+        _check_ci(rec["device_busy_frac_ci"],
+                  f"{path}.device_busy_frac_ci")
+        _check_ci(rec["overlap_frac_ci"], f"{path}.overlap_frac_ci")
         _check(rec["in_flight_occupancy"], INFLIGHT_KEYS,
                f"{path}.in_flight_occupancy")
+        if rec["drain"] not in ("async", "block"):
+            raise SchemaError(
+                f"{path}.drain: expected 'async' or 'block', "
+                f"got {rec['drain']!r}")
         sha = rec["trace_sha256"]
         if len(sha) != 64 or any(c not in "0123456789abcdef"
                                  for c in sha):
             raise SchemaError(
                 f"{path}.trace_sha256: expected 64 lowercase hex chars "
                 f"(a repro-trace-v1 provenance hash), got {sha!r}")
-        for frac in ("device_busy_frac", "overlap_frac"):
+        for frac in ("device_busy_frac", "overlap_frac",
+                     "transfer_frac"):
             if not 0.0 <= rec[frac] <= 1.0:
                 raise SchemaError(
                     f"{path}.{frac}: expected a fraction in [0, 1], "

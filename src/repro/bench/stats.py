@@ -29,6 +29,11 @@ Public API
                   beyond the factor whose interval still straddles it is
                   runner noise, not a regression; an interval entirely
                   beyond it is a regression no rerun will undo.
+`variance_decomposition` — within-run vs between-run share of the
+                  run-mean variance (one-way random effects), the
+                  diagnostic that sizes ``--repeats`` per backend:
+                  between-run noise only averages out with more RUNS,
+                  within-run noise with more iterations.
 
 Degenerate inputs are first-class: one run yields a zero-width interval
 (`ci_lo == mean == ci_hi`), which makes `gate_ratio` collapse to the
@@ -228,6 +233,69 @@ def gate_ratio(baseline: Runs, current: Runs, *, factor: float,
                   f" allowed factor {factor:g}")
     return GateDecision(ok=ok, ratio=r, factor=factor,
                         higher_is_better=higher_is_better, reason=reason)
+
+
+@dataclasses.dataclass
+class VarianceDecomposition:
+    """Where the run-mean variance comes from: within or between runs.
+
+    One-way random-effects decomposition over repeated benchmark runs
+    (K&J §3: iterations within a run share warm caches and frequency
+    state, runs are the independent unit). ``within_var`` is the mean
+    per-run iteration variance (S² within); ``between_var`` is the
+    method-of-moments estimate of the *true* run-to-run variance after
+    the within-run sampling noise is subtracted (clamped at zero).
+    ``between_share`` is the fraction of the observed run-mean variance
+    that more iterations per run can never remove — when it dominates,
+    size ``--repeats`` up; when ``within_share`` dominates, longer runs
+    beat more runs.
+    """
+
+    n_runs: int
+    mean_iters: float            # mean iterations per run
+    within_var: float            # S²_within — mean per-run variance
+    between_var: float           # σ²_between — excess run-to-run variance
+    within_share: float          # share of run-mean variance
+    between_share: float
+
+    def json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def variance_decomposition(run_samples: Sequence[Sequence[float]]
+                           ) -> VarianceDecomposition:
+    """Decompose run-mean variance into within/between-run components.
+
+    Input is the nested level-two data (per-run iteration samples, the
+    same shape `bootstrap_ci` accepts nested). The observed variance of
+    the run means is ``σ²_between + S²_within / n̄``; both shares are
+    reported against that total. Degenerate inputs — one run, or
+    single-iteration runs, or zero total variance — yield 0.0 shares
+    rather than NaNs: no decomposition is claimable from them.
+    """
+    if len(run_samples) == 0:
+        raise ValueError("need at least one run")
+    runs = [np.asarray(r, dtype=np.float64) for r in run_samples]
+    if any(r.ndim != 1 or r.size == 0 for r in runs):
+        raise ValueError("each run must be a non-empty 1-D sample list")
+    n_runs = len(runs)
+    mean_iters = float(np.mean([r.size for r in runs]))
+    within = float(np.mean([r.var(ddof=1) if r.size > 1 else 0.0
+                            for r in runs]))
+    means = np.asarray([r.mean() for r in runs])
+    obs = float(means.var(ddof=1)) if n_runs > 1 else 0.0
+    sampling = within / mean_iters if mean_iters > 0 else 0.0
+    between = max(0.0, obs - sampling)
+    total = between + sampling
+    if n_runs < 2 or total <= 0.0:
+        w_share = b_share = 0.0
+    else:
+        b_share = between / total
+        w_share = sampling / total
+    return VarianceDecomposition(
+        n_runs=n_runs, mean_iters=mean_iters, within_var=within,
+        between_var=between, within_share=w_share,
+        between_share=b_share)
 
 
 def ci_json(ci: Optional[CIStats]) -> Optional[dict]:

@@ -33,16 +33,17 @@ Three pieces:
   * `warm_pool(specs, ...)` — the serving front door: one warm
     executor per distinct plan-resolved config group of a stream set,
     keyed exactly like the scheduler groups
-    (canonical config hash, pad_to, n_devices), so
+    (canonical config hash, pad_to, n_devices, donate), so
     `serve_multitenant` and `benchmarks/multitenant.py` can build the
     pool once and start every window — every sweep cell — warm.
 
 Keying: programs are keyed by the *plan geometry* — the canonical hash
 of the plan-concretized config (every field that reaches the compiled
 program: geometry, modality, resolved variant, lowerings, fusion,
-precision) plus the padded batch shape and the device count. Two specs
-that the scheduler would coalesce share one pool entry; two that it
-would not can never collide.
+precision) plus the padded batch shape, the device count, and the
+resolved input-donation signature (donate_argnums is baked into the
+compiled executable). Two specs that the scheduler would coalesce
+share one pool entry; two that it would not can never collide.
 
 Invariants (tests/test_aot.py): an AOT-warmed executor's outputs are
 bit-identical to the un-warmed jit path; ``compile_s > 0`` and is
@@ -186,16 +187,22 @@ class WarmEntry:
     program: AotProgram
 
 
-PoolKey = Tuple[str, int, int]       # (config hash, pad_to, n_devices)
+# (config hash, pad_to, n_devices, donate). Donation is part of the
+# COMPILED program — donate_argnums changes the executable's aliasing
+# contract — so a warm executor is only cache-valid for callers that
+# resolved the same donation signature.
+PoolKey = Tuple[str, int, int, bool]
 
 
 class WarmPool:
     """Plan-geometry-keyed pool of AOT-warmed serve executors.
 
     Keys are ``(canonical config hash of the plan-concretized config,
-    pad_to, n_devices)`` — exactly the scheduler's grouping plus the
-    compiled shape, so a pool built once serves every window (every
-    sweep cell) that would have built the same executors.
+    pad_to, n_devices, donate)`` — exactly the scheduler's grouping
+    plus the compiled shape and donation signature, so a pool built
+    once serves every window (every sweep cell) that would have built
+    the same executors, and a donating window can never be handed a
+    non-donating executable (or vice versa).
     """
 
     def __init__(self):
@@ -224,17 +231,21 @@ class WarmPool:
 
 def warm_pool(specs: Sequence, *, max_batch: int, devices=None,
               plan_policy: Optional[str] = None,
-              pool: Optional[WarmPool] = None) -> WarmPool:
+              pool: Optional[WarmPool] = None,
+              donate: Optional[bool] = None) -> WarmPool:
     """One AOT-warmed executor per distinct config group of ``specs``.
 
     ``specs`` are `repro.launch.scheduler.StreamSpec`s (anything with a
     ``.cfg``); grouping matches `serve_multitenant` exactly — the
     plan-resolved canonical hash — at the padded dispatch shape
-    ``max_batch`` over ``devices``. Pass an existing ``pool`` to extend
-    it incrementally (already-warm groups are not recompiled), e.g.
-    across the cells of a benchmark sweep.
+    ``max_batch`` over ``devices`` with the donation signature
+    ``donate`` (None resolves through the plan / backend default,
+    exactly as the executors themselves do). Pass an existing ``pool``
+    to extend it incrementally (already-warm groups are not
+    recompiled), e.g. across the cells of a benchmark sweep.
     """
-    from repro.core.executor import BatchedExecutor, ShardedExecutor
+    from repro.core.executor import (BatchedExecutor, ShardedExecutor,
+                                     _resolve_donate)
     from repro.core.pipeline import _resolve_plan
 
     if max_batch < 1:
@@ -249,11 +260,13 @@ def warm_pool(specs: Sequence, *, max_batch: int, devices=None,
     for spec in specs:
         plan = _resolve_plan(spec.cfg, None, plan_policy)
         key = (plan.concretize(spec.cfg).canonical_hash(), max_batch,
-               n_devices)
+               n_devices, _resolve_donate(donate, plan))
         if key in pool:
             continue
-        engine = (ShardedExecutor(spec.cfg, devices=devices, plan=plan)
-                  if sharded else BatchedExecutor(spec.cfg, plan=plan))
+        engine = (ShardedExecutor(spec.cfg, devices=devices, plan=plan,
+                                  donate=donate)
+                  if sharded else BatchedExecutor(spec.cfg, plan=plan,
+                                                  donate=donate))
         program = aot_warm(engine, max_batch)
         pool.put(key, WarmEntry(engine=engine, program=program))
     return pool

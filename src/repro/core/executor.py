@@ -13,18 +13,23 @@ Public API
     logical "batch" sharding name, so under an active mesh binding
     (runtime/sharding.py) it composes with the LM half's meshes.
 
-Both executors expose three dispatch granularities for the serving tier:
+Both executors expose the serving tier's dispatch granularities:
 ``__call__`` (synchronous semantics, caller blocks when it reads),
 ``call_padded`` (fixed-shape ragged dispatch, valid rows sliced off —
-the one-batch-at-a-time scheduler entry), and ``dispatch_padded`` (the
+the one-batch-at-a-time scheduler entry), ``dispatch_padded`` (the
 ASYNC form of call_padded: returns the *padded, unsynchronized* device
 array immediately so the host keeps coalescing and launching while the
 device executes — the caller slices valid rows after it drains; see
-repro.launch.scheduler's in-flight ring). Donation stays safe across
-all three: every dispatch consumes a freshly-built padded batch buffer,
-never a caller-retained array. `install_aot` (fed by repro.core.aot)
-pins an ahead-of-time-compiled executable for one padded shape; the
-padded entry points prefer it over re-entering jit.
+repro.launch.scheduler's in-flight ring), and the zero-copy staged
+pair ``place`` + ``dispatch_staged`` (the batch was already padded
+into a `repro.core.staging.StagingRing` slot: `place` is the timed H2D
+commit, `dispatch_staged` is launch-only — `dispatch_padded` is now
+exactly ``dispatch_staged(place(_pad_rows(...)))``). Donation stays
+safe across all of them: every dispatch consumes a freshly-placed
+device batch, never a caller-retained device array (host ring slots
+are reused, their device copies are not). `install_aot` (fed by
+repro.core.aot) pins an ahead-of-time-compiled executable for one
+padded shape; the padded entry points prefer it over re-entering jit.
 `ShardedExecutor`  — the same contract, data-parallel over an explicit
     1-D ``jax.sharding.Mesh`` of local devices ("data" axis): consts are
     replicated, the acquisition batch axis is split via `NamedSharding`,
@@ -161,6 +166,29 @@ class BatchedExecutor:
         never a live first-dispatch compilation)."""
         self._aot[pad_to] = compiled
 
+    def place(self, rf_batch) -> jnp.ndarray:
+        """H2D: commit an already-padded host batch to the device.
+
+        The staging-ring entry (repro.core.staging): the buffer is a
+        ring slot the caller keeps reusing, so this ALWAYS produces a
+        fresh device array — the host slot is free to be rewritten
+        once the in-flight bound says its dispatch settled, and the
+        device array is safe to donate into the compiled program.
+        """
+        return jnp.asarray(rf_batch)
+
+    def dispatch_staged(self, dev_batch, pad_to: int) -> jnp.ndarray:
+        """Async dispatch of an already-placed ``(pad_to, ...)`` batch.
+
+        The zero-copy serving entry: the batch was padded by a staging
+        ring and moved by `place`, so this is launch-only — through the
+        AOT executable when one is installed. With donation enabled the
+        compiled program consumes ``dev_batch``; callers must not
+        reuse the device array (the host ring slot stays theirs).
+        """
+        fn = self._aot.get(pad_to, self._fn)
+        return fn(self.consts, dev_batch)
+
     def dispatch_padded(self, rf_batch, pad_to: int) -> jnp.ndarray:
         """Async fixed-shape dispatch: the PADDED, UNSYNCED output.
 
@@ -173,8 +201,7 @@ class BatchedExecutor:
         the caller still holds.
         """
         rf_batch, _ = _pad_rows(rf_batch, pad_to)
-        fn = self._aot.get(pad_to, self._fn)
-        return fn(self.consts, jnp.asarray(rf_batch))
+        return self.dispatch_staged(self.place(rf_batch), pad_to)
 
     def call_padded(self, rf_batch: jnp.ndarray,
                     pad_to: int) -> jnp.ndarray:
@@ -304,24 +331,42 @@ class ShardedExecutor:
         (built by `repro.core.aot.aot_warm`)."""
         self._aot[pad_to] = compiled
 
+    def place(self, rf_batch) -> jnp.ndarray:
+        """H2D: commit an already-padded host batch to the mesh.
+
+        Sharded counterpart of `BatchedExecutor.place`: the batch is
+        committed to the batch sharding explicitly so the AOT
+        executable — which, unlike jit, does not re-resolve placements
+        — always sees its compiled-for layout. Always a fresh device
+        array, so the staging-ring slot stays the caller's and the
+        device copy is safe to donate.
+        """
+        return jax.device_put(jnp.asarray(rf_batch),
+                              self._batch_sharding)
+
+    def dispatch_staged(self, dev_batch, pad_to: int) -> jnp.ndarray:
+        """Async dispatch of an already-placed ``(pad_to, ...)`` batch
+        (`place` committed it to the mesh; ``pad_to`` must be a device
+        multiple — one SPMD shape per mesh)."""
+        if pad_to % self.n_devices:
+            raise ValueError(
+                f"dispatch_staged needs pad_to % n_devices == 0 "
+                f"(got pad_to={pad_to}, n_devices={self.n_devices})")
+        fn = self._aot.get(pad_to, self._fn)
+        return fn(self.consts, dev_batch)
+
     def dispatch_padded(self, rf_batch, pad_to: int) -> jnp.ndarray:
         """Async fixed-shape dispatch: the PADDED, UNSYNCED device array.
 
         Sharded counterpart of `BatchedExecutor.dispatch_padded`:
         ``pad_to`` must be a device multiple (one SPMD shape per mesh).
-        The padded batch is committed to the batch sharding explicitly
-        so the AOT executable — which, unlike jit, does not re-resolve
-        placements — always sees its compiled-for layout.
         """
         if pad_to % self.n_devices:
             raise ValueError(
                 f"dispatch_padded needs pad_to % n_devices == 0 "
                 f"(got pad_to={pad_to}, n_devices={self.n_devices})")
         rf_batch, _ = _pad_rows(rf_batch, pad_to)
-        rf_batch = jax.device_put(jnp.asarray(rf_batch),
-                                  self._batch_sharding)
-        fn = self._aot.get(pad_to, self._fn)
-        return fn(self.consts, rf_batch)
+        return self.dispatch_staged(self.place(rf_batch), pad_to)
 
     def call_padded(self, rf_batch: jnp.ndarray,
                     pad_to: int) -> jnp.ndarray:

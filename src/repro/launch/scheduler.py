@@ -52,6 +52,19 @@ depth. Every group's padded program is compiled AHEAD of the window
 compilation cache), and the cost is measured and stamped
 (``warmup_s``), never silently excluded.
 
+The HOST TRANSFER path is zero-copy and (by default) asynchronous:
+each group coalesces admitted frames straight into a preallocated
+`repro.core.staging.StagingRing` slot (no stack, no pad concatenate —
+the pad region was zeroed once at construction), the slot is committed
+H2D through the executor's timed ``place`` and launched with
+``dispatch_staged`` (optionally donating the device buffer —
+``donate``), and retirements start their D2H with
+``copy_to_host_async()`` the moment compute is detected settled, so
+the admit loop never blocks on a transfer (``drain="async"``;
+``drain="block"`` keeps the synchronous control path the benchmarks
+gate against). The costs are stamped per window: ``stage_copy_s``,
+``h2d_s``, ``d2h_s``, ``transfer_frac``.
+
 Telemetry per window (stamped into the established NDJSON records by
 `benchmarks/multitenant.py`): per-frame queue delay (dispatch − arrival)
 and completion latency (done − arrival) distributions, aggregate and
@@ -86,6 +99,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -94,6 +108,7 @@ import numpy as np
 import jax
 
 from repro.core.config import UltrasoundConfig
+from repro.core.staging import StagingRing
 from repro.data.traces import (ArrivalProcess, StreamTrace, Trace,
                                TraceArrival, mixed_phase, mixed_rate,
                                seed_space)
@@ -308,6 +323,7 @@ class _Group:
         self.n_pending = 0                # this group's batches in flight
         self.warm_source = "aot"          # "aot" | "pool"
         self.warmup_s = 0.0               # warm cost paid by THIS window
+        self.ring: Optional[StagingRing] = None   # built per window
 
 
 @dataclasses.dataclass
@@ -333,7 +349,7 @@ def _ready(out) -> bool:
 
 
 def _build_groups(specs: Sequence[StreamSpec], policy: BatchPolicy, *,
-                  devices, plan_policy, pool=None
+                  devices, plan_policy, pool=None, donate=None
                   ) -> Tuple[List["_Group"], List["_Group"]]:
     """Group specs by full config hash and build one executor each.
 
@@ -345,12 +361,16 @@ def _build_groups(specs: Sequence[StreamSpec], policy: BatchPolicy, *,
     an explicit one land in the same group when the planner agrees.
 
     A `repro.core.aot.WarmPool` supplies already-warm executors: a pool
-    hit (same hash, same padded shape, same device count) reuses the
-    pooled engine — AOT program installed, compilation already paid —
-    and the group is marked ``warm_source="pool"`` with zero warm cost
-    charged to this window.
+    hit (same hash, same padded shape, same device count, same resolved
+    donation signature) reuses the pooled engine — AOT program
+    installed, compilation already paid — and the group is marked
+    ``warm_source="pool"`` with zero warm cost charged to this window.
+    ``donate`` resolves exactly as the executor constructors resolve it
+    (arg > plan > backend default), so a lookup and the engine it would
+    otherwise build can never disagree on the donation signature.
     """
-    from repro.core.executor import BatchedExecutor, ShardedExecutor
+    from repro.core.executor import (BatchedExecutor, ShardedExecutor,
+                                     _resolve_donate)
     from repro.core.pipeline import _resolve_plan
 
     sharded = devices is not None and len(devices) > 1
@@ -369,16 +389,18 @@ def _build_groups(specs: Sequence[StreamSpec], policy: BatchPolicy, *,
         plan = _resolve_plan(spec.cfg, None, plan_policy)
         key = plan.concretize(spec.cfg).canonical_hash()
         if key not in groups:
-            entry = (pool.get((key, policy.max_batch, n_devices))
+            entry = (pool.get((key, policy.max_batch, n_devices,
+                               _resolve_donate(donate, plan)))
                      if pool is not None else None)
             if entry is not None:
                 g = _Group(key, entry.engine.cfg, entry.engine)
                 g.warm_source = "pool"
             else:
                 engine = (ShardedExecutor(spec.cfg, devices=devices,
-                                          plan=plan)
+                                          plan=plan, donate=donate)
                           if sharded
-                          else BatchedExecutor(spec.cfg, plan=plan))
+                          else BatchedExecutor(spec.cfg, plan=plan,
+                                               donate=donate))
                 g = _Group(key, engine.cfg, engine)
             groups[key] = g
         groups[key].stream_ids.append(spec.stream_id)
@@ -446,7 +468,41 @@ def _pick_group(groups: List[_Group], now: float,
     return best
 
 
-_POLL_S = 2e-4    # readiness-poll grain while dispatches are in flight
+_POLL_S = 2e-4       # base readiness-poll grain (REPRO_POLL_S overrides)
+_POLL_CAP_S = 5e-3   # adaptive-grain ceiling: completion-detection bound
+
+
+def _poll_base() -> float:
+    """The busy-poll base grain: ``REPRO_POLL_S`` env override or the
+    built-in default. Invalid / non-positive values fall back rather
+    than crash a serving window."""
+    env = os.environ.get("REPRO_POLL_S")
+    if env:
+        try:
+            v = float(env)
+            if v > 0:
+                return v
+        except ValueError:
+            pass
+    return _POLL_S
+
+
+def _poll_grain(now: float, horizon: Optional[float], *,
+                base: float, cap: float = _POLL_CAP_S) -> float:
+    """Adaptive busy-poll sleep while dispatches are in flight.
+
+    A fixed fine grain spins the host core the staging ring now shares
+    even when the next scheduling decision is provably far away (a
+    low-rate stream whose next arrival is milliseconds out). Instead
+    the grain stretches toward the `_idle_horizon` — there is nothing
+    to admit or flush before it — but never past ``cap``, which bounds
+    how late a completion can be detected, and never below ``base``,
+    the spin floor when work is imminent (horizon past due, or no
+    horizon at all while the final batches settle).
+    """
+    if horizon is None:
+        return base
+    return min(max(base, horizon - now), cap)
 
 
 def _idle_horizon(frames: List[_Frame], ai: int, groups: List[_Group],
@@ -475,7 +531,9 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
                       in_flight: int = 2,
                       devices=None, plan_policy: Optional[str] = None,
                       collect_outputs: bool = False,
-                      pool=None, load_profile: str = "steady") -> dict:
+                      pool=None, load_profile: str = "steady",
+                      drain: str = "async",
+                      donate: Optional[bool] = None) -> dict:
     """Serve N open-loop tenants through coalescing dynamic batching.
 
     Runs one serving window: every frame of every stream is admitted at
@@ -499,6 +557,33 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     Pass a `repro.core.aot.WarmPool` (built by
     `repro.core.aot.warm_pool`) to start warm: pool hits reuse the
     pooled executor and charge zero warm cost to this window.
+
+    HOST TRANSFER PATH (docs/serving.md#host-transfer-path): each
+    group coalesces straight into a preallocated `StagingRing` slot
+    (zero extra host copies — no stack, no pad concatenate), the slot
+    is committed H2D by the executor's ``place`` (timed: ``h2d_s``)
+    and launched via ``dispatch_staged``. Retirement is governed by
+    ``drain``:
+
+      * ``"async"`` (default) — when a batch's compute is detected
+        settled it leaves the in-flight ring immediately (the next
+        launch may proceed) and ``copy_to_host_async()`` starts its
+        D2H in the background; the images are harvested on a LATER
+        drain pass, so only the residual transfer tail is ever waited
+        on (``d2h_s``). Group-FIFO retirement order is preserved:
+        detection scans in launch order and skips a group whose older
+        batch is still pending, and harvests happen in detection
+        order.
+      * ``"block"`` — the pre-staging behavior: detection immediately
+        blocks on the compute and performs a synchronous D2H before
+        the loop continues. Kept as the control cell the benchmarks
+        gate the async win against.
+
+    ``donate`` opts the compiled programs into consuming their device
+    input buffer (donate_argnums; None = plan / backend default —
+    False on CPU where XLA cannot alias). Safe with the staging ring:
+    ``place`` always produces a fresh device array, the reused host
+    slot is never donated.
 
     ``devices``: a sequence of >= 2 local devices routes dispatch
     through `ShardedExecutor.dispatch_padded` (``max_batch`` must
@@ -532,6 +617,9 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
         raise ValueError("serve_multitenant needs at least one stream")
     if in_flight < 1:
         raise ValueError(f"in_flight must be >= 1 (got {in_flight})")
+    if drain not in ("async", "block"):
+        raise ValueError(f"drain must be 'async' or 'block' "
+                         f"(got {drain!r})")
     ids = [s.stream_id for s in streams]
     if len(set(ids)) != len(ids):
         raise ValueError(f"duplicate stream_id in {ids}")
@@ -539,7 +627,7 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     specs = list(streams)
     groups, group_of_stream = _build_groups(
         specs, policy, devices=devices, plan_policy=plan_policy,
-        pool=pool)
+        pool=pool, donate=donate)
     frames, dropped_per_stream = _make_frames(specs)
     if not frames:
         raise ValueError(
@@ -563,9 +651,19 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
         prog = aot_warm(g.engine, policy.max_batch)
         g.warmup_s = prog.warmup_s
         if pool is not None:
-            pool.put((g.key, policy.max_batch, n_devices),
+            pool.put((g.key, policy.max_batch, n_devices,
+                      g.engine.donate),
                      WarmEntry(engine=g.engine, program=prog))
     warmup_s = sum(g.warmup_s for g in groups)
+
+    # Staging rings: per group, in_flight+1 preallocated padded host
+    # buffers (the minimum that can never alias a slot the device is
+    # still reading — see repro.core.staging). Built per window so ring
+    # depth tracks this window's in_flight; pooled engines are shared,
+    # rings are not.
+    for g in groups:
+        g.ring = StagingRing(policy.max_batch, g.cfg.rf_shape,
+                             g.cfg.rf_dtype, depth=in_flight)
 
     outputs: Dict[str, dict] = {s.stream_id: {} for s in specs}
     delay_s = policy.max_queue_delay_ms / 1e3
@@ -574,13 +672,20 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     # clock runs whenever >= 1 dispatch is pending; sleeps taken while
     # it runs are subtracted to get the fraction of the wall the host
     # spent doing USEFUL work (admit/coalesce/launch/drain) concurrent
-    # with device execution.
+    # with device execution. ``landing`` holds batches whose COMPUTE is
+    # known settled (they no longer occupy the in-flight ring) but
+    # whose images are still crossing D2H (async drain) — transfer
+    # time, not device-busy time.
     pending: collections.deque = collections.deque()
+    landing: collections.deque = collections.deque()
     dispatch_order: List[List[List[object]]] = []   # [[stream_id, seq]]
     depth_samples: List[int] = []
     busy_since: Optional[float] = None
     device_busy_s = 0.0
     sleep_while_busy_s = 0.0
+    h2d_s = 0.0               # timed `place` (host buffer -> device)
+    d2h_s = 0.0               # residual wait for images to land on host
+    poll_base = _poll_base()
 
     meter.start()
     t0 = time.perf_counter()
@@ -588,7 +693,29 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     def clk() -> float:
         return time.perf_counter() - t0
 
-    def drain(block: bool) -> int:
+    def harvest(p: _Pending) -> int:
+        """Copy a settled batch's images to host; retire its frames.
+
+        Under the async drain the D2H was started at detection time,
+        so the ``np.asarray`` here pays only the residual transfer
+        tail — that residual is what ``d2h_s`` measures. ``t_done`` is
+        stamped once the images are ON THE HOST: completion latency
+        includes the transfer, exactly as the blocking drain counts it.
+        """
+        nonlocal d2h_s
+        t = time.perf_counter()
+        out = np.asarray(p.out)
+        d2h_s += time.perf_counter() - t
+        t_done = clk()
+        p.group.n_pending -= 1
+        p.group.occupancies.append(len(p.batch))
+        for i, f in enumerate(p.batch):
+            f.t_dispatch, f.t_done = p.t_dispatch, t_done
+            if collect_outputs:
+                outputs[specs[f.stream].stream_id][f.seq] = out[i]
+        return len(p.batch)
+
+    def drain_pending(block: bool) -> int:
         """Retire settled pendings, oldest-first per group.
 
         Scanning the ring in launch order and skipping any group whose
@@ -599,9 +726,18 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
         this is a latency-accounting discipline, not a correctness
         crutch). With ``block`` the oldest pending of each group is
         waited on (final flush).
+
+        Async mode splits retirement in two: detection frees the
+        in-flight slot and starts the D2H in the background; the
+        harvest (above) runs at the START of the next drain pass, so
+        the admit/launch work in between is the transfer's head start.
+        Harvests run in detection order — group-FIFO is preserved
+        end to end.
         """
         nonlocal busy_since, device_busy_s
         retired = 0
+        while landing:
+            retired += harvest(landing.popleft())
         seen: set = set()
         for p in list(pending):
             if id(p.group) in seen:
@@ -609,17 +745,18 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
             seen.add(id(p.group))
             if not (block or _ready(p.out)):
                 continue
-            out = np.asarray(jax.block_until_ready(p.out))
-            t_done = clk()
-            meter.sample()     # drain-time: overlapped batches are live
+            if block:
+                jax.block_until_ready(p.out)
+            meter.sample()     # detection: overlapped batches are live
             pending.remove(p)
-            p.group.n_pending -= 1
-            p.group.occupancies.append(len(p.batch))
-            for i, f in enumerate(p.batch):
-                f.t_dispatch, f.t_done = p.t_dispatch, t_done
-                if collect_outputs:
-                    outputs[specs[f.stream].stream_id][f.seq] = out[i]
-            retired += len(p.batch)
+            if drain == "block":
+                retired += harvest(p)
+            else:
+                try:
+                    p.out.copy_to_host_async()
+                except AttributeError:   # backend without async D2H
+                    pass
+                landing.append(p)
         if not pending and busy_since is not None:
             device_busy_s += clk() - busy_since
             busy_since = None
@@ -633,7 +770,7 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
             ai += 1
             group_of_stream[f.stream].queue.append(f)
 
-        done += drain(block=False)
+        done += drain_pending(block=False)
 
         if len(pending) < in_flight:
             g = _pick_group(groups, clk(), policy)
@@ -641,12 +778,17 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
                 batch = [g.queue.popleft()
                          for _ in range(min(len(g.queue),
                                             policy.max_batch))]
-                # Host numpy stack straight into dispatch_padded: the
-                # ragged->padded fill happens host-side (no per-occupancy
-                # XLA pad program — see executor._pad_rows).
+                # Zero-copy launch: coalesce straight into the group's
+                # staging-ring slot (pad rows pre-zeroed; ring depth
+                # covers the in-flight bound so the slot cannot alias a
+                # batch the device still reads), timed H2D commit, then
+                # launch-only dispatch.
                 t_dispatch = clk()
-                out = g.engine.dispatch_padded(
-                    np.stack([f.rf for f in batch]), policy.max_batch)
+                buf, _ = g.ring.stage([f.rf for f in batch])
+                t = time.perf_counter()
+                dev = g.engine.place(buf)
+                h2d_s += time.perf_counter() - t
+                out = g.engine.dispatch_staged(dev, policy.max_batch)
                 if busy_since is None:
                     busy_since = t_dispatch
                 pending.append(_Pending(group=g, batch=batch, out=out,
@@ -658,12 +800,27 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
                 depth_samples.append(len(pending))
                 continue          # keep launching while the ring has room
 
+        if landing:
+            # Nothing to admit or launch right now, but images are in
+            # flight D2H: finish them instead of sleeping on top of
+            # them, so frames retire no later than the blocking drain
+            # would have retired them.
+            done += drain_pending(block=False)
+            continue
+
         if pending:
-            # Device busy: poll readiness at fine grain. These sleeps
-            # happen UNDER the busy clock and are charged against the
-            # overlap fraction — host idle while device works.
-            time.sleep(_POLL_S)
-            sleep_while_busy_s += _POLL_S
+            # Device busy: poll readiness. The grain adapts — fine
+            # (``poll_base``) while the next scheduling decision is
+            # imminent, stretching toward the idle horizon (capped)
+            # when it is not, so low-rate streams stop spinning the
+            # core the staging ring shares. These sleeps happen UNDER
+            # the busy clock and are charged against the overlap
+            # fraction — host idle while device works.
+            dt = _poll_grain(clk(),
+                             _idle_horizon(frames, ai, groups, delay_s),
+                             base=poll_base)
+            time.sleep(dt)
+            sleep_while_busy_s += dt
             continue
 
         # Fully idle: sleep to the next arrival or the earliest
@@ -677,6 +834,7 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
 
     wall = clk()
     resources = meter.stop()
+    stage_copy_s = sum(g.ring.stage_copy_s for g in groups)
 
     # ---- telemetry ----------------------------------------------------
     def budget(spec):
@@ -726,10 +884,11 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
     stats = {
         "name": (f"multitenant/{len(specs)}streams/{len(groups)}groups"
                  f"/b{policy.max_batch}q{policy.max_queue_delay_ms:g}"
-                 f"if{in_flight}/{load_profile}"),
+                 f"if{in_flight}/{drain}/{load_profile}"),
         "clients": len(specs),
         "policy": policy.json_dict(),
         "in_flight": in_flight,
+        "drain": drain,
         "load_profile": load_profile,
         "trace_sha256": trace_sha256,
         "dropped": sum(dropped_per_stream),
@@ -752,6 +911,24 @@ def serve_multitenant(streams: Sequence[StreamSpec], *,
         "device_busy_frac": device_busy_s / wall,
         "overlap_frac": max(0.0, (device_busy_s - sleep_while_busy_s)
                             / wall),
+        # Degenerate one-window intervals, like acq_per_s_ci: the
+        # benchmark's --repeats replaces them with real bootstraps so
+        # the gate can apply CI-exclusion to the overlap columns too.
+        "device_busy_frac_ci": bootstrap_ci(
+            [device_busy_s / wall]).json_dict(),
+        "overlap_frac_ci": bootstrap_ci(
+            [max(0.0, (device_busy_s - sleep_while_busy_s) / wall)]
+        ).json_dict(),
+        # Host transfer telemetry: all three are host-thread-sequential
+        # slices of the wall, so the fraction is well-defined in [0,1].
+        # Under the async drain d2h_s is only the residual tail the
+        # harvest still had to wait on — the overlap win shows up as
+        # this number shrinking, not as transfers disappearing.
+        "stage_copy_s": stage_copy_s,
+        "h2d_s": h2d_s,
+        "d2h_s": d2h_s,
+        "transfer_frac": min(1.0, (stage_copy_s + h2d_s + d2h_s)
+                             / wall) if wall > 0 else 0.0,
         "latency": latency_stats(
             [f.t_done - f.t_arrival for f in frames]).json_dict(),
         "queue_delay": latency_stats(

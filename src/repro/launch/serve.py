@@ -43,8 +43,10 @@ through the dynamic-batching scheduler (`repro.launch.scheduler`):
 per-config queues, same-config-hash coalescing under a
 max_batch / max_queue_delay_ms policy, fixed padded dispatch shapes,
 AOT warm-start compilation (repro.core.aot), pipelined dispatch to
-``--in-flight`` depth, per-stream latency + queue-delay + occupancy +
-device-overlap telemetry. Design and knobs: docs/serving.md.
+``--in-flight`` depth, zero-copy staging rings with a ``--drain``
+retirement mode (async copy_to_host_async vs legacy blocking harvest),
+per-stream latency + queue-delay + occupancy + device-overlap +
+host-transfer telemetry. Design and knobs: docs/serving.md.
 
   PYTHONPATH=src python -m repro.launch.serve --ultrasound \
       --batch 4 --batches 32 --depth 2 --deadline-ms 50
@@ -445,6 +447,12 @@ def main() -> None:
     ap.add_argument("--in-flight", type=int, default=2,
                     help="multitenant: dispatch-pipelining depth (1 = "
                          "synchronous launch-block-retire)")
+    ap.add_argument("--drain", default="async",
+                    choices=["async", "block"],
+                    help="multitenant: host-transfer retirement mode "
+                         "(async = copy_to_host_async off the admit "
+                         "loop's critical path, block = legacy "
+                         "blocking harvest; bit-identical outputs)")
     args = ap.parse_args()
 
     if args.variant == "auto" and args.plan == "fixed":
@@ -484,7 +492,7 @@ def main() -> None:
         stats = serve_multitenant(
             streams,
             policy=BatchPolicy(args.max_batch, args.queue_delay_ms),
-            in_flight=args.in_flight,
+            in_flight=args.in_flight, drain=args.drain,
             devices=cli_devices(), plan_policy=args.plan)
         lat, qd = stats["latency"], stats["queue_delay"]
         occ = stats["occupancy"]
@@ -499,6 +507,11 @@ def main() -> None:
               f"mean_depth={ifo['mean_depth']:.2f} "
               f"device_busy={stats['device_busy_frac']:.2f} "
               f"overlap_frac={stats['overlap_frac']:.2f}")
+        print(f"transfer: drain={stats['drain']} "
+              f"stage_copy={stats['stage_copy_s'] * 1e3:.2f}ms "
+              f"h2d={stats['h2d_s'] * 1e3:.2f}ms "
+              f"d2h={stats['d2h_s'] * 1e3:.2f}ms "
+              f"transfer_frac={stats['transfer_frac']:.3f}")
         print(f"latency: p50={lat['p50_s'] * 1e3:.2f}ms "
               f"p95={lat['p95_s'] * 1e3:.2f}ms "
               f"p99={lat['p99_s'] * 1e3:.2f}ms; queue delay "

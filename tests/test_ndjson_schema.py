@@ -368,3 +368,69 @@ def test_numpy_scalars_do_not_sneak_past_json():
     line = json.dumps({"kind": "multitenant", **stats})
     assert validate_lines([line]) == {"multitenant": 1}
     assert not isinstance(json.loads(line)["fps"], np.ndarray)
+
+
+def test_multitenant_requires_transfer_and_drain_stamp(mt_records):
+    """The host-transfer telemetry is REQUIRED on multitenant rows: a
+    record without its drain mode, transfer seconds, or overlap CI
+    blocks could not be gated against the transfer baseline."""
+    import copy
+
+    base = mt_records[0]
+    assert base["drain"] in ("async", "block")
+    for key in ("stage_copy_s", "h2d_s", "d2h_s"):
+        assert base[key] >= 0.0
+    assert 0.0 <= base["transfer_frac"] <= 1.0
+    assert base["device_busy_frac_ci"]["n_runs"] >= 1
+    assert base["overlap_frac_ci"]["n_runs"] >= 1
+
+    for key in ("drain", "stage_copy_s", "h2d_s", "d2h_s",
+                "transfer_frac", "device_busy_frac_ci",
+                "overlap_frac_ci"):
+        rec = copy.deepcopy(base)
+        del rec[key]
+        with pytest.raises(SchemaError, match="missing required key"):
+            validate_record(rec)
+
+    rec = copy.deepcopy(base)
+    rec["drain"] = "sideways"
+    with pytest.raises(SchemaError, match="async.*block|drain"):
+        validate_record(rec)
+
+    rec = copy.deepcopy(base)
+    rec["transfer_frac"] = 1.5
+    with pytest.raises(SchemaError, match=r"fraction in \[0, 1\]"):
+        validate_record(rec)
+
+
+def test_optional_transfer_and_variance_blocks_validate():
+    """Any record kind may carry an optional 'transfer' or 'variance'
+    block; when present the blocks are checked, not waved through."""
+    good = {"kind": "sample", "name": "x", "run": 0, "t_s": 0.1,
+            "transfer": {"stage_copy_s": 0.01, "h2d_s": 0.02,
+                         "d2h_s": 0.005, "transfer_frac": 0.2},
+            "variance": {"n_runs": 3, "mean_iters": 10.0,
+                         "within_var": 1e-6, "between_var": 2e-6,
+                         "within_share": 0.3, "between_share": 0.7}}
+    assert validate_record(good) == "sample"
+
+    import copy
+    rec = copy.deepcopy(good)
+    del rec["transfer"]["h2d_s"]
+    with pytest.raises(SchemaError, match="missing required key"):
+        validate_record(rec)
+
+    rec = copy.deepcopy(good)
+    rec["transfer"]["transfer_frac"] = -0.1
+    with pytest.raises(SchemaError, match=r"fraction in \[0, 1\]"):
+        validate_record(rec)
+
+    rec = copy.deepcopy(good)
+    rec["variance"]["between_share"] = 1.2
+    with pytest.raises(SchemaError, match=r"fraction in \[0, 1\]"):
+        validate_record(rec)
+
+    rec = copy.deepcopy(good)
+    rec["variance"]["n_runs"] = "three"
+    with pytest.raises(SchemaError, match="int"):
+        validate_record(rec)

@@ -571,3 +571,63 @@ def test_sharded_multitenant_window(sharded_results):
     assert r["mt_occ_max"] <= 2
     assert r["mt_acqs"] == 5
     assert r["odd_max_batch_raised"] is True
+
+
+def test_drain_block_mode_bit_identical_and_validated():
+    """drain='block' keeps the legacy detect-block-harvest retirement:
+    same pixels, same schema stamps, only the transfer timing moves.
+    Invalid modes are refused before any work happens."""
+    cfg_b = tiny_config(variant=Variant.DYNAMIC)
+    cfg_d = tiny_config(modality=Modality.DOPPLER,
+                        variant=Variant.DYNAMIC)
+    streams = [
+        StreamSpec("b", cfg_b, fps=BURST, n_frames=5, seed=3, pool=5),
+        StreamSpec("d", cfg_d, fps=BURST, n_frames=4, seed=11, pool=4),
+    ]
+    policy = BatchPolicy(max_batch=3, max_queue_delay_ms=2.0)
+    blocked = serve_multitenant(streams, policy=policy, in_flight=2,
+                                drain="block", collect_outputs=True)
+    asynced = serve_multitenant(streams, policy=policy, in_flight=2,
+                                drain="async", collect_outputs=True)
+    assert blocked["drain"] == "block" and asynced["drain"] == "async"
+    assert blocked["name"].count("/block/") == 1
+    assert asynced["name"].count("/async/") == 1
+    for sid in ("b", "d"):
+        for a, b in zip(asynced["outputs"][sid], blocked["outputs"][sid]):
+            assert np.array_equal(a, b)    # drain mode never moves bits
+
+    with pytest.raises(ValueError, match="drain must be"):
+        serve_multitenant(streams, policy=policy, drain="sideways")
+
+
+def test_adaptive_poll_grain_bounded_by_horizon_and_cap():
+    """The busy-poll sleep stretches toward the next arrival horizon
+    but never past the completion-detection cap, never below the base
+    grain, and falls back to the base when no horizon exists."""
+    from repro.launch.scheduler import (_POLL_CAP_S, _POLL_S,
+                                        _poll_base, _poll_grain)
+
+    base = 2e-4
+    # No horizon (all arrivals admitted): base grain.
+    assert _poll_grain(1.0, None, base=base) == base
+    # Distant horizon: capped at the detection bound.
+    assert _poll_grain(1.0, 10.0, base=base) == _POLL_CAP_S
+    # Near horizon: sleep exactly to it.
+    assert _poll_grain(1.0, 1.0 + 1e-3, base=base) == pytest.approx(1e-3)
+    # Past/immediate horizon: never below the base grain.
+    assert _poll_grain(1.0, 0.5, base=base) == base
+    assert _POLL_S <= _POLL_CAP_S
+
+
+def test_poll_base_env_override(monkeypatch):
+    from repro.launch import scheduler
+
+    monkeypatch.delenv("REPRO_POLL_S", raising=False)
+    assert scheduler._poll_base() == scheduler._POLL_S
+    monkeypatch.setenv("REPRO_POLL_S", "0.002")
+    assert scheduler._poll_base() == pytest.approx(0.002)
+    # Invalid or non-positive overrides fall back, never crash.
+    monkeypatch.setenv("REPRO_POLL_S", "banana")
+    assert scheduler._poll_base() == scheduler._POLL_S
+    monkeypatch.setenv("REPRO_POLL_S", "-1")
+    assert scheduler._poll_base() == scheduler._POLL_S

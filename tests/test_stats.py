@@ -210,3 +210,71 @@ if HAVE_HYPOTHESIS:
         a = bootstrap_ci(runs, seed=seed)
         b = bootstrap_ci(runs, seed=seed)
         assert a.json_dict() == b.json_dict()
+
+
+# ---------------------------------------------------------------------------
+# Variance decomposition (within-run vs between-run noise)
+# ---------------------------------------------------------------------------
+
+from repro.bench.stats import (VarianceDecomposition,      # noqa: E402
+                               variance_decomposition)
+
+
+def test_variance_decomposition_between_dominated():
+    """Runs that are internally tight but far apart: the noise is
+    between-run — only more --repeats averages it out."""
+    vd = variance_decomposition([[1.00, 1.01, 0.99],
+                                 [2.00, 2.01, 1.99],
+                                 [3.00, 3.01, 2.99]])
+    assert vd.n_runs == 3 and vd.mean_iters == 3.0
+    assert vd.between_var > 0.0
+    assert vd.between_share > 0.95
+    assert abs(vd.within_share + vd.between_share - 1.0) < 1e-12
+
+
+def test_variance_decomposition_within_dominated():
+    """Runs whose means agree but whose iterations are noisy: the
+    observed run-mean variance is explained by within-run sampling —
+    longer runs beat more runs."""
+    rng = np.random.default_rng(0)
+    runs = [list(1.0 + 0.5 * rng.standard_normal(50)) for _ in range(4)]
+    vd = variance_decomposition(runs)
+    assert vd.within_var > 0.0
+    assert vd.within_share > 0.5
+    assert 0.0 <= vd.between_share <= 0.5
+
+
+def test_variance_decomposition_degenerate_inputs():
+    # One run: no between-run variance is claimable.
+    vd = variance_decomposition([[1.0, 2.0, 3.0]])
+    assert vd.n_runs == 1
+    assert vd.within_share == 0.0 and vd.between_share == 0.0
+    # Single-iteration runs: within variance undefined -> 0.0, the
+    # observed spread is all between.
+    vd = variance_decomposition([[1.0], [2.0], [3.0]])
+    assert vd.within_var == 0.0
+    assert vd.between_share == 1.0
+    # Identical constant runs: zero total variance, zero shares.
+    vd = variance_decomposition([[1.0, 1.0], [1.0, 1.0]])
+    assert vd.within_share == 0.0 and vd.between_share == 0.0
+    with pytest.raises(ValueError, match="at least one run"):
+        variance_decomposition([])
+    with pytest.raises(ValueError, match="non-empty 1-D"):
+        variance_decomposition([[1.0], []])
+
+
+def test_variance_decomposition_json_round_trip_matches_schema():
+    from repro.bench.schema import VARIANCE_KEYS
+    d = variance_decomposition([[1.0, 1.1], [1.2, 1.3]]).json_dict()
+    assert set(d) == set(VARIANCE_KEYS)
+    assert VarianceDecomposition(**d).json_dict() == d
+
+
+def test_variance_decomposition_between_never_negative():
+    """Method-of-moments subtraction is clamped: when sampling noise
+    exceeds the observed run-mean variance the between estimate is 0.0,
+    never negative."""
+    # Two runs with huge internal spread but nearly equal means.
+    vd = variance_decomposition([[0.0, 2.0], [0.01, 2.01]])
+    assert vd.between_var == 0.0
+    assert vd.between_share == 0.0 and vd.within_share == 1.0
